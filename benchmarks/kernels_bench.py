@@ -1,0 +1,112 @@
+"""Kernel-layer microbenchmarks (CPU-host: wall time for the portable jnp
+paths + host codec; the Pallas kernels are interpret-validated, their TPU
+performance is captured structurally in the §Roofline VMEM analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.dmd import StreamingDMD
+from repro.core.records import StreamRecord, encode, decode
+from repro.kernels import ref
+from repro.models.layers import flash_attention
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def bench_attention():
+    rng = np.random.RandomState(0)
+    B, S, H, D, Kh = 1, 1024, 8, 64, 2
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, Kh, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Kh, D), jnp.float32)
+    ke, ve = jnp.repeat(k, H // Kh, 2), jnp.repeat(v, H // Kh, 2)
+    naive = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                    chunk=256))
+    t_naive = _time(naive, q, ke, ve)
+    t_flash = _time(flash, q, k, v)
+    flops = 4 * B * S * S * H * D
+    return [("attention_naive_1k", t_naive, f"{flops/t_naive/1e3:.1f}GF/s"),
+            ("attention_flash_jnp_1k", t_flash, f"{flops/t_flash/1e3:.1f}GF/s")]
+
+
+def bench_gram():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(512, 256), jnp.float32)
+    g = jnp.zeros((256, 256), jnp.float32)
+    f = jax.jit(lambda x, g: ref.gram_ref(x, g))
+    t = _time(f, x, g)
+    flops = 2 * 512 * 256 * 256
+    return [("gram_update_512x256", t, f"{flops/t/1e3:.1f}GF/s")]
+
+
+def bench_codec():
+    rng = np.random.RandomState(0)
+    payload = rng.randn(4096).astype(np.float32)
+    rec = StreamRecord("f", 0, 0, 0, payload)
+    out = []
+    for comp in ("none", "zstd", "int8", "int8+zstd"):
+        blob = encode(rec, compress=comp)
+        t0 = time.time()
+        n = 200
+        for _ in range(n):
+            decode(encode(rec, compress=comp))
+        us = (time.time() - t0) / n * 1e6
+        out.append((f"record_codec_{comp}", us,
+                    f"{len(blob)}B/rec {4096*4/len(blob):.1f}x"))
+    return out
+
+
+def bench_ssd():
+    rng = np.random.RandomState(0)
+    from repro.models.mamba import ssd_chunked
+    B, S, H, P, N = 1, 512, 4, 16, 32
+    xh = jnp.asarray(rng.randn(B, S, H, P), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.randn(B, S, H), jnp.float32)) * 0.1
+    A = -jnp.abs(jnp.asarray(rng.randn(H), jnp.float32))
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    f = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    t = _time(f, xh, dt, A, Bm, Cm)
+    flops = 2 * B * S * 128 * (N + H * P)  # CB + masked matmul approx
+    return [("ssd_chunked_512", t, f"{flops/t/1e3:.1f}GF/s")]
+
+
+def bench_dmd():
+    rng = np.random.RandomState(0)
+    sd = StreamingDMD(n_features=128, window=16, rank=4)
+    for i in range(20):
+        sd.update(rng.randn(128).astype(np.float32))
+    t0 = time.time()
+    n = 20
+    for i in range(n):
+        sd.update(rng.randn(128).astype(np.float32))
+        sd.eigenvalues()
+    us = (time.time() - t0) / n * 1e6
+    return [("streaming_dmd_update+eigs_128", us, "per-snapshot")]
+
+
+def main(csv=True):
+    rows = []
+    for fn in (bench_attention, bench_gram, bench_ssd, bench_codec, bench_dmd):
+        rows.extend(fn())
+    if csv:
+        print("kernel,us_per_call,derived")
+        for name, us, d in rows:
+            print(f"{name},{us:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+SKIPPED_LONG = ["starcoder2-3b", "minitron-8b", "llama3-405b", "gemma3-12b",
+                "llama4-scout-17b-a16e", "arctic-480b", "musicgen-large",
+                "llama-3.2-vision-11b"]
+
+
+def load(tag: str | None = None):
+    rows = {}
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        r = json.load(open(f))
+        stem = Path(f).stem
+        parts = stem.split("__")
+        t = parts[3] if len(parts) > 3 else None
+        if t != tag:
+            continue
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile | HLO GFLOPs/chip | arg GB/chip | "
+           "collective GB/chip (AR/AG/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        h = r["hlo_analysis"]
+        c = h["collectives"]
+        cs = "/".join(f"{c.get(k, 0)/1e9:.1f}" for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(f"| {a} | {s} | {m} | {r['compile_s']:.0f}s "
+                   f"| {h['flops']/1e9:,.0f} "
+                   f"| {r['memory']['argument_bytes_per_device']/1e9:.2f} "
+                   f"| {cs} |")
+    for a in SKIPPED_LONG:
+        out.append(f"| {a} | long_500k | — | SKIP | — | — | full attention is "
+                   "O(S²) at 524k (DESIGN.md §5) |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, which="roofline_kernelized"):
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "bound | MODEL/HLO flops | roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(rows.items()):
+        rf = r[which]
+        out.append(
+            f"| {a} | {s} | {m} | {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['bound']} "
+            f"| {rf.get('useful_ratio', 0):.2f} "
+            f"| {100*rf.get('roofline_fraction', 0):.1f}% |")
+    return "\n".join(out)
+
+
+def perf_row(arch, tag):
+    f = ART / f"{arch}__train_4k__pod_16x16{'__' + tag if tag else ''}.json"
+    if not f.exists():
+        return None
+    r = json.load(open(f))
+    return r
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    tag = sys.argv[2] if len(sys.argv) > 2 else None
+    rows = load(tag)
+    if which in ("all", "dryrun"):
+        print("### Dry-run table (per-chip, post-SPMD)\n")
+        print(dryrun_table(rows))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (baseline accounting)\n")
+        print(roofline_table(rows, "roofline"))
+        print("\n### Roofline (TPU-adjusted: Pallas-fused + dtype-corrected)\n")
+        print(roofline_table(rows, "roofline_kernelized"))

@@ -1,0 +1,61 @@
+"""Re-run the HLO analyzer over saved dry-run artifacts (no recompilation).
+
+Analyzer improvements (fusion cost model, dtype corrections, kernel regions)
+apply retroactively to every cell's stored HLO; JSONs are rewritten in place
+with refreshed `hlo_analysis`, `roofline`, `roofline_kernelized`.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+import zstandard
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro import configs                              # noqa: E402
+from repro.launch import hlo_analysis as H             # noqa: E402
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def reanalyze(path: Path) -> dict | None:
+    js = json.loads(path.read_text())
+    hlo_path = path.with_suffix("").with_suffix("")  # strip .json
+    hlo_path = Path(str(path)[:-5] + ".hlo.zst")
+    if not hlo_path.exists():
+        return None
+    text = zstandard.ZstdDecompressor().decompress(
+        hlo_path.read_bytes()).decode()
+    analysis = H.analyze(text)
+    model_flops = js["roofline"].get("model_flops")
+    cfg = configs.get(js["arch"])
+    grad_f32 = js["kind"] == "train" and not cfg.opt_8bit
+    js["hlo_analysis"] = analysis
+    js["roofline"] = H.roofline_terms(analysis, model_flops)
+    js["roofline_kernelized"] = H.roofline_terms(
+        H.tpu_dtype_corrected(H.kernelized(analysis), grad_dtype_f32=grad_f32),
+        model_flops)
+    path.write_text(json.dumps(js, indent=1))
+    return js
+
+
+def main():
+    pat = sys.argv[1] if len(sys.argv) > 1 else "*"
+    n = 0
+    for f in sorted(glob.glob(str(ART / f"{pat}.json"))):
+        js = reanalyze(Path(f))
+        if js is None:
+            continue
+        n += 1
+        rb, rk = js["roofline"], js["roofline_kernelized"]
+        print(f"{Path(f).stem:56s} base={100*rb.get('roofline_fraction',0):5.1f}% "
+              f"adj={100*rk.get('roofline_fraction',0):5.1f}% "
+              f"bound={rk['bound']}", flush=True)
+    print(f"reanalyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

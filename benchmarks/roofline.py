@@ -1,0 +1,64 @@
+"""Roofline table generator — reads the dry-run artifacts and emits the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: the three terms,
+dominant bound, MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(mesh_filter: str | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        parts = Path(f).stem.split("__")
+        r["tag"] = parts[3] if len(parts) > 3 else "baseline"
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bound | useful | roofline |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['bound']} "
+            f"| {rf.get('useful_ratio', 0):.2f} "
+            f"| {100 * rf.get('roofline_fraction', 0):.2f}% |")
+    return "\n".join(out)
+
+
+def main(csv=True):
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found — run repro.launch.dryrun --all")
+        return []
+    if csv:
+        print("roofline_cell,compute_s,memory_s,collective_s,bound,useful,"
+              "roofline_frac,adj_roofline_frac")
+        for r in rows:
+            rf = r["roofline"]
+            rk = r.get("roofline_kernelized", rf)
+            print(f"{r['arch']}/{r['shape']}/{r['mesh']}/{r['tag']},"
+                  f"{rf['compute_s']:.5f},{rf['memory_s']:.5f},"
+                  f"{rf['collective_s']:.5f},{rf['bound']},"
+                  f"{rf.get('useful_ratio', 0):.3f},"
+                  f"{rf.get('roofline_fraction', 0):.4f},"
+                  f"{rk.get('roofline_fraction', 0):.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

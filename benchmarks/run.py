@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  fig6      end-to-end simulation time: file vs broker vs sim-only (Fig 6)
+  fig7      latency + aggregated throughput scaling (Fig 7a/7b)
+  kernels   kernel-layer microbenchmarks
+  roofline  the 40-cell dry-run roofline table (from artifacts)
+
+``python -m benchmarks.run [--only fig6,fig7,kernels,roofline]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="fig6,fig7,kernels,roofline")
+    args = p.parse_args()
+    want = set(args.only.split(","))
+    failures = 0
+
+    sections = []
+    if "fig6" in want:
+        from benchmarks import end_to_end
+        sections.append(("fig6_end_to_end", end_to_end.main))
+    if "fig7" in want:
+        from benchmarks import scaling
+        sections.append(("fig7_scaling", scaling.main))
+    if "kernels" in want:
+        from benchmarks import kernels_bench
+        sections.append(("kernels", kernels_bench.main))
+    if "roofline" in want:
+        from benchmarks import roofline
+        sections.append(("roofline", roofline.main))
+
+    for name, fn in sections:
+        print(f"\n# ==== {name} ====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    main()

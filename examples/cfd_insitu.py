@@ -1,0 +1,78 @@
+"""The paper's workflow, end to end: parallel CFD (WindAroundBuildings-like)
+-> ElasticBroker -> Cloud endpoints -> stream engine -> per-region DMD
+stability panel (paper Figs 4/5).
+
+    PYTHONPATH=src python examples/cfd_insitu.py
+"""
+import time
+
+import numpy as np
+
+from repro.analysis.dmd import StreamingDMD
+from repro.analysis.metrics import unit_circle_distance
+from repro.core.api import broker_connect, broker_init, broker_write
+from repro.core.broker import BrokerConfig
+from repro.core.grouping import GroupPlan
+from repro.sim.cfd import CFDConfig, buildings_mask, init_state, region_fields, step
+from repro.streaming.endpoint import make_endpoints
+from repro.streaming.engine import StreamEngine
+
+cfg = CFDConfig(nx=128, nz=64, n_regions=8, pressure_iters=50)
+N_FEAT = 256
+WRITE_INTERVAL = 5           # paper §4.2
+N_STEPS = 200
+
+# Cloud setup: 2 endpoints, 8 executors (8:2:8 ~ paper ratio scaled down)
+endpoints = make_endpoints(2)
+broker = broker_connect(endpoints, n_producers=cfg.n_regions,
+                        cfg=BrokerConfig(compress="int8+zstd"),
+                        plan=GroupPlan(cfg.n_regions, 2, 4))
+dmd = {}
+
+def analyze(key, records):
+    sd = dmd.setdefault(key, StreamingDMD(n_features=N_FEAT, window=16, rank=6))
+    for r in sorted(records, key=lambda r: r.step):
+        sd.update(r.payload.reshape(-1)[:N_FEAT])
+    return unit_circle_distance(sd.eigenvalues())
+
+engine = StreamEngine([e.handle for e in endpoints], analyze,
+                      n_executors=cfg.n_regions, trigger_interval=1.0)
+ctxs = [broker_init(f"velocity", r) for r in range(cfg.n_regions)]
+
+# visualize the scene
+mask = buildings_mask(cfg)
+print("WindAroundBuildings domain (# = building), flow ->")
+for row in mask[::-8][:8]:
+    print("  " + "".join("#" if c else "." for c in row[::2]))
+
+state = init_state(cfg)
+t0 = time.time()
+for s in range(N_STEPS):
+    state = step(state, cfg)
+    if s % WRITE_INTERVAL == 0:
+        for r, field in enumerate(region_fields(state, cfg)):
+            broker_write(ctxs[r], s, field[:N_FEAT])
+sim_t = time.time() - t0
+broker.flush()
+engine.drain_and_stop()
+e2e = max((r.t_analyzed for r in engine.collect()), default=t0) - t0
+
+print(f"\nsimulation: {N_STEPS} steps in {sim_t:.2f}s "
+      f"(broker overhead included); workflow end-to-end {e2e:.2f}s")
+print(f"broker: {broker.stats.sent} records sent, "
+      f"{broker.stats.dropped} dropped, "
+      f"{broker.stats.bytes_sent/1e6:.2f} MB on the wire")
+
+print("\nper-region flow stability (paper Fig 5; 0 = neutrally stable):")
+latest = {}
+for r in engine.collect():
+    if not isinstance(r.value, Exception):
+        latest[r.stream_key] = r.value
+for key in sorted(latest, key=lambda k: int(k.split("/r")[-1])):
+    region = int(key.split("/r")[-1])
+    v = latest[key]
+    bar = "#" * int(min(v * 2000, 40))
+    print(f"  z-slab {region} (height {region*8}-{region*8+7})  "
+          f"{v:9.6f} {bar}")
+print("\nlower slabs (building wakes) should be less stable than the "
+      "free stream above — that is the paper's Fig-5 insight.")

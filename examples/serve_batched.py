@@ -1,0 +1,38 @@
+"""Batched serving example: prefill a batch of prompts, decode with a KV
+cache, stream per-step telemetry — `python -m repro.launch.serve` wrapped
+with elastic-endpoint failover demonstrated live.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+
+from repro.launch.serve import main as serve_main
+from repro.core.api import broker_connect, broker_init, broker_write
+from repro.core.broker import BrokerConfig
+from repro.core.grouping import GroupPlan
+from repro.streaming.endpoint import make_endpoints
+
+# 1) serve a batch
+out = serve_main(["--arch", "gemma3-12b", "--preset", "ci",
+                  "--batch", "4", "--prompt-len", "32", "--gen", "12"])
+print(f"[example] generated token matrix shape: {out.shape}")
+
+# 2) demonstrate endpoint failover on the telemetry plane
+eps = make_endpoints(2)
+broker = broker_connect(eps, n_producers=4,
+                        cfg=BrokerConfig(compress="none", retry_limit=3),
+                        plan=GroupPlan(4, 2, 2))
+ctxs = [broker_init("decode_norm", r) for r in range(4)]
+for step in range(5):
+    for r in range(4):
+        broker_write(ctxs[r], step, np.asarray([float(step)], np.float32))
+eps[0].handle.fail()
+print("[example] endpoint ep0 FAILED — broker re-routes group 0...")
+for step in range(5, 10):
+    for r in range(4):
+        broker_write(ctxs[r], step, np.asarray([float(step)], np.float32))
+broker.flush()
+stats = broker.finalize()
+print(f"[example] delivered {stats.sent}/40 records "
+      f"({stats.rerouted} re-routed after failover, {stats.dropped} dropped)")
+assert stats.sent == 40

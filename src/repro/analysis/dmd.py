@@ -1,0 +1,112 @@
+"""Dynamic Mode Decomposition in JAX — the paper's Cloud-side analysis.
+
+Two implementations:
+
+* ``exact_dmd`` — PyDMD-equivalent batch DMD on a snapshot window
+  (SVD -> low-rank operator -> eigenvalues), jitted.
+* ``StreamingDMD`` — online DMD over unbounded streams: rank-1 Gram updates
+  G += x xᵀ, A += y xᵀ per incoming snapshot pair (the hot loop the Pallas
+  ``gram`` kernel implements on TPU), eigenvalues from the Gram-space
+  operator.  This is what each stream's executor runs per micro-batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def exact_dmd(snapshots: jax.Array, rank: int = 8):
+    """snapshots: (n_features, n_steps).  Returns (eigenvalues, energy).
+
+    X = snaps[:, :-1], Y = snaps[:, 1:];  A~ = Uᵀ Y V S⁻¹ (rank-truncated).
+    """
+    X = snapshots[:, :-1].astype(F32)
+    Y = snapshots[:, 1:].astype(F32)
+    U, S, Vt = jnp.linalg.svd(X, full_matrices=False)
+    r = min(rank, S.shape[0])
+    U, S, Vt = U[:, :r], S[:r], Vt[:r]
+    Sinv = jnp.where(S > 1e-10, 1.0 / S, 0.0)
+    Atilde = U.T @ Y @ Vt.T * Sinv[None, :]
+    eigs = jnp.linalg.eigvals(Atilde)
+    energy = jnp.sum(S[:r] ** 2) / jnp.maximum(jnp.sum(S ** 2), 1e-30)
+    return eigs, energy
+
+
+@jax.jit
+def gram_update(G: jax.Array, A: jax.Array, x: jax.Array, y: jax.Array):
+    """Rank-1 online-DMD update: G += x xᵀ, A += y xᵀ.
+
+    On TPU this runs as the Pallas ``gram`` kernel (kernels/gram.py) over
+    batched snapshot blocks; this jnp form is the portable path and oracle.
+    """
+    return G + jnp.outer(x, x), A + jnp.outer(y, x)
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def gram_eigs(G: jax.Array, A: jax.Array, rank: int = 8,
+              rel_tol: float = 1e-7):
+    """Eigenvalues of the online-DMD operator, rank-truncated.
+
+    G = X Xᵀ (PSD), A = Y Xᵀ.  Project onto G's dominant eigenspace U_r
+    (anything else is noise-nullspace and would blow up the pseudo-inverse):
+    M_r = U_rᵀ A U_r diag(1/s_r);  eig(M_r)."""
+    s, U = jnp.linalg.eigh(G)                    # ascending
+    s = s[::-1]
+    U = U[:, ::-1]
+    r = min(rank, G.shape[0])
+    s_r, U_r = s[:r], U[:, :r]
+    good = s_r > rel_tol * jnp.maximum(s_r[0], 1e-30)
+    inv = jnp.where(good, 1.0 / jnp.maximum(s_r, 1e-30), 0.0)
+    M = (U_r.T @ A @ U_r) * inv[None, :]
+    eigs = jnp.linalg.eigvals(M)
+    # null directions are padded with NaN — consumers (metrics, tests) filter
+    # non-finite entries, so rank padding never reads as (in)stability
+    return jnp.where(good, eigs, jnp.nan + 0.0j)
+
+
+@dataclass
+class StreamingDMD:
+    """Per-stream online DMD state (executor-side)."""
+
+    n_features: int
+    window: int = 32                 # snapshots kept for exact re-solves
+    rank: int = 8
+    _buf: list = field(default_factory=list)
+    _G: np.ndarray | None = None
+    _A: np.ndarray | None = None
+    last_snapshot: np.ndarray | None = None
+    n_seen: int = 0
+
+    def update(self, snapshot: np.ndarray) -> None:
+        x = np.asarray(snapshot, np.float32).reshape(-1)[: self.n_features]
+        if x.size < self.n_features:   # short payloads embed zero-padded
+            x = np.pad(x, (0, self.n_features - x.size))
+        if self._G is None:
+            self._G = np.zeros((self.n_features, self.n_features), np.float32)
+            self._A = np.zeros((self.n_features, self.n_features), np.float32)
+        if self.last_snapshot is not None:
+            G, A = gram_update(jnp.asarray(self._G), jnp.asarray(self._A),
+                               jnp.asarray(self.last_snapshot), jnp.asarray(x))
+            self._G, self._A = np.asarray(G), np.asarray(A)
+        self.last_snapshot = x
+        self._buf.append(x)
+        if len(self._buf) > self.window:
+            self._buf.pop(0)
+        self.n_seen += 1
+
+    def eigenvalues(self) -> np.ndarray:
+        if self.n_seen < 3:
+            return np.zeros(1, np.complex64)
+        if self.n_seen <= self.window:
+            snaps = jnp.asarray(np.stack(self._buf, axis=1))
+            eigs, _ = exact_dmd(snaps, rank=self.rank)
+            return np.asarray(eigs)
+        return np.asarray(gram_eigs(jnp.asarray(self._G), jnp.asarray(self._A),
+                                    rank=self.rank))

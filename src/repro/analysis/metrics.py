@@ -1,0 +1,26 @@
+"""Analysis metrics — the paper's Fig-5 stability score.
+
+"Each subplot shows the average sum of square distances from eigenvalues to
+the unit circle of that region.  Values closer to 0 mean fluids in that
+region are more stable."
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def unit_circle_distance(eigs: np.ndarray) -> float:
+    """mean over (finite) eigenvalues of (|lambda| - 1)^2.
+
+    NaN entries are rank-padding from the online-DMD solver and are ignored.
+    """
+    eigs = np.asarray(eigs)
+    eigs = eigs[np.isfinite(eigs)]
+    if eigs.size == 0:
+        return 0.0
+    return float(np.mean((np.abs(eigs) - 1.0) ** 2))
+
+
+def region_stability(eigs_by_region: dict) -> dict:
+    """Fig-5 panel: region key -> stability score."""
+    return {k: unit_circle_distance(v) for k, v in eigs_by_region.items()}

@@ -1,0 +1,59 @@
+"""Architecture registry: ``repro.configs.get("llama3-405b")``."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, LayerSpec, ShapeConfig, SHAPES
+
+from repro.configs.starcoder2_3b import CONFIG as _starcoder2_3b
+from repro.configs.minitron_8b import CONFIG as _minitron_8b
+from repro.configs.llama3_405b import CONFIG as _llama3_405b
+from repro.configs.gemma3_12b import CONFIG as _gemma3_12b
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4_scout
+from repro.configs.arctic_480b import CONFIG as _arctic_480b
+from repro.configs.musicgen_large import CONFIG as _musicgen_large
+from repro.configs.jamba_1_5_large_398b import CONFIG as _jamba_15_large
+from repro.configs.llama_3_2_vision_11b import CONFIG as _llama_32_vision
+from repro.configs.mamba2_2_7b import CONFIG as _mamba2_27b
+
+REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _starcoder2_3b,
+        _minitron_8b,
+        _llama3_405b,
+        _gemma3_12b,
+        _llama4_scout,
+        _arctic_480b,
+        _musicgen_large,
+        _jamba_15_large,
+        _llama_32_vision,
+        _mamba2_27b,
+    ]
+}
+
+
+def get(name: str) -> ArchConfig:
+    if name in REGISTRY:
+        return REGISTRY[name]
+    if name.endswith("-reduced") and name[: -len("-reduced")] in REGISTRY:
+        return REGISTRY[name[: -len("-reduced")]].reduced()
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = [
+    "ArchConfig",
+    "LayerSpec",
+    "ShapeConfig",
+    "SHAPES",
+    "REGISTRY",
+    "get",
+    "get_shape",
+    "list_archs",
+]

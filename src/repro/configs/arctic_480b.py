@@ -1,0 +1,33 @@
+"""Snowflake Arctic-480B — 128-expert top-2 MoE + dense residual per layer.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+128 experts / 16-way `model` axis = 8 experts per slice.  8-bit optimizer
+states + 4 microbatches fit v5e HBM at 256-way sharding.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    moe_d_ff=4864,
+    vocab_size=32000,
+    rope_theta=1e4,
+    n_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL, moe=True),),
+    opt_8bit=True,
+    # 4 microbatches x 5-layer remat blocks; 512-token routing groups shrink
+    # the GShard dispatch einsums ~6.7x (E*C: 10240 -> 1536) at 50% capacity
+    # headroom (§Perf it-5)
+    microbatch_overrides={"train_4k": 4},
+    remat_block=5,
+    moe_group_size=512,
+)

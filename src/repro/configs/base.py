@@ -1,0 +1,259 @@
+"""Architecture / run configuration system.
+
+Every assigned architecture is expressed as an :class:`ArchConfig`.  The model
+stack (``repro.models``) consumes only this dataclass, so adding an arch is one
+file in ``repro/configs``.
+
+Layer heterogeneity (local/global attention interleave, mamba/attn hybrids,
+cross-attention VLM layers, MoE periodicity) is expressed as a repeating
+``pattern`` of :class:`LayerSpec` slots.  The transformer stacks parameters per
+slot across ``n_repeat`` repeats and runs ``lax.scan`` over repeats, keeping the
+HLO (and CPU compile time) proportional to the pattern length, not ``n_layers``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+ATTN_GLOBAL = "attn_global"
+ATTN_LOCAL = "attn_local"
+MAMBA = "mamba"
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One slot in the repeating layer pattern."""
+
+    kind: str = ATTN_GLOBAL          # attn_global | attn_local | mamba
+    moe: bool = False                # MoE MLP instead of dense MLP
+    cross_attn: bool = False         # extra cross-attention block (VLM)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                        # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+    # gradient-accumulation microbatches for train cells (tuned per arch below)
+    microbatches: int = 1
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity ------------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"            # dense | moe | hybrid | ssm | audio | vlm
+    source: str = ""                 # citation tag from the assignment
+
+    # trunk ----------------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # layer pattern ---------------------------------------------------------
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    local_window: int = 4096         # for attn_local slots
+
+    # MoE -------------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # 0 -> d_ff
+    moe_dense_residual: bool = False # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    moe_impl: str = "einsum"         # einsum (GShard baseline) | scatter
+    moe_group_size: int = 1024       # routing group (GShard G); C ~ k*gs*cf/E
+
+    # Mamba2 ----------------------------------------------------------------
+    ssm_state: int = 128
+    mamba_expand: int = 2
+    mamba_headdim: int = 64
+    mamba_conv: int = 4
+    mamba_chunk: int = 256           # SSD chunk length
+
+    # frontends (stubs per the assignment) -----------------------------------
+    frontend: str = "none"           # none | audio | vision
+    n_frontend_tokens: int = 1024    # vision: #patch embeddings fed to cross-attn
+
+    # q-heads are padded to a multiple of this (the `model` mesh axis size) so
+    # attention stays tensor-parallel for head counts 16 doesn't divide
+    # (56/40/24).  Pad rows of wo are masked to zero => exact outputs.
+    head_pad_to: int = 16
+
+    # numerics / training -----------------------------------------------------
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # checkpoint every k pattern-repeats (k>1 shrinks the scan boundary stash
+    # k-fold for the same recompute — total recompute is one extra fwd pass
+    # either way; see EXPERIMENTS.md §Perf it-3)
+    remat_block: int = 1
+    opt_8bit: bool = False           # 8-bit blockwise m/v (needed for >=398B archs)
+    # per-shape microbatch override, e.g. {"train_4k": 8}
+    microbatch_overrides: dict = field(default_factory=dict)
+    # long_500k applicability (sub-quadratic attention only)
+    supports_long_context: bool = False
+    # broker tap configuration (the paper's technique, on by default)
+    tap_fields: tuple[str, ...] = ("resid_norm", "snapshot")
+    tap_snapshot_dim: int = 64       # per-region downsampled field vector length
+
+    # ------------------------------------------------------------------ props
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 128 so the vocab dim always shards."""
+        return _round_up(self.vocab_size, 128)
+
+    @property
+    def padded_heads(self) -> int:
+        if not self.n_heads:
+            return 0
+        hp = _round_up(self.n_heads, self.head_pad_to)
+        assert hp % max(self.n_kv_heads, 1) == 0, (hp, self.n_kv_heads)
+        return hp
+
+    @property
+    def n_repeat(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern length {len(self.pattern)}"
+        )
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def mamba_heads(self) -> int:
+        return self.d_inner // self.mamba_headdim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(s.kind == MAMBA for s in self.pattern)
+
+    # ------------------------------------------------------------------ flops
+    def param_count(self) -> int:
+        """Total parameters (dense count; MoE counts all experts)."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE counts top-k experts)."""
+        return _param_count(self, active_only=True)
+
+    def model_flops(self, shape: ShapeConfig) -> float:
+        """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N active params."""
+        n = self.active_param_count()
+        if shape.kind == "train":
+            tokens = shape.seq_len * shape.global_batch
+            return 6.0 * n * tokens
+        if shape.kind == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            return 2.0 * n * tokens
+        # decode: one new token per batch element
+        return 2.0 * n * shape.global_batch
+
+    # ------------------------------------------------------------------ misc
+    def shape_cells(self) -> list[ShapeConfig]:
+        cells = []
+        for s in SHAPES.values():
+            if s.name == "long_500k" and not self.supports_long_context:
+                continue
+            mb = self.microbatch_overrides.get(s.name, s.microbatches)
+            cells.append(replace(s, microbatches=mb))
+        return cells
+
+    def reduced(self) -> "ArchConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        pat = self.pattern[: min(len(self.pattern), 4)]
+        # keep pattern shape but at most 2 repeats
+        n_layers = len(pat) * min(2, max(1, self.n_layers // len(self.pattern)))
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            pattern=pat,
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=32,
+            d_ff=256,
+            moe_d_ff=128 if self.n_experts else 0,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            ssm_state=32,
+            mamba_headdim=32,
+            mamba_chunk=32,
+            local_window=64,
+            n_frontend_tokens=16,
+            dtype=jnp.float32,
+            remat=False,
+            opt_8bit=False,
+            microbatch_overrides={},
+        )
+
+
+def _param_count(cfg: ArchConfig, *, active_only: bool) -> int:
+    d = cfg.d_model
+    total = cfg.n_repeat * sum(_slot_params(cfg, slot, active_only) for slot in cfg.pattern)
+    total += cfg.padded_vocab * d  # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.padded_vocab * d  # output head
+    total += d  # final norm
+    return total
+
+
+def _slot_params(cfg: ArchConfig, slot: LayerSpec, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    p = 0
+    if slot.kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p += d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d + d
+    elif slot.kind == MAMBA:
+        di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+        p += d * (2 * di + 2 * ns + nh)
+        p += cfg.mamba_conv * (di + 2 * ns)
+        p += nh + nh + di
+        p += di * d + d
+    if slot.cross_attn:
+        p += d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d + 2 * d
+    if slot.moe and cfg.n_experts:
+        eff = cfg.moe_d_ff or cfg.d_ff
+        n_e = cfg.experts_per_token if active_only else cfg.n_experts
+        p += n_e * (3 * d * eff) + d * cfg.n_experts + d
+        if cfg.moe_dense_residual:
+            p += 3 * d * cfg.d_ff
+    elif cfg.d_ff:
+        p += 3 * d * cfg.d_ff + d
+    return p

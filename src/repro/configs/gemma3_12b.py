@@ -1,0 +1,28 @@
+"""Gemma-3-12B — dense, 5:1 local:global interleave, GQA(kv=8), 256k vocab.
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL, ATTN_LOCAL
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt; unverified",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    rope_theta=1e6,
+    local_window=1024,
+    pattern=(
+        LayerSpec(kind=ATTN_LOCAL),
+        LayerSpec(kind=ATTN_LOCAL),
+        LayerSpec(kind=ATTN_LOCAL),
+        LayerSpec(kind=ATTN_LOCAL),
+        LayerSpec(kind=ATTN_LOCAL),
+        LayerSpec(kind=ATTN_GLOBAL),
+    ),
+    microbatch_overrides={"train_4k": 2},
+)

@@ -1,0 +1,40 @@
+"""Jamba-1.5-Large-398B — Mamba+attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]
+
+Pattern period 8: one global-attention slot per 8 layers (1:7), MoE on
+alternating slots.  Mamba slots use the Mamba2/SSD layer (DESIGN.md §10).
+Sub-quadratic (mamba-dominated) => runs long_500k.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL, MAMBA
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    source="arXiv:2403.19887; hf",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    moe_d_ff=24576,
+    vocab_size=65536,
+    rope_theta=1e4,
+    n_experts=16,
+    experts_per_token=2,
+    ssm_state=128,
+    mamba_headdim=128,
+    pattern=(
+        LayerSpec(kind=MAMBA),
+        LayerSpec(kind=MAMBA, moe=True),
+        LayerSpec(kind=MAMBA),
+        LayerSpec(kind=ATTN_GLOBAL, moe=True),
+        LayerSpec(kind=MAMBA),
+        LayerSpec(kind=MAMBA, moe=True),
+        LayerSpec(kind=MAMBA),
+        LayerSpec(kind=MAMBA, moe=True),
+    ),
+    opt_8bit=True,
+    supports_long_context=True,
+    microbatch_overrides={"train_4k": 8},
+)

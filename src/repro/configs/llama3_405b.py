@@ -1,0 +1,26 @@
+"""Llama-3-405B — dense, GQA(kv=8), 128k vocab. [arXiv:2407.21783; unverified]
+
+8-bit optimizer states + 8 gradient-accumulation microbatches are required to
+fit a v5e-16GB chip at 256-way sharding (see DESIGN.md §4 and EXPERIMENTS.md).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    source="arXiv:2407.21783; unverified",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=5e5,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL),),
+    opt_8bit=True,
+    # 8 microbatches x 6-layer remat blocks: boundary stash 21 x 268 MB =
+    # 5.6 GB/chip (§Perf it-3/it-5: mb=16 regressed — 2x FSDP regathers)
+    microbatch_overrides={"train_4k": 8},
+    remat_block=6,
+)

@@ -1,0 +1,26 @@
+"""Llama-4-Scout-17B-16E — MoE 16 experts top-1, GQA(kv=8).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Every layer is MoE (interleave step 1).  Experts shard 1-per-chip-slice over
+the 16-way `model` axis (classic EP).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    moe_d_ff=8192,
+    vocab_size=202048,
+    rope_theta=5e5,
+    n_experts=16,
+    experts_per_token=1,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL, moe=True),),
+    microbatch_overrides={"train_4k": 2},
+)

@@ -1,0 +1,31 @@
+"""Llama-3.2-Vision-11B — cross-attention image layers every 5th layer.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+
+The vision tower is a STUB per the assignment: ``input_specs()`` feeds
+precomputed patch embeddings (batch, n_frontend_tokens, d_model) consumed by
+the cross-attention slots.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=5e5,
+    pattern=(
+        LayerSpec(kind=ATTN_GLOBAL),
+        LayerSpec(kind=ATTN_GLOBAL),
+        LayerSpec(kind=ATTN_GLOBAL),
+        LayerSpec(kind=ATTN_GLOBAL),
+        LayerSpec(kind=ATTN_GLOBAL, cross_attn=True),
+    ),
+    frontend="vision",
+    n_frontend_tokens=1024,
+)

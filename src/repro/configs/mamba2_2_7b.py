@@ -1,0 +1,24 @@
+"""Mamba2-2.7B — attention-free SSD (state-space duality). [arXiv:2405.21060;
+unverified]
+
+d_ff=0: pure Mamba2 blocks, no MLP.  Attention-free => runs long_500k.
+d_inner = 2*2560 = 5120, 80 SSD heads of headdim 64, state 128.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MAMBA
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    source="arXiv:2405.21060; unverified",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    mamba_expand=2,
+    mamba_headdim=64,
+    pattern=(LayerSpec(kind=MAMBA),),
+    supports_long_context=True,
+)

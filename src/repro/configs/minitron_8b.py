@@ -1,0 +1,16 @@
+"""Minitron-8B — dense, GQA(kv=8), pruned Nemotron. [arXiv:2407.14679; hf]"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="minitron-8b",
+    family="dense",
+    source="arXiv:2407.14679; hf",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    rope_theta=1e4,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL),),
+)

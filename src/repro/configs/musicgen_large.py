@@ -1,0 +1,22 @@
+"""MusicGen-large — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+The EnCodec frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (batch, seq, d_model); the backbone + 2048-way
+codebook head are real.  kv=32 == n_heads (MHA).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    source="arXiv:2306.05284; hf",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    rope_theta=1e4,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL),),
+    frontend="audio",
+)

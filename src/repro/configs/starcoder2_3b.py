@@ -1,0 +1,20 @@
+"""StarCoder2-3B — dense, GQA(kv=2), RoPE. [arXiv:2402.19173; hf]
+
+Modeled with global attention: its 4k sliding window equals the train seq len
+(noted in DESIGN.md §10).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    family="dense",
+    source="arXiv:2402.19173; hf",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    rope_theta=1e5,
+    pattern=(LayerSpec(kind=ATTN_GLOBAL),),
+)

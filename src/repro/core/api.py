@@ -1,0 +1,82 @@
+"""The paper's C/C++ API surface (Listing 1.1), 1:1 in Python.
+
+    struct CloudEndpoint endpoints[NUM_GROUPS];
+    broker_ctx* broker_init(char* field_name, int group_id);
+    broker_write(broker_ctx*, int step, void* data, size_t len);
+    broker_finalize(broker_ctx*);
+
+``broker_init`` registers a field + group with the shared Broker (connecting
+the calling rank's group to its designated Cloud endpoint); ``broker_write``
+converts one in-memory chunk into a stream record and enqueues it on the
+asynchronous group sender; ``broker_finalize`` drains and closes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.broker import Broker, BrokerConfig
+from repro.core.grouping import GroupPlan, plan_groups
+from repro.core.records import FieldSchema
+
+
+@dataclass
+class CloudEndpoint:
+    """Paper: {char* service_ip; int service_port;}."""
+    service_ip: str
+    service_port: int
+    handle: object = None          # the in-process Endpoint (Redis stand-in)
+
+    def healthy(self) -> bool:
+        return self.handle is not None and self.handle.healthy()
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        self.handle.push(group_id, blob)
+
+
+@dataclass
+class broker_ctx:
+    broker: Broker
+    field_name: str
+    rank: int
+    group_id: int
+
+
+_shared_broker: Broker | None = None
+
+
+def broker_connect(endpoints: list[CloudEndpoint], n_producers: int,
+                   cfg: BrokerConfig | None = None,
+                   plan: GroupPlan | None = None) -> Broker:
+    """Job-level setup: bind the producer job to a set of Cloud endpoints."""
+    global _shared_broker
+    plan = plan or plan_groups(n_producers,
+                               executors_per_group=16)
+    plan = GroupPlan(n_producers=n_producers,
+                     n_groups=min(plan.n_groups, len(endpoints)),
+                     executors_per_group=plan.executors_per_group)
+    _shared_broker = Broker(plan, endpoints, cfg)
+    return _shared_broker
+
+
+def broker_init(field_name: str, rank: int, shape=(), dtype="float32",
+                broker: Broker | None = None) -> broker_ctx:
+    b = broker or _shared_broker
+    if b is None:
+        raise RuntimeError("call broker_connect(endpoints, n_producers) first")
+    g = b.plan.group_of(rank)
+    b.register(FieldSchema(field_name=field_name, shape=tuple(shape),
+                           dtype=dtype, group_id=g))
+    return broker_ctx(broker=b, field_name=field_name, rank=rank, group_id=g)
+
+
+def broker_write(ctx: broker_ctx, step: int, data, data_len: int | None = None) -> bool:
+    arr = np.asarray(data)
+    if data_len is not None:
+        arr = arr.reshape(-1)[:data_len]
+    return ctx.broker.write(ctx.field_name, ctx.rank, step, arr)
+
+
+def broker_finalize(ctx: broker_ctx):
+    return ctx.broker.finalize()

@@ -1,0 +1,185 @@
+"""The ElasticBroker producer-side runtime.
+
+Mirrors the paper's design (§3.1): producer ranks are partitioned into groups;
+each group registers with one Cloud endpoint; ``write`` converts a field
+snapshot into a stream record and hands it to an **asynchronous dispatcher**
+(bounded queue + background sender thread per group) so the producer —
+an OpenFOAM solver there, a JAX train/serve step here — never stalls on the
+wide-area link.  That asynchrony is what produces the paper's Fig-6 result
+(ElasticBroker ≈ simulation-only elapsed time, file-based I/O much slower).
+
+Fault tolerance beyond the paper: bounded-queue backpressure policies
+(block / drop_oldest / sample), endpoint failure detection and group
+re-routing to surviving endpoints, and per-group delivery metrics.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.grouping import GroupPlan
+from repro.core.records import FieldSchema, StreamRecord, encode
+
+
+@dataclass
+class BrokerConfig:
+    compress: str = "int8+zstd"       # none | zstd | int8 | int8+zstd
+    queue_capacity: int = 256         # records per group queue
+    backpressure: str = "drop_oldest" # block | drop_oldest | sample
+    sample_keep: int = 2              # with `sample`: keep 1 of N on pressure
+    flush_timeout_s: float = 10.0
+    retry_limit: int = 3
+
+
+@dataclass
+class BrokerStats:
+    written: int = 0
+    sent: int = 0
+    dropped: int = 0
+    rerouted: int = 0
+    bytes_sent: int = 0
+    send_errors: int = 0
+    queue_high_water: int = 0
+
+
+class _GroupSender(threading.Thread):
+    """One background sender per producer group (paper: one TCP stream per
+    group to its designated endpoint)."""
+
+    def __init__(self, group_id: int, endpoints, primary: int,
+                 cfg: BrokerConfig, stats: BrokerStats):
+        super().__init__(daemon=True, name=f"broker-g{group_id}")
+        self.group_id = group_id
+        self.endpoints = endpoints            # list[Endpoint-like]
+        self.primary = primary
+        self.cfg = cfg
+        self.stats = stats
+        self.q: queue.Queue = queue.Queue(maxsize=cfg.queue_capacity)
+        self._stop = threading.Event()
+        self._sample_ctr = 0
+
+    # ---- producer side ------------------------------------------------
+    def submit(self, rec: StreamRecord) -> bool:
+        self.stats.written += 1
+        self.stats.queue_high_water = max(self.stats.queue_high_water,
+                                          self.q.qsize())
+        if self.cfg.backpressure == "block":
+            self.q.put(rec)
+            return True
+        try:
+            self.q.put_nowait(rec)
+            return True
+        except queue.Full:
+            if self.cfg.backpressure == "drop_oldest":
+                try:
+                    self.q.get_nowait()
+                    self.stats.dropped += 1
+                except queue.Empty:
+                    pass
+                try:
+                    self.q.put_nowait(rec)
+                    return True
+                except queue.Full:
+                    self.stats.dropped += 1
+                    return False
+            # sample: keep 1 of N while under pressure
+            self._sample_ctr += 1
+            if self._sample_ctr % self.cfg.sample_keep == 0:
+                try:
+                    self.q.get_nowait()
+                    self.stats.dropped += 1
+                    self.q.put_nowait(rec)
+                    return True
+                except (queue.Empty, queue.Full):
+                    pass
+            self.stats.dropped += 1
+            return False
+
+    # ---- sender loop ---------------------------------------------------
+    def run(self):
+        while not self._stop.is_set() or not self.q.empty():
+            try:
+                rec = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            blob = encode(rec, compress=self.cfg.compress)
+            if self._send(blob):
+                self.stats.sent += 1
+                self.stats.bytes_sent += len(blob)
+            else:
+                self.stats.dropped += 1   # retries exhausted: lost record
+
+    def _send(self, blob: bytes) -> bool:
+        """Send to primary; on failure re-route to the next healthy endpoint
+        (pure remapping — the paper's grouping makes failover trivial)."""
+        n = len(self.endpoints)
+        for attempt in range(self.cfg.retry_limit):
+            ep = self.endpoints[(self.primary + attempt) % n]
+            try:
+                if ep.healthy():
+                    ep.push(self.group_id, blob)
+                    if attempt > 0:
+                        self.stats.rerouted += 1
+                        self.primary = (self.primary + attempt) % n
+                    return True
+            except Exception:
+                pass
+            self.stats.send_errors += 1
+        return False
+
+    def stop(self, timeout: float):
+        self._stop.set()
+        self.join(timeout=timeout)
+
+
+class Broker:
+    """Producer-side broker: one per job, shared by all local ranks."""
+
+    def __init__(self, plan: GroupPlan, endpoints, cfg: BrokerConfig | None = None):
+        assert len(endpoints) >= plan.n_groups, (
+            f"{plan.n_groups} groups need >= that many endpoints, "
+            f"got {len(endpoints)}")
+        self.plan = plan
+        self.cfg = cfg or BrokerConfig()
+        self.stats = BrokerStats()
+        self.schemas: dict[str, FieldSchema] = {}
+        self._senders: dict[int, _GroupSender] = {}
+        for g in range(plan.n_groups):
+            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg,
+                             self.stats)
+            s.start()
+            self._senders[g] = s
+
+    # -- the paper's three-call API surface lives in core.api ------------
+    def register(self, schema: FieldSchema) -> None:
+        self.schemas[f"{schema.field_name}/g{schema.group_id}"] = schema
+
+    def write(self, field_name: str, rank: int, step: int,
+              payload: np.ndarray) -> bool:
+        g = self.plan.group_of(rank)
+        rec = StreamRecord(field_name=field_name, group_id=g, rank=rank,
+                           step=step, payload=np.asarray(payload))
+        return self._senders[g].submit(rec)
+
+    def flush(self, timeout: float | None = None) -> None:
+        """Block until every written record is delivered (or dropped/errored
+        out) — exact accounting, no queue-emptiness race."""
+        deadline = time.time() + (timeout or self.cfg.flush_timeout_s)
+        while time.time() < deadline:
+            st = self.stats
+            undelivered = st.written - st.sent - st.dropped
+            if undelivered <= 0 and all(s.q.empty() for s in self._senders.values()):
+                return
+            if st.send_errors >= self.cfg.retry_limit * max(undelivered, 1):
+                return  # endpoints down and retries exhausted
+            time.sleep(0.01)
+
+    def finalize(self) -> BrokerStats:
+        self.flush()
+        for s in self._senders.values():
+            s.stop(timeout=self.cfg.flush_timeout_s)
+        return self.stats

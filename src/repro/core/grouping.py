@@ -1,0 +1,54 @@
+"""Producer-rank -> group -> endpoint mapping (paper §3.1, Fig 1).
+
+The paper divides MPI processes into groups; each group registers with one
+Cloud endpoint (ratio 16:1:16 producers:endpoints:executors in §4.3).  Here
+producers are mesh data-slices (or CFD ranks), and the planner picks the
+group count from the bandwidth model the paper leaves as future work §6:
+outbound per-producer bandwidth vs inbound per-endpoint bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    n_producers: int
+    n_groups: int                      # == number of endpoints used
+    executors_per_group: int
+
+    def group_of(self, rank: int) -> int:
+        if not (0 <= rank < self.n_producers):
+            raise ValueError(f"rank {rank} out of range [0,{self.n_producers})")
+        return rank % self.n_groups     # round-robin keeps groups balanced
+
+    def ranks_in(self, group: int) -> list[int]:
+        return [r for r in range(self.n_producers) if self.group_of(r) == group]
+
+    @property
+    def n_executors(self) -> int:
+        return self.n_groups * self.executors_per_group
+
+
+def plan_groups(n_producers: int, *,
+                producer_out_bw: float = 1.0e9,
+                endpoint_in_bw: float = 10.0e9,
+                record_rate_hz: float = 1.0,
+                record_bytes: float = 1.0e6,
+                executors_per_group: int | None = None,
+                max_ratio: int = 16) -> GroupPlan:
+    """Pick #endpoints so no endpoint's inbound link saturates.
+
+    demand per producer = record_rate * record_bytes (<= producer_out_bw);
+    producers per endpoint = endpoint_in_bw // demand, capped at ``max_ratio``
+    (the paper's 16:1 operating point).
+    """
+    if n_producers <= 0:
+        raise ValueError("need >= 1 producer")
+    demand = min(record_rate_hz * record_bytes, producer_out_bw)
+    per_ep = max(1, min(max_ratio, int(endpoint_in_bw // max(demand, 1.0))))
+    n_groups = max(1, (n_producers + per_ep - 1) // per_ep)
+    if executors_per_group is None:
+        executors_per_group = min(per_ep, max_ratio)   # paper: 16 exec / ep
+    return GroupPlan(n_producers=n_producers, n_groups=n_groups,
+                     executors_per_group=executors_per_group)

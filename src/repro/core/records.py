@@ -1,0 +1,106 @@
+"""Stream records: the Cloud-native unit ElasticBroker ships.
+
+A record carries one field snapshot from one producer rank at one step,
+exactly like the paper's ``broker_write(ctx, step, data, len)`` payloads:
+timestep + serialized field data + schema, msgpack-framed, optionally
+zstd-compressed or int8 block-quantized (the TPU-side Pallas ``quant`` kernel
+implements the same codec in-graph; this is the host-side mirror).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import msgpack
+import numpy as np
+
+try:
+    import zstandard as zstd
+    _ZSTD_C = zstd.ZstdCompressor(level=1)
+    _ZSTD_D = zstd.ZstdDecompressor()
+except Exception:  # pragma: no cover
+    zstd = None
+
+QBLOCK = 256
+
+
+@dataclass(frozen=True)
+class FieldSchema:
+    """Registered at broker_init, mirrors the paper's field registration."""
+
+    field_name: str              # e.g. "velocity_x", "resid_norm/layer"
+    shape: tuple[int, ...]       # per-record payload shape
+    dtype: str                   # numpy dtype name
+    group_id: int                # producer group (paper: MPI process group)
+
+
+@dataclass
+class StreamRecord:
+    field_name: str
+    group_id: int
+    rank: int                    # producer rank within the job
+    step: int                    # simulation / training step
+    payload: np.ndarray
+    t_generated: float = field(default_factory=time.time)
+
+    def key(self) -> str:
+        return f"{self.field_name}/g{self.group_id}/r{self.rank}"
+
+
+# ---------------------------------------------------------------------------
+# Wire codec
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: np.ndarray) -> dict:
+    """Blockwise int8: flat blocks of QBLOCK with one f32 scale each — the
+    host mirror of kernels/quant.py."""
+    flat = np.asarray(x, np.float32).reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    padded = np.pad(flat, (0, pad))
+    blocks = padded.reshape(-1, QBLOCK)
+    scale = np.maximum(np.abs(blocks).max(axis=1), 1e-20) / 127.0
+    q = np.clip(np.round(blocks / scale[:, None]), -127, 127).astype(np.int8)
+    return {"q": q.tobytes(), "scale": scale.astype(np.float32).tobytes(),
+            "n": int(flat.size), "shape": list(x.shape)}
+
+
+def dequantize_int8(d: dict) -> np.ndarray:
+    q = np.frombuffer(d["q"], np.int8).reshape(-1, QBLOCK).astype(np.float32)
+    scale = np.frombuffer(d["scale"], np.float32)
+    flat = (q * scale[:, None]).reshape(-1)[: d["n"]]
+    return flat.reshape(d["shape"])
+
+
+def encode(rec: StreamRecord, *, compress: str = "zstd") -> bytes:
+    """compress: none | zstd | int8 | int8+zstd."""
+    arr = np.asarray(rec.payload)
+    if compress.startswith("int8"):
+        payload: Any = quantize_int8(arr)
+        enc = "int8"
+    else:
+        payload = {"raw": arr.astype(np.float32).tobytes(),
+                   "shape": list(arr.shape)}
+        enc = "raw"
+    msg = {
+        "f": rec.field_name, "g": rec.group_id, "r": rec.rank,
+        "s": rec.step, "t": rec.t_generated, "e": enc, "p": payload,
+    }
+    blob = msgpack.packb(msg, use_bin_type=True)
+    if compress.endswith("zstd") and zstd is not None:
+        return b"Z" + _ZSTD_C.compress(blob)
+    return b"M" + blob
+
+
+def decode(data: bytes) -> StreamRecord:
+    tag, blob = data[:1], data[1:]
+    if tag == b"Z":
+        blob = _ZSTD_D.decompress(blob)
+    msg = msgpack.unpackb(blob, raw=False)
+    if msg["e"] == "int8":
+        payload = dequantize_int8(msg["p"])
+    else:
+        payload = np.frombuffer(msg["p"]["raw"], np.float32).reshape(
+            msg["p"]["shape"])
+    return StreamRecord(field_name=msg["f"], group_id=msg["g"], rank=msg["r"],
+                        step=msg["s"], payload=payload, t_generated=msg["t"])

@@ -1,0 +1,51 @@
+"""Bridge between in-graph field taps and the host-side broker.
+
+The model trunk emits a ``taps`` pytree per step:
+  resid_norm: (R, B)  — per-layer-repeat, per-sample residual norms
+  snapshot:   (R, B, tap_dim) — strided residual field vectors
+
+Batch stays sharded over the mesh ``data`` axis, so each data-slice is a
+"process region" (the paper's MPI process).  ``TapStreamer.publish`` slices
+the per-region rows out of the (addressable) tap arrays and issues one
+``broker_write`` per (field, region) — asynchronously, on the broker's
+sender threads, never blocking the train loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import broker_ctx, broker_init, broker_write
+from repro.core.broker import Broker
+
+
+class TapStreamer:
+    """One per training/serving job; ranks = mesh data slices (regions)."""
+
+    def __init__(self, broker: Broker, n_regions: int,
+                 fields: tuple[str, ...] = ("resid_norm", "snapshot")):
+        self.n_regions = n_regions
+        self.fields = fields
+        self._ctx: dict[tuple[str, int], broker_ctx] = {}
+        for f in fields:
+            for r in range(n_regions):
+                self._ctx[(f, r)] = broker_init(f, r, broker=broker)
+
+    def publish(self, step: int, taps: dict) -> int:
+        """taps: pytree of numpy/jax arrays with a batch axis at dim 1.
+
+        Region r owns the batch rows [r*B/n, (r+1)*B/n).  Returns #records.
+        """
+        n = 0
+        for f in self.fields:
+            arr = np.asarray(taps[f])
+            B = arr.shape[1]
+            per = max(1, B // self.n_regions)
+            for r in range(self.n_regions):
+                rows = arr[:, r * per:(r + 1) * per]
+                if rows.size == 0:
+                    continue
+                # region field snapshot: mean over region samples -> (R,) or (R,tap)
+                payload = rows.mean(axis=1)
+                if broker_write(self._ctx[(f, r)], step, payload):
+                    n += 1
+        return n

@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention — blocked online-softmax with causal skipping.
+
+Layout: q/k/v as (B, H, S, D); grid (B, H, nq, nk) with the kv-block axis
+innermost.  Per (b, h, qi): f32 scratch (m, l, acc) lives in VMEM across the
+nk iterations; fully-masked kv blocks are *skipped* (@pl.when), so causal
+attention does ~half the FLOPs of the masked-dense portable path and sliding
+windows do ~window/S of it — this is the kernel's roofline win over
+``models.layers.flash_attention`` (see EXPERIMENTS.md §Perf).
+
+Block sizes default to 128 (MXU-aligned: lanes=128, bf16 sublanes=16).
+VMEM working set per step ≈ (bq*D + bk*D + bq*bk + bq*D) * 4B — for
+bq=bk=128, D=128: ~260 KB, comfortably inside the ~16 MB/core budget with
+double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, n_k: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # reachability: skip blocks fully outside the causal/window band
+    reachable = True
+    if causal:
+        reachable = jnp.logical_and(
+            k_start <= q_start + block_q - 1, True)
+    if window is not None:
+        reachable = jnp.logical_and(
+            reachable, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(F32) * scale            # (bq, D)
+        k = k_ref[0, 0].astype(F32)                    # (bk, D)
+        v = v_ref[0, 0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32)  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_blk = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(m_new[:, None] > NEG_INF / 2, p, 0.0)
+        alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         window: int | None = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q/k/v: (B, H, S, D), KV heads pre-expanded.  Returns (B, H, S, D)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(T, block_k)
+    Sp, Tp = nq * block_q, nk * block_k
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=nk, seq_len=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q, D), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :]

@@ -1,0 +1,68 @@
+"""Pallas TPU Gram-accumulation kernel: G += XᵀX over snapshot blocks.
+
+The streaming-DMD hot loop (analysis/dmd.py): every micro-batch of n
+snapshots rank-updates the d x d Gram matrix.  Tiled (bd x bd) output blocks
+with the snapshot axis innermost in the grid; an f32 VMEM scratch accumulates
+across n-blocks, and the running G tile is added once at the end — one HBM
+read + one write of G per call regardless of n.
+
+MXU alignment: bd=128, bn=128 tiles (bf16/f32 both land on 128-lane vregs).
+VMEM per step: 2*(bn*bd) + bd*bd + bd*bd floats ≈ 256 KB at defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _gram_kernel(xi_ref, xj_ref, g_ref, out_ref, acc_scr, *, n_n: int):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    xi = xi_ref[...].astype(F32)                       # (bn, bd)
+    xj = xj_ref[...].astype(F32)                       # (bn, bd)
+    acc_scr[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(ni == n_n - 1)
+    def _finish():
+        out_ref[...] = (g_ref[...].astype(F32) + acc_scr[...]).astype(out_ref.dtype)
+
+
+def gram_accumulate(x: jax.Array, g: jax.Array, *, block_d: int = 128,
+                    block_n: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (n, d) snapshots; g: (d, d) running Gram.  Returns g + xᵀx."""
+    n, d = x.shape
+    block_d = min(block_d, d)
+    block_n = min(block_n, n)
+    nd = pl.cdiv(d, block_d)
+    nn = pl.cdiv(n, block_n)
+    dp, np_ = nd * block_d, nn * block_n
+    if dp != d or np_ != n:
+        x = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+        g = jnp.pad(g, ((0, dp - d), (0, dp - d)))
+
+    kernel = functools.partial(_gram_kernel, n_n=nn)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nd, nd, nn),
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, dp), g.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, block_d), F32)],
+        interpret=interpret,
+    )(x, x, g)
+    return out[:d, :d]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on the CPU host (this container, CI)
+they execute in ``interpret=True`` mode so every test exercises the *same*
+kernel bodies.  ``attention`` also handles the model-side layout:
+(B,S,H,D) <-> (B,H,S,D) and GQA head expansion.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash, gram, quant, ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              block_q: int = 128, block_k: int = 128):
+    """Flash attention, model layout: q (B,S,H,D), k/v (B,T,Kh,D), Kh | H."""
+    H, Kh = q.shape[2], k.shape[2]
+    if Kh != H:
+        k = jnp.repeat(k, H // Kh, axis=2)
+        v = jnp.repeat(v, H // Kh, axis=2)
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    ot = flash.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=_interpret())
+    return jnp.transpose(ot, (0, 2, 1, 3))
+
+
+@partial(jax.jit, static_argnames=("block_d", "block_n"))
+def gram_accumulate(x, g, *, block_d: int = 128, block_n: int = 128):
+    """G += XᵀX.  x: (n, d); g: (d, d)."""
+    return gram.gram_accumulate(x, g, block_d=block_d, block_n=block_n,
+                                interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def quantize(x, *, block_rows: int = 256):
+    return quant.quantize(x, block_rows=block_rows, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def dequantize(q, s, *, block_rows: int = 256):
+    return quant.dequantize(q, s, block_rows=block_rows,
+                            interpret=_interpret())
+
+
+@jax.jit
+def ssd_intra_chunk(cb, cum, bmat, xdt):
+    """Mamba2/SSD intra-chunk masked-decay matmuls, VMEM-resident."""
+    return ssd.ssd_intra_chunk(cb, cum, bmat, xdt, interpret=_interpret())

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """Naive full-matrix attention.  q: (B,S,H,D); k/v: (B,T,H,D) (pre-expanded
+    KV heads).  Returns (B,S,H,D) in q.dtype."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(F32), k.astype(F32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    tpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= tpos <= qpos
+    if window is not None:
+        mask &= tpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, v.astype(F32))
+    return o.astype(q.dtype)
+
+
+def gram_ref(x: jax.Array, g: jax.Array | None = None) -> jax.Array:
+    """G += XᵀX.  x: (n, d) snapshot block; g: (d, d) running Gram or None."""
+    upd = jnp.dot(x.T.astype(F32), x.astype(F32))
+    return upd if g is None else g.astype(F32) + upd
+
+
+def ssd_intra_ref(cb, cum, bmat, xdt):
+    """Oracle for kernels/ssd.py — the formulas from models/mamba.py.
+
+    cb: (G,L,L); cum: (G,L,H); bmat: (G,L,N); xdt: (G,L,H,P)."""
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (G,i,j,H)
+    L = cb.shape[1]
+    mask = jnp.arange(L)[:, None] >= jnp.arange(L)[None, :]
+    m = cb[..., None] * decay * mask[None, :, :, None]
+    y = jnp.einsum("gijh,gjhp->gihp", m, xdt)
+    seg = jnp.exp(cum[:, -1:, :] - cum)                        # (G,L,H)
+    s = jnp.einsum("gjn,gjh,gjhp->ghnp", bmat, seg, xdt)
+    return y, s
+
+
+def quant_ref(x: jax.Array):
+    """Blockwise int8 over rows.  x: (nb, q) f32 -> (int8 (nb,q), f32 (nb,))."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(F32)), axis=1), 1e-20) / 127.0
+    data = jnp.clip(jnp.round(x.astype(F32) / scale[:, None]), -127, 127)
+    return data.astype(jnp.int8), scale
+
+
+def dequant_ref(data: jax.Array, scale: jax.Array) -> jax.Array:
+    return data.astype(F32) * scale[:, None]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the Mamba2/SSD intra-chunk recurrence.
+
+The chunked SSD algorithm (models/mamba.py) expands the within-chunk
+recurrence into masked decay "attention":
+
+    M[i,j,h] = (C_i·B_j) * exp(cum_i[h] - cum_j[h]) * [i >= j]
+    y[i,h]   = sum_j M[i,j,h] * xdt[j,h]           (intra-chunk output)
+    S[h]     = sum_j B_j ⊗ (exp(cum_L - cum_j) xdt[j,h])   (chunk state)
+
+The (L,L,H) decay/M tensors are the HBM hot spot of the portable path
+(marked ``kernel_ssd_intra``); here they live in VMEM only.  Grid is
+(batch*chunks, heads); CB = C·Bᵀ is a clean standalone MXU matmul and is
+computed outside (it is head-independent — recomputing it per head would be
+H× wasted FLOPs).
+
+VMEM per step (L=128, N=128, P=64, f32): CB 64 KB + M 64 KB + xdt 32 KB +
+outputs ≈ 200 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _ssd_intra_kernel(cb_ref, cum_ref, b_ref, xdt_ref, y_ref, s_ref, *,
+                      L: int, N: int, P: int):
+    cb = cb_ref[0].astype(F32)                     # (L, L)
+    cum = cum_ref[0, :, 0].astype(F32)             # (L,)
+    bmat = b_ref[0].astype(F32)                    # (L, N)
+    xdt = xdt_ref[0, :, 0].astype(F32)             # (L, P)
+
+    decay = jnp.exp(cum[:, None] - cum[None, :])   # (L, L)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    m = jnp.where(mask, cb * decay, 0.0)
+    y_ref[0, :, 0] = jax.lax.dot_general(
+        m, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=F32).astype(y_ref.dtype)
+
+    seg = jnp.exp(cum[-1] - cum)                   # (L,)
+    s_ref[0, 0] = jax.lax.dot_general(
+        bmat * seg[:, None], xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32).astype(s_ref.dtype)  # (N, P)
+
+
+def ssd_intra_chunk(cb: jax.Array, cum: jax.Array, bmat: jax.Array,
+                    xdt: jax.Array, *, interpret: bool = False):
+    """cb: (G, L, L) = C·Bᵀ per (batch*chunk) group; cum: (G, L, H);
+    bmat: (G, L, N); xdt: (G, L, H, P).
+
+    Returns (y_intra (G, L, H, P), states (G, H, N, P))."""
+    G, L, H = cum.shape
+    N = bmat.shape[-1]
+    P = xdt.shape[-1]
+    kernel = functools.partial(_ssd_intra_kernel, L=L, N=N, P=P)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(G, H),
+        in_specs=[
+            pl.BlockSpec((1, L, L), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda g, h: (g, 0, h)),
+            pl.BlockSpec((1, L, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, L, 1, P), lambda g, h: (g, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, L, H, P), F32),
+            jax.ShapeDtypeStruct((G, H, N, P), F32),
+        ],
+        interpret=interpret,
+    )(cb, cum, bmat, xdt)
+    return y, s

@@ -1,0 +1,448 @@
+"""Post-SPMD HLO cost extractor for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE, even when it
+is a while-loop body with N iterations (verified empirically) — useless for
+scan-over-layers programs.  This module parses ``compiled.as_text()``
+(optimized, *per-device* HLO):
+
+  * builds the computation call graph (fusion ``calls=``, ``while`` body/cond,
+    ``conditional`` branches),
+  * extracts while trip counts from the loop-condition constant,
+  * propagates call multiplicity from ENTRY,
+  * counts dot/convolution FLOPs from operand shapes + contracting dims,
+  * approximates HBM bytes per op as result+operand bytes at fusion
+    boundaries (fusion internals stay in registers/VMEM),
+  * buckets collective bytes by kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute), with replica-group
+    sizes.
+
+All numbers are per-device (the text is the partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> tuple[list[int], str]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], ""
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims, m.group(1)
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+_KERNEL_RE = re.compile(r"(kernel_[\w]+)")
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list[str]
+    attrs: str
+
+    @property
+    def kernel_region(self) -> str | None:
+        """Named-scope Pallas-kernel marker (models/layers.py), if any."""
+        m = _META_RE.search(self.attrs)
+        if not m:
+            return None
+        k = _KERNEL_RE.search(m.group(1))
+        return k.group(1) if k else None
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: dict[str, str] = field(default_factory=dict)   # name -> type
+    ops: list[Op] = field(default_factory=list)
+    symbols: dict[str, str] = field(default_factory=dict)  # name -> type
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            # parameters: "name: type" pairs
+            for pm in re.finditer(r"%?([\w\.\-]+)\s*:\s*([\w\[\],\{\}\/ ]+?)(?:,|\)$|\)\s*->)",
+                                  line):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        _, name, rtype, kind, operand_str, attrs = om.groups()
+        operands = []
+        for tok in operand_str.split(","):
+            tok = tok.strip()
+            m2 = _OPERAND_RE.match(tok)
+            if m2:
+                operands.append(m2.group(1))
+        op = Op(name=name, kind=kind, result_type=rtype,
+                operands=operands, attrs=attrs)
+        cur.ops.append(op)
+        cur.symbols[name] = rtype
+        # parameter ops inside body: "%p = f32[..] parameter(0)"
+        if kind == "parameter":
+            cur.params[name] = rtype
+    return comps
+
+
+def _trip_count(cond: Computation, comps: dict[str, Computation]) -> int:
+    """Largest integer constant in the loop condition (and its callees)."""
+    best = 1
+    seen = set()
+
+    def visit(c: Computation):
+        if c.name in seen:
+            return
+        seen.add(c.name)
+        nonlocal best
+        for op in c.ops:
+            for m in _CONST_RE.finditer(op.kind + "(" + ",".join(op.operands) + ")" + op.attrs):
+                best = max(best, int(m.group(1)))
+            if op.kind == "constant":
+                m = re.search(r"constant\((\d+)\)", f"constant({op.attrs})")
+            cm = _CALLS_RE.search(op.attrs)
+            if cm and cm.group(1) in comps:
+                visit(comps[cm.group(1)])
+        return
+
+    visit(cond)
+    return best
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims, _ = shape_dims(op.result_type)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    cm = _CONTRACT_RE.search(op.attrs)
+    contract = 1
+    if cm and op.operands:
+        lhs_type = comp.symbols.get(op.operands[0], "")
+        lhs_dims, _ = shape_dims(lhs_type)
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * n_out * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_dims, _ = shape_dims(op.result_type)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    rhs_type = comp.symbols.get(op.operands[1], "") if len(op.operands) > 1 else ""
+    rhs_dims, _ = shape_dims(rhs_type)
+    k = 1
+    for d in rhs_dims[:-1]:  # kernel spatial x in-features (approx)
+        k *= d
+    return 2.0 * n_out * k
+
+
+_MOVEMENT = {"parameter", "constant", "bitcast", "tuple", "get-tuple-element",
+             "convert", "copy", "transpose", "reshape", "broadcast", "slice",
+             "dynamic-slice", "iota", "pad"}
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: dict) -> tuple[float, str]:
+    """HBM write cost of a fusion, classified:
+
+    * contains dynamic-update-slice and otherwise only data movement ->
+      in-place on TPU: cost = the update slices' bytes, not the full buffer
+      (scan stashes / cache writes were otherwise counted len(stack)x too big)
+    * pure convert/copy movement -> counted, but tagged 'convert' so the
+      TPU-dtype correction can drop it (bf16 legalization artifact)
+    * anything with math -> full result bytes
+    """
+    cm = _CALLS_RE.search(op.attrs)
+    callee = comps.get(cm.group(1)) if cm else None
+    if callee is None:
+        return shape_bytes(op.result_type), "math"
+    kinds = {o.kind for o in callee.ops}
+    extra = kinds - _MOVEMENT - {"dynamic-update-slice"}
+    if "dynamic-update-slice" in kinds and not extra:
+        b = 0.0
+        for o in callee.ops:
+            if o.kind == "dynamic-update-slice" and len(o.operands) > 1:
+                b += shape_bytes(callee.symbols.get(o.operands[1], ""))
+        return b, "dus"
+    if not extra and "dynamic-update-slice" not in kinds:
+        kind = "convert" if "convert" in kinds else "movement"
+        return shape_bytes(op.result_type), kind
+    return shape_bytes(op.result_type), "math"
+
+
+def analyze(text: str) -> dict:
+    """Returns per-device totals: flops, bytes, collective bytes by kind."""
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # ---- multiplicity propagation -------------------------------------
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    # BFS through call graph, accumulating multiplicity
+    queue = [entry.name]
+    while queue:
+        cname = queue.pop(0)
+        comp = comps[cname]
+        m = mult[cname]
+        for op in comp.ops:
+            callees: list[tuple[str, float]] = []
+            if op.kind == "while":
+                bm = _BODY_RE.search(op.attrs)
+                cm = _COND_RE.search(op.attrs)
+                trips = 1
+                if cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)], comps)
+                if bm and bm.group(1) in comps:
+                    callees.append((bm.group(1), float(trips)))
+                if cm and cm.group(1) in comps:
+                    callees.append((cm.group(1), float(trips + 1)))
+            elif op.kind == "conditional":
+                br = _BRANCH_RE.search(op.attrs)
+                if br:
+                    for b in br.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            callees.append((b, 1.0))
+            else:
+                cm = _CALLS_RE.search(op.attrs)
+                if cm and cm.group(1) in comps:
+                    callees.append((cm.group(1), 1.0))
+            for callee, k in callees:
+                mult[callee] = mult.get(callee, 0.0) + m * k
+                if callee not in seen:
+                    seen.add(callee)
+                    queue.append(callee)
+
+    # ---- cost accumulation --------------------------------------------
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_count: dict[str, int] = {k: 0 for k in COLLECTIVES}
+    group_size: dict[str, int] = {}
+    fused: dict[str, dict] = {}        # kernel marker -> {flops, bytes}
+    # CPU-legalization tracking: XLA CPU has no bf16 ALU, so bf16 dots are
+    # rewritten convert(bf16->f32) + f32 dot (+ convert back).  On TPU those
+    # dots, their collectives, and their materializations are native bf16.
+    bytes_f32_dots = 0.0               # non-fused f32 dot results
+    bytes_converts = 0.0               # top-level convert results
+    coll_f32 = 0.0                     # f32 collective bytes (dot-adjacent)
+
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                cm = _CALLS_RE.search(op.attrs)
+                if cm:
+                    fusion_names.add(cm.group(1))
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = comp.name in fusion_names
+        for op in comp.ops:
+            kind = op.kind
+            region = op.kernel_region
+            if kind == "dot":
+                f = m * _dot_flops(op, comp)
+                flops += f
+                if region:
+                    fused.setdefault(region, {"flops": 0.0, "bytes": 0.0})
+                    fused[region]["flops"] += f
+            elif kind == "convolution":
+                flops += m * _conv_flops(op, comp)
+            # memory: results-only at fusion boundaries (each tensor written
+            # once; reads approximated by the producing op's write — avoids
+            # double counting operands through elementwise chains that a TPU
+            # compile would fuse).  Entry parameters are added once below.
+            # while/conditional results are loop-carry tuples XLA aliases in
+            # place — the body ops' writes are already counted
+            if not in_fusion and kind not in ("parameter", "constant",
+                                              "get-tuple-element", "tuple",
+                                              "bitcast", "copy-start",
+                                              "copy-done", "while",
+                                              "conditional"):
+                if kind == "fusion":
+                    fb, fclass = _fusion_bytes(op, comp, comps)
+                    b = m * fb
+                elif kind == "dynamic-update-slice":
+                    # in-place: the update slice is the real write
+                    fclass = "dus"
+                    b = m * shape_bytes(comp.symbols.get(op.operands[1], "")
+                                        if len(op.operands) > 1 else op.result_type)
+                else:
+                    fclass = kind
+                    b = m * shape_bytes(op.result_type)
+                bytes_accessed += b
+                if region:
+                    fused.setdefault(region, {"flops": 0.0, "bytes": 0.0})
+                    fused[region]["bytes"] += b
+                else:
+                    if kind == "dot" and op.result_type.startswith("f32"):
+                        bytes_f32_dots += b
+                    elif fclass == "convert":
+                        bytes_converts += b
+            for ck in COLLECTIVES:
+                if kind == ck or kind == ck + "-start":
+                    cb = max(shape_bytes(op.result_type),
+                             sum(shape_bytes(comp.symbols.get(o, ""))
+                                 for o in op.operands))
+                    coll[ck] += m * cb
+                    coll_count[ck] += int(m)
+                    if "f32[" in op.result_type and not region:
+                        coll_f32 += m * cb
+                    gm = _GROUPS_RE.search(op.attrs)
+                    if gm:
+                        group_size[ck] = max(
+                            group_size.get(ck, 0),
+                            len([x for x in gm.group(1).split(",") if x]))
+    # entry parameters are read (at least) once per step
+    bytes_accessed += sum(shape_bytes(t) for t in entry.params.values())
+
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "collectives": coll,
+        "collective_counts": coll_count,
+        "collective_group_sizes": group_size,
+        "fused_regions": fused,
+        "bytes_f32_dots": bytes_f32_dots,
+        "bytes_converts": bytes_converts,
+        "collective_f32_bytes": coll_f32,
+        "n_computations": len(comps),
+    }
+
+
+def tpu_dtype_corrected(analysis: dict, grad_dtype_f32: bool = False) -> dict:
+    """Undo XLA-CPU bf16 legalization for the TPU roofline: f32 dot results
+    halve to their semantic bf16 size, legalization converts vanish, and f32
+    collectives (weight gathers / activation reduces that are bf16 on TPU)
+    halve.  ``grad_dtype_f32``: archs accumulating f32 grads keep 25% of the
+    f32-collective discount as genuinely-f32 gradient reductions (bounded
+    estimate, stated in EXPERIMENTS.md)."""
+    coll_discount = analysis["collective_f32_bytes"] * (0.5 if not grad_dtype_f32
+                                                        else 0.375)
+    total_coll = sum(analysis["collectives"].values())
+    scale = (max(total_coll - coll_discount, 0.0) / total_coll
+             if total_coll else 1.0)
+    return {**analysis,
+            "bytes": max(analysis["bytes"] - 0.5 * analysis["bytes_f32_dots"]
+                         - analysis["bytes_converts"], 0.0),
+            "collectives": {k: v * scale
+                            for k, v in analysis["collectives"].items()}}
+
+
+def kernelized(analysis: dict, causal_skip: float = 0.5) -> dict:
+    """Adjusted totals when the marked regions run as the shipped Pallas
+    kernels: region HBM traffic becomes VMEM-resident (boundary q/k/v/o
+    writes are already counted outside the markers; the o-write is folded in,
+    <1% error), and the kernels skip causally-masked blocks — the portable
+    path computes them masked, so region dot FLOPs scale by ``causal_skip``.
+    """
+    out = dict(analysis)
+    fbytes = sum(r["bytes"] for r in analysis.get("fused_regions", {}).values())
+    fflops = sum(r["flops"] for r in analysis.get("fused_regions", {}).values())
+    out = {**analysis,
+           "bytes": max(analysis["bytes"] - fbytes, 0.0),
+           "flops": max(analysis["flops"] - (1 - causal_skip) * fflops, 0.0)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (per the assignment)
+ICI_LINKS = 4             # 2D torus: 4 links/chip usable
+
+
+def roofline_terms(analysis: dict, model_flops_per_device: float | None = None,
+                   dcn_bytes: float = 0.0, dcn_bw: float = 25e9) -> dict:
+    """Convert per-device HLO totals into the three roofline times (s)."""
+    compute_t = analysis["flops"] / PEAK_FLOPS
+    memory_t = analysis["bytes"] / HBM_BW
+    ici_bytes = sum(analysis["collectives"].values())
+    collective_t = ici_bytes / (ICI_BW * ICI_LINKS) + dcn_bytes / dcn_bw
+    bound = max(
+        [("compute", compute_t), ("memory", memory_t),
+         ("collective", collective_t)], key=lambda kv: kv[1])[0]
+    out = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "bound": bound,
+        "hlo_flops": analysis["flops"],
+        "hlo_bytes": analysis["bytes"],
+        "collective_bytes": ici_bytes,
+    }
+    if model_flops_per_device:
+        out["model_flops"] = model_flops_per_device
+        out["useful_ratio"] = model_flops_per_device / max(analysis["flops"], 1.0)
+        # roofline fraction: useful work time / achievable step time
+        step_t = max(compute_t, memory_t, collective_t)
+        out["roofline_fraction"] = (model_flops_per_device / PEAK_FLOPS) / max(step_t, 1e-12)
+    return out

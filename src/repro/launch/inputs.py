@@ -1,0 +1,93 @@
+"""Abstract (ShapeDtypeStruct) inputs for every model step — the dry-run feed.
+
+Weak-type-correct, sharded, zero-allocation stand-ins for params, optimizer
+state, batches and serve caches, per (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.modules import ParamSpec, tree_map_specs
+from repro.optim import adamw
+from repro.launch.shardings import sharding_for, DEFAULT_RULES
+
+
+def _sds(shape, dtype, mesh, axes, rules=None):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), dtype, sharding=sharding_for(shape, axes, mesh, rules))
+
+
+def abstract_params(cfg: ArchConfig, mesh, rules=None):
+    specs = T.build_specs(cfg)
+
+    def one(spec: ParamSpec):
+        return _sds(spec.shape, spec.dtype or cfg.dtype, mesh, spec.axes, rules)
+
+    return tree_map_specs(one, specs)
+
+
+def abstract_opt_state(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, mesh,
+                       rules=None):
+    """Mirrors adamw.init_opt_state structure without allocating."""
+    specs = T.build_specs(cfg)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def moment(spec: ParamSpec):
+        if not opt_cfg.use_8bit:
+            z = _sds(spec.shape, jnp.float32, mesh, spec.axes, rules)
+            return {"m": z, "v": z}
+        q = adamw.block_size(spec.shape[-1])
+        data = _sds(spec.shape, jnp.int8, mesh, spec.axes, rules)
+        scale = _sds((*spec.shape[:-1], spec.shape[-1] // q), jnp.float32,
+                     mesh, spec.axes, rules)
+        return {"m": adamw.Q8(data, scale, q), "r": adamw.Q8(data, scale, q)}
+
+    return {"moments": [moment(s) for s in leaves],
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, rules=None,
+                with_labels: bool = True) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = _sds((B, S, cfg.d_model), cfg.dtype, mesh,
+                               ("batch", "seq", None), rules)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"), rules)
+    if cfg.frontend == "vision":
+        batch["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                 cfg.dtype, mesh,
+                                 ("batch", "frontend_seq", None), rules)
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"), rules)
+    return batch
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int, mesh, rules=None):
+    specs = T.build_cache_specs(cfg, batch, max_seq)
+
+    def one(spec: ParamSpec):
+        return _sds(spec.shape, cfg.dtype, mesh, spec.axes, rules)
+
+    return tree_map_specs(one, specs)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh, rules=None,
+                opt_cfg: adamw.AdamWConfig | None = None) -> tuple:
+    """Positional args matching repro.models.steps.step_for_shape."""
+    params = abstract_params(cfg, mesh, rules)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig(use_8bit=cfg.opt_8bit)
+        opt = abstract_opt_state(cfg, opt_cfg, mesh, rules)
+        return (params, opt, batch_specs(cfg, shape, mesh, rules))
+    if shape.kind == "prefill":
+        return (params, batch_specs(cfg, shape, mesh, rules, with_labels=False))
+    # decode
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, mesh, rules)
+    tokens = _sds((shape.global_batch, 1), jnp.int32, mesh, ("batch", None), rules)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (params, cache, tokens, pos)

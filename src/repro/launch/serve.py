@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill + decode loop with serving-time broker
+telemetry (per-layer residual norms streamed per decode step — the paper's
+"insight into a running job", applied to inference).
+
+Usage:
+  python -m repro.launch.serve --arch starcoder2-3b --preset ci \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import TokenPipeline
+from repro.models import transformer as T
+from repro.models.modules import materialize
+from repro.models.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="starcoder2-3b")
+    p.add_argument("--preset", default="ci", choices=["ci", "full"])
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    args = p.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.preset == "ci":
+        cfg = cfg.reduced()
+    params = materialize(T.build_specs(cfg), jax.random.key(0), cfg.dtype)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    pipe = TokenPipeline(cfg, batch=args.batch, seq=args.prompt_len)
+    batch = pipe.batch_at(0)
+    batch.pop("labels", None)
+
+    t0 = time.time()
+    logits, cache, _ = prefill(params, batch)
+    # pre-extend caches with generation room
+    def extend(c):
+        if c.ndim == 5 and c.shape[2] == args.prompt_len:
+            return jnp.pad(c, [(0, 0), (0, 0), (0, args.gen), (0, 0), (0, 0)])
+        return c
+    cache = jax.tree.map(extend, cache)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    seqs = [np.asarray(tok[:, 0])]
+    t0 = time.time()
+    norms = []
+    for i in range(args.gen - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        nxt, cache, taps = decode(params, cache, tok, pos)
+        norms.append(np.asarray(taps["resid_norm"]).mean())
+        tok = nxt[:, None]
+        seqs.append(np.asarray(nxt))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    out = np.stack(seqs, axis=1)
+    print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
+          f"{t_decode/max(args.gen-1,1)*1e3:.2f} ms/token "
+          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.1f} tok/s)")
+    print(f"[serve] telemetry: mean residual norm per step = "
+          f"{np.mean(norms):.3f} (streamed to broker in production)")
+    print(f"[serve] sample continuation ids: {out[0][:12].tolist()}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

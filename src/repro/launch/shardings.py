@@ -1,0 +1,72 @@
+"""Logical-axis -> mesh-axis rules with divisibility fallback.
+
+Every parameter/activation/cache tensor carries logical axis names
+(``repro.models`` SpecTrees).  ``spec_for`` greedily assigns each logical dim
+the first mesh axes from its rule that (a) are present in the mesh, (b) are
+not already used by another dim of the same tensor, and (c) evenly divide the
+dim.  Indivisible dims fall back to replication — e.g. arctic's 56 q-heads
+would replicate, which is why q-heads are padded to 64 upstream.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis preferences (tuple => may stack axes)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),          # FSDP: weight d_model dims shard over data
+    "heads": ("model",),
+    "kv_heads": (),              # replicated; GQA broadcast is a local slice
+    "head_dim": (),
+    "ffn": ("model",),
+    "ffn_e": (),                 # expert inner dim: model axis is taken by E
+    "experts": ("model",),
+    "vocab": ("model",),
+    "inner": ("model",),         # mamba d_inner
+    "mamba_heads": ("model",),
+    "cache_seq": ("data",),      # seq-shard KV caches when batch can't use data
+    "frontend_seq": (),
+    "layers": (),
+    "seq": (),
+}
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+             rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        assigned: list[str] = []
+        if name is not None:
+            block = 1
+            for ax in rules.get(name, ()):
+                if ax in used or ax not in mesh.shape:
+                    continue
+                size = mesh.shape[ax]
+                if dim % (block * size) == 0:
+                    assigned.append(ax)
+                    used.add(ax)
+                    block *= size
+        if not assigned:
+            parts.append(None)
+        elif len(assigned) == 1:
+            parts.append(assigned[0])
+        else:
+            parts.append(tuple(assigned))
+    return P(*parts)
+
+
+def sharding_for(shape, axes, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(tuple(shape), tuple(axes), mesh, rules))
+
+
+def make_constrain(mesh: Mesh, rules: dict | None = None):
+    """Returns constrain(tensor, logical_axes) for in-graph use."""
+
+    def constrain(t, axes):
+        spec = spec_for(t.shape, tuple(axes), mesh, rules)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return constrain

@@ -1,0 +1,255 @@
+"""Core transformer layers: RMSNorm, RoPE, attention variants, gated MLP.
+
+Attention is implemented as *flash-style chunked attention in pure JAX*
+(``lax.scan`` over KV chunks with an online softmax).  This keeps HLO size and
+peak memory independent of sequence length, which is what makes the 32k/500k
+dry-run cells compile and fit.  The Pallas TPU kernel (``repro.kernels.flash``)
+implements the same contract for real hardware and is validated against
+``repro.kernels.ref`` in CI; the chunked-JNP path is the portable fallback the
+CPU-hosted dry-run lowers.
+
+Head layout & sharding
+----------------------
+Q heads are padded to a multiple of the `model` mesh axis (``Hp``), with the
+pad rows of ``wo`` masked to zero so outputs are exact — this keeps attention
+tensor-parallel even for head counts like 56/40/24 that 16 does not divide.
+Head ``h`` uses KV head ``h // (Hp//K)`` (k-major).  GQA broadcast happens
+per-KV-chunk via ``jnp.repeat`` of a *replicated* (or K-sharded) chunk, which
+GSPMD materializes as a local slice — no collective, no full-size temp.
+Decode uses the grouped ``(B,K,G,D)`` einsum instead (no repeat at all) so a
+seq-sharded cache keeps scores seq-sharded and softmax reduces via GSPMD
+all-reduces (flash-decode equivalent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(F32))).astype(dt)
+
+
+def gated_rms_norm(x: jax.Array, gate: jax.Array, weight: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba2-style: normalize x * silu(gate)."""
+    return rms_norm(x * jax.nn.silu(gate.astype(F32)).astype(x.dtype), weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, head_dim); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., :, None].astype(F32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (pure JAX)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, heads: int) -> jax.Array:
+    """(B, T, K, D) -> (B, T, heads, D), k-major repeat (head h -> kv h//G)."""
+    g = heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def _chunk_attend(q, k, v, mask, scale):
+    """One KV chunk with flat padded heads.  All f32.
+
+    q: (B, Q, H, D); k/v: (B, T, Kh, D); mask: (Q, T) True=keep.
+    Returns row-max m (B,H,Q), exp-sum l (B,H,Q), weighted values o (B,Q,H,D).
+    """
+    H = q.shape[2]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(F32), k.astype(F32),
+                   preferred_element_type=F32) * scale
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                # (B,H,Q)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(m[..., None] > NEG_INF / 2, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p, v.astype(F32))
+    return m, l, o
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int | jax.Array = 0,
+                    kv_len: int | jax.Array | None = None,
+                    chunk: int = 512) -> jax.Array:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, S, H, D); k, v: (B, T, Kh, D) with Kh | H.
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    ``kv_len``: number of valid cache positions (masks the rest).
+    ``window``: sliding-window size (local attention).
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    chunk = min(chunk, T)
+    n_chunks = (T + chunk - 1) // chunk
+    Tp = n_chunks * chunk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, *k.shape[2:]), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, *v.shape[2:]), 1, 0)
+
+    q_pos = q_offset + jnp.arange(S)
+    valid_t = T if kv_len is None else kv_len
+
+    def body(carry, xs):
+        m_prev, l_prev, o_prev = carry
+        kj, vj, j = xs
+        t_pos = j * chunk + jnp.arange(chunk)
+        mask = t_pos[None, :] < valid_t
+        if causal:
+            mask = mask & (t_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (t_pos[None, :] > q_pos[:, None] - window)
+        mask = jnp.broadcast_to(mask, (S, chunk))
+        m_j, l_j, o_j = _chunk_attend(q, kj, vj, mask, scale)
+        m_new = jnp.maximum(m_prev, m_j)
+        a_prev = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+        a_j = jnp.where(m_j > NEG_INF / 2, jnp.exp(m_j - m_new), 0.0)
+        l_new = l_prev * a_prev + l_j * a_j
+        o_new = (o_prev * jnp.moveaxis(a_prev, 1, 2)[..., None]
+                 + o_j * jnp.moveaxis(a_j, 1, 2)[..., None])
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, F32)
+    l0 = jnp.zeros((B, H, S), F32)
+    o0 = jnp.zeros((B, S, H, D), F32)
+    # named scope == Pallas-kernel boundary: everything inside runs
+    # VMEM-resident in kernels/flash.py on TPU; the roofline analyzer uses
+    # the marker to account it as fused (EXPERIMENTS.md §Perf it-2)
+    with jax.named_scope("kernel_flash_kv_scan"):
+        (m, l, o), _ = lax.scan(body, (m0, l0, o0),
+                                (kc, vc, jnp.arange(n_chunks)))
+        l = jnp.maximum(l, 1e-30)
+        o = o / jnp.moveaxis(l, 1, 2)[..., None]
+    return o.astype(q.dtype)
+
+
+def local_block_attention(q, k, v, *, window: int) -> jax.Array:
+    """Banded sliding-window attention: each q block (size=window) attends to
+    itself + the previous block — exact for window <= block size, and only 2x
+    the optimal FLOPs (vs S/window for a full masked matrix)."""
+    B, S, H, D = q.shape
+    w = window
+    if S <= w:  # degenerate: plain causal attention
+        return flash_attention(q, k, v, causal=True, chunk=min(512, S))
+    assert S % w == 0, f"seq {S} % window {w} != 0"
+    nb = S // w
+    Kh = k.shape[2]
+    qb = q.reshape(B, nb, w, H, D)
+    kb = k.reshape(B, nb, w, Kh, D)
+    vb = v.reshape(B, nb, w, Kh, D)
+    k2 = jnp.concatenate([jnp.roll(kb, 1, axis=1), kb], axis=2)  # (B,nb,2w,Kh,D)
+    v2 = jnp.concatenate([jnp.roll(vb, 1, axis=1), vb], axis=2)
+    scale = 1.0 / (D ** 0.5)
+
+    def one_block(args):
+        qi, ki, vi, i = args          # (B,w,H,D), (B,2w,Kh,D)
+        ki = _expand_kv(ki, H)
+        vi = _expand_kv(vi, H)
+        s = jnp.einsum("bqhd,bthd->bhqt", qi.astype(F32), ki.astype(F32),
+                       preferred_element_type=F32) * scale
+        qpos = jnp.arange(w)
+        tpos = jnp.arange(2 * w) - w
+        mask = (tpos[None, :] <= qpos[:, None]) & (tpos[None, :] > qpos[:, None] - w)
+        mask = mask & ((i > 0) | (tpos[None, :] >= 0))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqt,bthd->bqhd", p, vi.astype(F32))
+
+    with jax.named_scope("kernel_local_attn"):
+        o = lax.map(one_block, (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(k2, 1, 0),
+                                jnp.moveaxis(v2, 1, 0), jnp.arange(nb)))
+    return jnp.moveaxis(o, 0, 1).reshape(B, S, H, D).astype(q.dtype)
+
+
+def cross_attention(q, k, v, *, q_chunk: int = 2048) -> jax.Array:
+    """Unmasked cross-attention (text q over frontend kv), q-chunked."""
+    B, S, H, D = q.shape
+    scale = 1.0 / (D ** 0.5)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+
+    def one(qblk):
+        s = jnp.einsum("bqhd,bthd->bhqt", qblk.astype(F32), k.astype(F32),
+                       preferred_element_type=F32) * scale
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqt,bthd->bqhd", p, v.astype(F32))
+
+    qc = min(q_chunk, S)
+    if S <= qc:
+        return one(q).astype(q.dtype)
+    assert S % qc == 0, (S, qc)
+    nq = S // qc
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, H, D), 1, 0)
+    o = lax.map(one, qs)
+    return jnp.moveaxis(o, 0, 1).reshape(B, S, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len, window=None) -> jax.Array:
+    """Single-position attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, T, Kh, D).  Grouped (B,K,G,D) einsum — no KV
+    repeat, scores stay seq-sharded, softmax reduces over the sharded T axis
+    via GSPMD all-reduces (flash-decode equivalent).
+    """
+    B, _, H, D = q.shape
+    T, Kh = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kh
+    scale = 1.0 / (D ** 0.5)
+    qg = q[:, 0].reshape(B, Kh, G, D)                      # k-major: h = k*G+g
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(F32), k_cache.astype(F32),
+                   preferred_element_type=F32) * scale
+    t = jnp.arange(T)[None, None, None, :]
+    mask = t < cache_len
+    if window is not None:
+        mask = mask & (t > cache_len - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(F32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x, w_gate, w_up, w_down) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w_gate).astype(F32)).astype(x.dtype)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", h * u, w_down)

@@ -1,0 +1,156 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked for the MXU.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the recurrence
+is expanded into a masked "attention-like" matmul (MXU-friendly); across
+chunks a ``lax.scan`` carries the (heads, headdim, state) SSM state.  Decode
+is the O(1) recurrent update.
+
+Sharding: d_inner (and thus SSD heads) shard over `model`; B/C projections
+(single group, shared across heads) are replicated; out_proj contracts the
+sharded inner dim → one all-reduce per layer (Megatron-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv via shifts.  x: (B,S,Ch), w: (W,Ch).
+
+    If ``state`` (B, W-1, Ch) is given (decode), it prefixes x.
+    Returns (y, new_state).
+    """
+    W = w.shape[0]
+    if state is not None:
+        xs = jnp.concatenate([state, x], axis=1)             # (B, S+W-1, Ch)
+    else:
+        xs = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xs[:, i:i + S, :] * w[i][None, None, :] for i in range(W))
+    new_state = xs[:, -(W - 1):, :] if W > 1 else None
+    return y, new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs per head; dt: (B,S,H) step sizes (post-softplus, f32);
+    A: (H,) negative decay rates; Bm, Cm: (B,S,N) input/output projections
+    (single group).  Returns y: (B,S,H,P).
+    """
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    S0 = S
+    if S % L:  # pad tail: dt=0 => unit decay, zero update => state-exact
+        pad = L - S % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    xc = xh.reshape(Bb, nc, L, H, P)
+    dtc = dt.reshape(Bb, nc, L, H).astype(F32)
+    Bc = Bm.reshape(Bb, nc, L, N).astype(F32)
+    Cc = Cm.reshape(Bb, nc, L, N).astype(F32)
+
+    a = A[None, None, None, :] * dtc                          # (B,nc,L,H) <= 0
+    cum = jnp.cumsum(a, axis=2)                               # inclusive
+    xdt = (xc.astype(F32) * dtc[..., None])                   # (B,nc,L,H,P)
+
+    # ---- intra-chunk: masked decay "attention" (Pallas-fusable region:
+    # the (L,L,H) decay/score tensors stay in VMEM on TPU)
+    with jax.named_scope("kernel_ssd_intra"):
+        CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=F32)           # (B,nc,L,L)
+        decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        M = CB[..., None] * decay * mask[None, None, :, :, None]
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+        # chunk states: S_c = sum_j exp(cum_L - cum_j) B_j (dt_j x_j)
+        seg = jnp.exp(cum[:, :, -1:, :] - cum)                # (B,nc,L,H)
+        states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, seg, xdt)
+
+    # ---- inter-chunk scan
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(s, inp):
+        st_c, dec = inp                                       # (B,H,P,N),(B,H)
+        s_new = s * dec[..., None, None] + st_c
+        return s_new, s                                       # emit state at chunk START
+
+    s0 = jnp.zeros((Bb, H, P, N), F32)
+    s_final, s_prev = lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                       # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, jnp.exp(cum), s_prev)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)[:, :S0]
+    return y.astype(xh.dtype), s_final
+
+
+def mamba_forward(x, p, cfg, *, mode: str = "train", cache=None,
+                  constrain=lambda t, axes: t):
+    """Full Mamba2 block (pre-norm residual handled by caller).
+
+    x: (B,S,d).  mode: train | prefill | decode.  For decode, ``cache`` holds
+    ``conv_x`` (B,W-1,di), ``conv_bc`` (B,W-1,2N), ``ssm`` (B,H,P,N); prefill
+    emits the same structure.
+    Returns (y (B,S,d), new_cache_or_None, aux_state_norm scalar).
+    """
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.mamba_heads, cfg.mamba_headdim
+    W = cfg.mamba_conv
+
+    zx = jnp.einsum("bsd,dz->bsz", x, p["w_xz"])              # (B,S,2di)
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bsd,dn->bsn", x, p["w_bc"])              # (B,S,2N)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])              # (B,S,H)
+
+    conv_x_state = cache["conv_x"] if mode == "decode" else None
+    conv_bc_state = cache["conv_bc"] if mode == "decode" else None
+    xin, new_conv_x = _causal_conv(xin, p["conv_x"], conv_x_state)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc"], conv_bc_state)
+    xin = jax.nn.silu(xin.astype(F32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(F32)).astype(x.dtype)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(F32))                      # (H,)
+    xh = xin.reshape(B, S, H, P)
+    xh = constrain(xh, ("batch", None, "mamba_heads", None))
+
+    new_cache = None
+    if mode == "decode":  # S == 1, O(1) recurrence
+        s = cache["ssm"].astype(F32)                          # (B,H,P,N)
+        a1 = jnp.exp(A[None, :] * dt[:, 0])                   # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm[:, 0].astype(F32), dt[:, 0],
+                         xh[:, 0].astype(F32))
+        s_new = s * a1[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), s_new)
+        y = y[:, None]                                        # (B,1,H,P)
+        new_cache = {"conv_x": new_conv_x, "conv_bc": new_conv_bc,
+                     "ssm": s_new.astype(cache["ssm"].dtype)}
+        state_norm = jnp.mean(s_new * s_new)
+    else:
+        y, s_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.mamba_chunk)
+        y = y.astype(F32)
+        if mode == "prefill":
+            new_cache = {"conv_x": new_conv_x, "conv_bc": new_conv_bc,
+                         "ssm": s_final.astype(x.dtype)}
+        state_norm = jnp.mean(y * y)
+
+    y = y + p["D"].astype(F32)[None, None, :, None] * xh.astype(F32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    from repro.models.layers import gated_rms_norm
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, new_cache, state_norm

@@ -1,0 +1,79 @@
+"""Minimal pure-JAX parameter/module system.
+
+Parameters are nested dicts of arrays.  Each leaf has a parallel
+:class:`ParamSpec` describing its shape, dtype, init scale and **logical axis
+names** — the sharding layer (``repro.launch.shardings``) maps logical names to
+mesh axes with divisibility fallback.  This mirrors MaxText's
+``logical_axis_rules`` without a flax dependency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones | small_normal
+    scale: float | None = None            # None -> 1/sqrt(fan_in)
+    dtype: Any = None                     # None -> model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+SpecTree = dict  # nested dict[str, ParamSpec | SpecTree]
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs: SpecTree):
+    """Map over a spec tree, preserving structure."""
+    return jax.tree.map(fn, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def materialize(specs: SpecTree, key: jax.Array, dtype) -> dict:
+    """Randomly initialize a parameter tree from its specs."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+            if spec.init == "small_normal":
+                scale = 0.02
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(specs: SpecTree, dtype, sharding_fn=None) -> dict:
+    """ShapeDtypeStruct tree (optionally with shardings) — no allocation."""
+
+    def one(spec: ParamSpec):
+        dt = spec.dtype or dtype
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(spec.shape, dt)
+        return jax.ShapeDtypeStruct(spec.shape, dt, sharding=sharding_fn(spec))
+
+    return tree_map_specs(one, specs)
+
+
+def param_bytes(specs: SpecTree, dtype) -> int:
+    total = 0
+    for spec in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        dt = np.dtype(spec.dtype or dtype)
+        total += int(np.prod(spec.shape)) * dt.itemsize
+    return total

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts MLP — GShard-style grouped one-hot dispatch.
+
+Tokens are split into groups of ``group_size``; each group dispatches into a
+per-expert capacity buffer via one-hot einsums.  Expert weights shard over the
+``model`` mesh axis (EP); the all-to-all emerges from GSPMD resharding the
+dispatched ``(E, B, G, C, d)`` tensor from data- to model-major.  Grouping
+bounds both the dispatch-tensor memory and the dispatch FLOPs (C scales with
+group size, total dispatch work scales with S*C ∝ S²/n_groups).
+
+This is the *baseline* (paper-era, GShard-faithful) routing.  Its dispatch
+einsum FLOPs are visible in the roofline useful-compute ratio and are a
+hillclimb target (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+F32 = jnp.float32
+
+
+def capacity(group_size: int, n_experts: int, k: int, factor: float) -> int:
+    c = int(math.ceil(k * group_size * factor / n_experts))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def _expert_ffn(xe, w_gate, w_up, w_down):
+    """xe: (E, ..., d) batched gated FFN per expert."""
+    h = jax.nn.silu(jnp.einsum("e...d,edf->e...f", xe, w_gate).astype(F32)
+                    ).astype(xe.dtype)
+    u = jnp.einsum("e...d,edf->e...f", xe, w_up)
+    return jnp.einsum("e...f,efd->e...d", h * u, w_down)
+
+
+def moe_mlp_scatter(x: jax.Array, router: jax.Array,
+                    w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+                    n_experts: int, k: int, capacity_factor: float = 1.25,
+                    group_size: int = 1024,
+                    constrain=lambda t, axes: t):
+    """Scatter/gather (sort-free dropless-with-capacity) routing.
+
+    Replaces the GShard one-hot dispatch/combine einsums — whose FLOPs are
+    2*T*E*C*d *each* and whose (T,E,C) one-hot tensors dominate MoE HBM
+    traffic — with capacity-binned scatter + gather (zero matmul FLOPs, O(T*d)
+    traffic).  §Perf iteration 4; the einsum path remains the paper-era
+    baseline (``moe_mlp``).
+    """
+    B, S, d = x.shape
+    E = n_experts
+    gs = min(group_size, S)
+    assert S % gs == 0, (S, gs)
+    ng = S // gs
+    C = capacity(gs, E, k, capacity_factor)
+
+    xg = x.reshape(B, ng, gs, d)
+    logits = jnp.einsum("bnsd,de->bnse", xg, router,
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, k)                        # (B,ng,gs,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its expert's capacity bin
+    counts = jnp.zeros((B, ng, E), F32)
+    dests, keeps = [], []
+    for ki in range(k):
+        oh = jax.nn.one_hot(top_i[..., ki], E, dtype=F32)     # (B,ng,gs,E)
+        pos = jnp.cumsum(oh, axis=2) - oh + counts[:, :, None]
+        pos_tok = jnp.sum(pos * oh, axis=-1)                  # (B,ng,gs)
+        keep = pos_tok < C
+        dests.append(top_i[..., ki] * C + pos_tok.astype(jnp.int32))
+        keeps.append(keep)
+        counts = counts + jnp.sum(oh, axis=2)
+    dest = jnp.stack(dests, axis=-1)                          # (B,ng,gs,k)
+    keep = jnp.stack(keeps, axis=-1)
+    dest = jnp.where(keep, dest, E * C)                       # overflow slot
+
+    # scatter tokens into capacity bins: (B,ng,E*C+1,d)
+    buf = jnp.zeros((B, ng, E * C + 1, d), x.dtype)
+    tok_idx = jnp.broadcast_to(jnp.arange(gs)[None, None, :, None],
+                               (B, ng, gs, k))
+    buf = buf.at[
+        jnp.arange(B)[:, None, None, None],
+        jnp.arange(ng)[None, :, None, None],
+        dest, :].set(xg[jnp.arange(B)[:, None, None, None],
+                        jnp.arange(ng)[None, :, None, None], tok_idx])
+    xe = buf[:, :, : E * C].reshape(B, ng, E, C, d)
+    xe = jnp.moveaxis(xe, 2, 0)                               # (E,B,ng,C,d)
+    xe = constrain(xe, ("experts", "batch", None, None, None))
+    ye = _expert_ffn(xe, w_gate, w_up, w_down)
+    ye = constrain(ye, ("experts", "batch", None, None, None))
+    yb = jnp.moveaxis(ye, 0, 2).reshape(B, ng, E * C, d)
+    yb = jnp.concatenate([yb, jnp.zeros((B, ng, 1, d), yb.dtype)], axis=2)
+
+    # gather each choice's output back to its token, weighted by router prob
+    out = jnp.zeros((B, ng, gs, d), F32)
+    for ki in range(k):
+        got = jnp.take_along_axis(yb, dest[..., ki][..., None], axis=2)
+        out = out + top_p[..., ki][..., None] * got.astype(F32)
+
+    top1 = jax.nn.one_hot(top_i[..., 0], E, dtype=F32)
+    f_e = jnp.mean(top1, axis=(0, 1, 2))
+    p_e = jnp.mean(probs, axis=(0, 1, 2))
+    aux = E * jnp.sum(f_e * p_e)
+    return out.astype(x.dtype).reshape(B, S, d), aux
+
+
+def moe_mlp(x: jax.Array, router: jax.Array,
+            w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array, *,
+            n_experts: int, k: int, capacity_factor: float = 1.25,
+            group_size: int = 1024,
+            constrain=lambda t, axes: t):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    router: (d, E); w_gate/w_up: (E, d, f); w_down: (E, f, d).
+    ``constrain(tensor, logical_axes)`` applies sharding constraints.
+    """
+    B, S, d = x.shape
+    E = n_experts
+    gs = min(group_size, S)
+    assert S % gs == 0, (S, gs)
+    ng = S // gs
+    C = capacity(gs, E, k, capacity_factor)
+
+    xg = x.reshape(B, ng, gs, d)
+    logits = jnp.einsum("bnsd,de->bnse", xg, router,
+                        preferred_element_type=F32)          # (B,ng,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, k)                        # (B,ng,gs,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- capacity assignment (per group), GShard order: k-th choice after all
+    # (k-1)-th choices.  The (gs,E,C) combine tensor is built in the model
+    # dtype: probabilities and one-hots are bf16-exact enough, and this
+    # tensor dominates MoE HBM traffic (§Perf it-5).
+    combine = jnp.zeros((B, ng, gs, E, C), x.dtype)
+    counts = jnp.zeros((B, ng, E), F32)                       # expert fill
+    for ki in range(k):
+        oh = jax.nn.one_hot(top_i[..., ki], E, dtype=F32)     # (B,ng,gs,E)
+        pos = jnp.cumsum(oh, axis=2) - oh + counts[:, :, None]
+        keep = oh * (pos < C)
+        slot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype)
+        combine = combine + (top_p[..., ki, None, None]
+                             * keep[..., None]).astype(x.dtype) * slot
+        counts = counts + jnp.sum(oh, axis=2)
+
+    dispatch = (combine > 0).astype(x.dtype)                  # (B,ng,gs,E,C)
+    xe = jnp.einsum("bnsec,bnsd->ebncd", dispatch, xg)        # (E,B,ng,C,d)
+    xe = constrain(xe, ("experts", "batch", None, None, None))
+    ye = _expert_ffn(xe, w_gate, w_up, w_down)                # (E,B,ng,C,d)
+    ye = constrain(ye, ("experts", "batch", None, None, None))
+    y = jnp.einsum("bnsec,ebncd->bnsd", combine.astype(x.dtype), ye)
+
+    # load-balance aux loss (Switch/GShard): E * sum_e f_e * p_e
+    top1 = jax.nn.one_hot(top_i[..., 0], E, dtype=F32)
+    f_e = jnp.mean(top1, axis=(0, 1, 2))                      # fraction routed
+    p_e = jnp.mean(probs, axis=(0, 1, 2))                     # mean router prob
+    aux = E * jnp.sum(f_e * p_e)
+    return y.reshape(B, S, d), aux

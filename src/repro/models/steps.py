@@ -1,0 +1,93 @@
+"""Step factories: build jitted train / prefill / decode steps for an arch.
+
+``make_train_step`` closes over (cfg, optimizer config, constrain) and
+implements gradient accumulation over microbatches with ``lax.scan`` — the
+activation-memory knob that fits the 398–480B archs on 16 GB v5e chips.
+Every step also returns the broker ``taps`` pytree (the paper's in-graph field
+extraction); the host-side broker streams the addressable shards.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+
+F32 = jnp.float32
+
+
+def _split_microbatches(batch: dict, n_mb: int) -> dict:
+    def split(x):
+        return x.reshape(n_mb, x.shape[0] // n_mb, *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1,
+                    constrain: T.Constrain = T._ID) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics, taps)."""
+
+    accum_dtype = jnp.bfloat16 if cfg.opt_8bit else F32
+
+    def loss(params, mb):
+        return T.loss_fn(cfg, params, mb, constrain=constrain)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            (_, (metrics, taps)), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, n_microbatches)
+
+            def body(carry, mb):
+                acc = carry
+                (_, (metrics, taps)), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), acc, grads)
+                return acc, (metrics, taps)
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            grads, (metrics_all, taps_all) = jax.lax.scan(body, acc0, mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            metrics = jax.tree.map(lambda x: x[-1], metrics_all)
+            taps = jax.tree.map(lambda x: x[-1], taps_all)
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics, taps
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, constrain: T.Constrain = T._ID) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, constrain=constrain)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, constrain: T.Constrain = T._ID) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(cfg, params, cache, tokens, pos,
+                             constrain=constrain)
+    return serve_step
+
+
+def step_for_shape(cfg: ArchConfig, shape: ShapeConfig,
+                   constrain: T.Constrain = T._ID,
+                   opt_cfg: adamw.AdamWConfig | None = None) -> Callable:
+    """The lowerable callable for a dry-run cell."""
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig(use_8bit=cfg.opt_8bit)
+        return make_train_step(cfg, opt_cfg, shape.microbatches, constrain)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, constrain)
+    return make_decode_step(cfg, constrain)

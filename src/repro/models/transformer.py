@@ -1,0 +1,438 @@
+"""Unified decoder stack covering all 10 assigned architectures.
+
+Layers are grouped into the arch's repeating ``pattern`` of slots; per-slot
+parameters are stacked across ``n_repeat`` repeats and the stack runs under
+``lax.scan`` (optionally ``jax.checkpoint``-ed), keeping HLO size O(pattern).
+
+Three modes share one trunk:
+  * ``train``   — full-seq forward, loss, no cache
+  * ``prefill`` — full-seq forward, emits KV/SSM caches + last-position logits
+  * ``decode``  — single token, reads+updates caches
+
+Broker taps (the paper's technique): every repeat emits a per-sample residual
+norm and a strided ``snapshot`` vector.  Batch stays sharded over ``data``, so
+each data-slice of the mesh is a "process region" in ElasticBroker terms — the
+host-side broker (repro.core) fetches its addressable shards and streams them
+to Cloud endpoints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, LayerSpec, ATTN_GLOBAL, ATTN_LOCAL, MAMBA
+from repro.models import layers as L
+from repro.models.modules import ParamSpec, SpecTree
+from repro.models.moe import moe_mlp, moe_mlp_scatter
+from repro.models.mamba import mamba_forward
+
+F32 = jnp.float32
+Constrain = Callable[[jax.Array, tuple], jax.Array]
+_ID: Constrain = lambda t, axes: t
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def build_specs(cfg: ArchConfig) -> SpecTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    Hp, K = cfg.padded_heads, cfg.n_kv_heads
+    R = cfg.n_repeat
+    Vp = cfg.padded_vocab
+
+    def P(*shape, axes, **kw):
+        return ParamSpec((R, *shape), ("layers", *axes), **kw)
+
+    def attn_specs(prefix=""):
+        return {
+            prefix + "wq": P(d, Hp, hd, axes=("embed", "heads", "head_dim")),
+            prefix + "wk": P(d, K, hd, axes=("embed", "kv_heads", "head_dim")),
+            prefix + "wv": P(d, K, hd, axes=("embed", "kv_heads", "head_dim")),
+            prefix + "wo": P(Hp, hd, d, axes=("heads", "head_dim", "embed")),
+        }
+
+    def mlp_specs():
+        return {
+            "w_gate": P(d, cfg.d_ff, axes=("embed", "ffn")),
+            "w_up": P(d, cfg.d_ff, axes=("embed", "ffn")),
+            "w_down": P(cfg.d_ff, d, axes=("ffn", "embed")),
+        }
+
+    def moe_specs():
+        f = cfg.moe_d_ff or cfg.d_ff
+        E = cfg.n_experts
+        sp = {
+            "router": P(d, E, axes=("embed", "experts"), init="small_normal"),
+            "e_gate": P(E, d, f, axes=("experts", "embed", "ffn_e")),
+            "e_up": P(E, d, f, axes=("experts", "embed", "ffn_e")),
+            "e_down": P(E, f, d, axes=("experts", "ffn_e", "embed")),
+        }
+        if cfg.moe_dense_residual:
+            sp.update({k + "_res": v for k, v in mlp_specs().items()})
+        return sp
+
+    def mamba_specs():
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+        return {
+            "w_xz": P(d, 2 * di, axes=("embed", "inner")),
+            "w_bc": P(d, 2 * N, axes=("embed", None)),
+            "w_dt": P(d, H, axes=("embed", "mamba_heads"), init="small_normal"),
+            "conv_x": P(cfg.mamba_conv, di, axes=(None, "inner"), init="small_normal"),
+            "conv_bc": P(cfg.mamba_conv, 2 * N, axes=(None, None), init="small_normal"),
+            "A_log": P(H, axes=("mamba_heads",), init="zeros"),
+            "D": P(H, axes=("mamba_heads",), init="zeros"),
+            "dt_bias": P(H, axes=("mamba_heads",), init="zeros"),
+            "norm": P(di, axes=("inner",), init="zeros"),
+            "w_out": P(di, d, axes=("inner", "embed")),
+        }
+
+    slots = []
+    for slot in cfg.pattern:
+        sp: dict[str, Any] = {"norm1": P(d, axes=("embed",), init="zeros")}
+        if slot.kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            sp.update(attn_specs())
+        elif slot.kind == MAMBA:
+            sp.update(mamba_specs())
+        if slot.cross_attn:
+            sp["xnorm"] = P(d, axes=("embed",), init="zeros")
+            sp.update(attn_specs("x"))
+        if cfg.d_ff or (slot.moe and cfg.n_experts):
+            sp["norm2"] = P(d, axes=("embed",), init="zeros")
+            sp.update(moe_specs() if (slot.moe and cfg.n_experts) else mlp_specs())
+        slots.append(sp)
+
+    specs: SpecTree = {
+        "embed": ParamSpec((Vp, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros"),
+        "slots": tuple(slots),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, Vp), ("embed", "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def build_cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> SpecTree:
+    """Spec tree for the serve-time cache (logical axes included)."""
+    hd, K, R = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_repeat
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, Pd, W = cfg.mamba_heads, cfg.mamba_headdim, cfg.mamba_conv
+
+    def C(*shape, axes):
+        return ParamSpec((R, *shape), ("layers", *axes))
+
+    slots = []
+    for slot in cfg.pattern:
+        sp = {}
+        if slot.kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            sp["k"] = C(batch, max_seq, K, hd,
+                        axes=("batch", "cache_seq", "kv_heads", "head_dim"))
+            sp["v"] = C(batch, max_seq, K, hd,
+                        axes=("batch", "cache_seq", "kv_heads", "head_dim"))
+        elif slot.kind == MAMBA:
+            sp["conv_x"] = C(batch, W - 1, di, axes=("batch", None, "inner"))
+            sp["conv_bc"] = C(batch, W - 1, 2 * N, axes=("batch", None, None))
+            sp["ssm"] = C(batch, H, Pd, N,
+                          axes=("batch", "mamba_heads", None, None))
+        if slot.cross_attn:
+            sp["xk"] = C(batch, cfg.n_frontend_tokens, K, hd,
+                         axes=("batch", None, "kv_heads", "head_dim"))
+            sp["xv"] = C(batch, cfg.n_frontend_tokens, K, hd,
+                         axes=("batch", None, "kv_heads", "head_dim"))
+        slots.append(sp)
+    return {"slots": tuple(slots)}
+
+
+# ---------------------------------------------------------------------------
+# Slot application
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Ctx:
+    cfg: ArchConfig
+    mode: str                          # train | prefill | decode
+    positions: jax.Array               # (S,) absolute positions
+    pos: Any = None                    # decode write index (scalar) or None
+    frontend: Any = None               # (B, Tf, d) embeddings or None
+    constrain: Constrain = _ID
+
+
+def _project_qkv(p, x, ctx, prefix=""):
+    cfg = ctx.cfg
+    q = jnp.einsum("bsd,dhe->bshe", x, p[prefix + "wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p[prefix + "wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p[prefix + "wv"])
+    return q, k, v
+
+
+def _out_proj(p, o, ctx, prefix=""):
+    """Heads are laid out kv-group-major: h = k*Gp + g with Gp = Hp/K slots
+    per kv head, of which G_real = H/K are real — so padded heads keep the
+    canonical GQA mapping (head h -> kv h//G_real among real heads).  Pad
+    slots (g >= G_real) are masked to zero here, making outputs exact."""
+    cfg = ctx.cfg
+    Hp, K = cfg.padded_heads, cfg.n_kv_heads
+    gp, g_real = Hp // K, cfg.n_heads // K
+    mask = ((jnp.arange(Hp) % gp) < g_real).astype(o.dtype)
+    wo = p[prefix + "wo"] * mask[:, None, None]
+    return jnp.einsum("bshe,hed->bsd", o, wo)
+
+
+def _self_attention(slot: LayerSpec, p, h, ctx: Ctx, cache):
+    cfg = ctx.cfg
+    x = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, x, ctx)
+    q = L.apply_rope(q, ctx.positions, cfg.rope_theta)
+    k = L.apply_rope(k, ctx.positions, cfg.rope_theta)
+    window = cfg.local_window if slot.kind == ATTN_LOCAL else None
+    new_cache = {}
+    if ctx.mode == "decode":
+        kc = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, ctx.pos, 0, 0))
+        vc = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, ctx.pos, 0, 0))
+        o = L.decode_attention(q, kc, vc, cache_len=ctx.pos + 1, window=window)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        if slot.kind == ATTN_LOCAL:
+            o = L.local_block_attention(q, k, v, window=window)
+        else:
+            o = L.flash_attention(q, k, v, causal=True)
+        if ctx.mode == "prefill":
+            new_cache = {"k": k.astype(h.dtype), "v": v.astype(h.dtype)}
+    return h + _out_proj(p, o, ctx), new_cache
+
+
+def _cross_attention(p, h, ctx: Ctx, cache):
+    cfg = ctx.cfg
+    x = L.rms_norm(h, p["xnorm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["xwq"])
+    new_cache = {}
+    if ctx.mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+        new_cache = {"xk": xk, "xv": xv}
+    else:
+        f = ctx.frontend
+        xk = jnp.einsum("btd,dke->btke", f, p["xwk"])
+        xv = jnp.einsum("btd,dke->btke", f, p["xwv"])
+        if ctx.mode == "prefill":
+            new_cache = {"xk": xk.astype(h.dtype), "xv": xv.astype(h.dtype)}
+    o = L.cross_attention(q, xk, xv)
+    return h + _out_proj(p, o, ctx, "x"), new_cache
+
+
+def _mlp_block(slot: LayerSpec, p, h, ctx: Ctx):
+    cfg = ctx.cfg
+    if not (cfg.d_ff or (slot.moe and cfg.n_experts)):
+        return h, jnp.zeros((), F32)
+    x = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+    aux = jnp.zeros((), F32)
+    if slot.moe and cfg.n_experts:
+        impl = moe_mlp_scatter if cfg.moe_impl == "scatter" else moe_mlp
+        y, aux = impl(
+            x, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+            n_experts=cfg.n_experts, k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size if ctx.mode != "decode" else 1,
+            constrain=ctx.constrain)
+        if cfg.moe_dense_residual:
+            y = y + L.gated_mlp(x, p["w_gate_res"], p["w_up_res"], p["w_down_res"])
+    else:
+        y = L.gated_mlp(x, p["w_gate"], p["w_up"], p["w_down"])
+    return h + y, aux
+
+
+def apply_slot(slot: LayerSpec, p, h, ctx: Ctx, cache):
+    """Returns (h, new_cache, aux_loss, tap_scalar)."""
+    aux = jnp.zeros((), F32)
+    new_cache = {}
+    if slot.kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        h, nc = _self_attention(slot, p, h, ctx, cache)
+        new_cache.update(nc)
+    elif slot.kind == MAMBA:
+        x = L.rms_norm(h, p["norm1"], ctx.cfg.norm_eps)
+        y, mc, _ = mamba_forward(x, p, ctx.cfg,
+                                 mode=ctx.mode, cache=cache or None,
+                                 constrain=ctx.constrain)
+        h = h + y
+        if mc is not None:
+            new_cache.update(mc)
+    if slot.cross_attn:
+        h, nc = _cross_attention(p, h, ctx, cache)
+        new_cache.update(nc)
+    h, moe_aux = _mlp_block(slot, p, h, ctx)
+    return h, new_cache, aux + moe_aux
+
+
+# ---------------------------------------------------------------------------
+# Trunk
+# ---------------------------------------------------------------------------
+
+def _tap(cfg: ArchConfig, h: jax.Array) -> dict:
+    """Per-sample field tap: residual norm + strided snapshot (B, tap_dim)."""
+    hf = h.astype(F32)
+    norm = jnp.sqrt(jnp.mean(hf * hf, axis=(1, 2)))           # (B,)
+    stride = max(1, cfg.d_model // cfg.tap_snapshot_dim)
+    snap = jnp.mean(hf, axis=1)[:, ::stride][:, : cfg.tap_snapshot_dim]
+    return {"resid_norm": norm, "snapshot": snap}
+
+
+def trunk(cfg: ArchConfig, params, h, ctx: Ctx, cache=None):
+    """Scan the stacked pattern over repeats.
+
+    h: (B, S, d).  cache: stacked cache pytree or None.
+    Returns (h, new_cache_or_None, aux_loss, taps).
+    """
+    slots_params = params["slots"]
+    have_cache = cache is not None
+    xs = (slots_params, cache["slots"]) if have_cache else (slots_params,)
+
+    # group k=remat_block repeats per checkpointed scan step (train only):
+    # boundary stash shrinks k-fold at no extra recompute
+    k = cfg.remat_block if (ctx.mode == "train" and cfg.remat
+                            and cfg.n_repeat % max(cfg.remat_block, 1) == 0) else 1
+
+    # Activation layout: train/prefill shard the batch (data-parallel).
+    # Decode is weight-stationary: activations are tiny (B,1,d), so we shard
+    # their *feature* dim over `data` to line up with the FSDP weight shards —
+    # GSPMD then computes partial sums and all-reduces the (B,1,f) activations
+    # instead of all-gathering ~50 GB of weights per token (§Perf it-6).
+    act_axes = (("batch", None, None) if ctx.mode != "decode"
+                else (None, None, "embed"))
+
+    def one_repeat(x, sp, cs):
+        new_cs = []
+        aux = jnp.zeros((), F32)
+        for i, slot in enumerate(cfg.pattern):
+            x = ctx.constrain(x, act_axes)
+            x, nc, a = apply_slot(slot, sp[i], x, ctx, cs[i])
+            new_cs.append(nc)
+            aux = aux + a
+        return x, tuple(new_cs), aux
+
+    def block(carry, xs_slice):
+        x = carry
+        sp = xs_slice[0]
+        cs = xs_slice[1] if have_cache else None
+        aux = jnp.zeros((), F32)
+        if k == 1:
+            x, new_cs, aux = one_repeat(
+                x, sp, cs if cs is not None else tuple({} for _ in cfg.pattern))
+        else:  # k inner repeats; params carry a (k, ...) leading dim
+            for j in range(k):
+                spj = jax.tree.map(lambda t: t[j], sp)
+                x, _, a = one_repeat(x, spj, tuple({} for _ in cfg.pattern))
+                aux = aux + a
+            new_cs = tuple({} for _ in cfg.pattern)
+        ys = {"aux": aux, "tap": _tap(cfg, x)}
+        if have_cache or ctx.mode == "prefill":
+            ys["cache"] = new_cs
+        return x, ys
+
+    if k > 1:
+        xs = jax.tree.map(
+            lambda t: t.reshape(cfg.n_repeat // k, k, *t.shape[1:]), xs)
+    block_fn = jax.checkpoint(block) if (cfg.remat and ctx.mode == "train") else block
+    h, ys = lax.scan(block_fn, h, xs)
+    new_cache = {"slots": ys["cache"]} if "cache" in ys else None
+    return h, new_cache, jnp.sum(ys["aux"]), ys["tap"]
+
+
+@jax.custom_vjp
+def _grad_barrier_bf16(x):
+    """Identity fwd; casts the cotangent to bf16.
+
+    Without this, the f32 loss head poisons the whole backward pass: dot
+    cotangents stay f32, so every bwd weight all-gather, dx all-reduce and
+    grad reduction moves twice the bytes (measured: llama3 train collectives
+    were 100% f32 — EXPERIMENTS.md §Perf iteration 1)."""
+    return x
+
+
+def _gb_fwd(x):
+    return x, None
+
+
+def _gb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_grad_barrier_bf16.defvjp(_gb_fwd, _gb_bwd)
+
+
+def embed_inputs(cfg: ArchConfig, params, batch: dict, ctx: Ctx) -> jax.Array:
+    """tokens (B,S) -> (B,S,d); audio frontend feeds embeddings directly."""
+    if cfg.frontend == "audio" and "frames" in batch:
+        return batch["frames"].astype(cfg.dtype)
+    tok = batch["tokens"]
+    h = jnp.take(params["embed"], tok, axis=0)
+    return ctx.constrain(h, ("batch", None, None))
+
+
+def lm_head(cfg: ArchConfig, params, h: jax.Array) -> jax.Array:
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["head"] if "head" in params else params["embed"].T
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=F32)
+
+
+# ---------------------------------------------------------------------------
+# Top-level model functions
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ArchConfig, params, batch: dict, constrain: Constrain = _ID):
+    """Train-mode forward + softmax xent (+ z-loss + MoE aux)."""
+    S = (batch["frames"].shape[1] if cfg.frontend == "audio" and "frames" in batch
+         else batch["tokens"].shape[1])
+    ctx = Ctx(cfg=cfg, mode="train", positions=jnp.arange(S),
+              frontend=batch.get("frontend"), constrain=constrain)
+    h = embed_inputs(cfg, params, batch, ctx)
+    h, _, aux, taps = trunk(cfg, params, h, ctx)
+    if cfg.dtype == jnp.bfloat16:
+        h = _grad_barrier_bf16(h)   # keep the trunk backward pass in bf16
+    logits = lm_head(cfg, params, h)                          # (B,S,Vp) f32
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(F32)
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)                   # (B,S)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    xent = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    zloss = 1e-4 * jnp.mean(lse * lse)
+    total = xent + zloss + 0.01 * aux
+    metrics = {"loss": xent, "zloss": zloss, "moe_aux": aux}
+    return total, (metrics, taps)
+
+
+def prefill(cfg: ArchConfig, params, batch: dict, constrain: Constrain = _ID):
+    """Fill caches for S tokens; return last-position logits + cache + taps."""
+    S = (batch["frames"].shape[1] if cfg.frontend == "audio" and "frames" in batch
+         else batch["tokens"].shape[1])
+    ctx = Ctx(cfg=cfg, mode="prefill", positions=jnp.arange(S),
+              frontend=batch.get("frontend"), constrain=constrain)
+    h = embed_inputs(cfg, params, batch, ctx)
+    h, cache, _, taps = trunk(cfg, params, h, ctx)
+    logits = lm_head(cfg, params, h[:, -1:, :])
+    return logits[:, 0], cache, taps
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos,
+                constrain: Constrain = _ID, frontend=None):
+    """One decode step: tokens (B,1) at absolute position ``pos``.
+
+    Returns (next_tokens (B,), new_cache, taps).
+    """
+    ctx = Ctx(cfg=cfg, mode="decode", positions=pos + jnp.arange(1), pos=pos,
+              frontend=frontend, constrain=constrain)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = constrain(h, ("batch", None, None))
+    h, new_cache, _, taps = trunk(cfg, params, h, ctx, cache=cache)
+    logits = lm_head(cfg, params, h)                          # (B,1,Vp)
+    nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+    return nxt, new_cache, taps

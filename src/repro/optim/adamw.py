@@ -1,0 +1,169 @@
+"""AdamW on parameter pytrees, with optional 8-bit block-quantized moments.
+
+The 8-bit path stores m/v as int8 + per-block f32 scales (block = 256
+elements along the flattened trailing axis), the same scheme as the
+``repro.kernels.quant`` Pallas kernel uses on real TPU for stream-record and
+cross-pod gradient compression.  For the 398–480B archs this is what makes
+optimizer state fit 16 GB v5e HBM at 256-way sharding:
+bf16 params (2) + grads (2) + int8 m (1) + int8 v (1) ≈ 6 bytes/param.
+
+Optimizer moments are stored as a *list aligned with the flattened param
+leaves* (not a mirrored tree) so quantized and dense leaves coexist cleanly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+QBLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# 8-bit blockwise codec (pure jnp; kernels/quant.py is the TPU Pallas version)
+# ---------------------------------------------------------------------------
+
+def block_size(last_dim: int, max_shards: int = 16) -> int:
+    """Quantization block along the last axis: the largest power-of-2 divisor
+    of the *per-shard* extent (assuming up to ``max_shards``-way sharding),
+    capped at QBLOCK — so the block reshape never crosses shard boundaries and
+    the moments keep exactly the param's sharding."""
+    l = last_dim // max_shards if last_dim % max_shards == 0 else last_dim
+    q = 1
+    while l % 2 == 0 and q < QBLOCK:
+        q *= 2
+        l //= 2
+    return max(q, 1)
+
+
+@jax.tree_util.register_pytree_node_class
+class Q8:
+    """int8 blockwise tensor.  ``data`` keeps the ORIGINAL param shape (and
+    thus the param's sharding); ``scale`` is f32 per block of ``q`` along the
+    last axis: shape = data.shape[:-1] + (last/q,)."""
+
+    def __init__(self, data, scale, q):
+        self.data = data
+        self.scale = scale
+        self.q = int(q)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), self.q
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def __repr__(self):
+        return f"Q8(shape={getattr(self.data, 'shape', '?')}, q={self.q})"
+
+
+def q8_encode(x: jax.Array) -> Q8:
+    shape = x.shape
+    q = block_size(shape[-1])
+    blocks = x.astype(F32).reshape(*shape[:-1], shape[-1] // q, q)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), 1e-20) / 127.0
+    data = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return Q8(data.astype(jnp.int8).reshape(shape), scale, q)
+
+
+def q8_decode(z: Q8) -> jax.Array:
+    shape = z.data.shape
+    blocks = z.data.astype(F32).reshape(*shape[:-1], shape[-1] // z.q, z.q)
+    return (blocks * z.scale[..., None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, F32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    use_8bit: bool = False
+
+
+def _decays(path) -> bool:
+    """Weight decay only for matmul weights (skip norms / SSM scalars)."""
+    name = str(path[-1]) if path else ""
+    return not any(s in name for s in ("norm", "A_log", "'D'", "dt_bias", "embed"))
+
+
+def init_opt_state(cfg: AdamWConfig, params):
+    """8-bit moments store m and sqrt(v): quantizing the *root* halves v's
+    dynamic range in log-space, so small-|g| elements don't round to zero
+    inside large blocks (which would explode m/sqrt(v) — the classic 8-bit
+    Adam failure).  Update clipping below is the second guard."""
+    def one(p):
+        z = jnp.zeros(p.shape, F32)
+        if cfg.use_8bit:
+            return {"m": q8_encode(z), "r": q8_encode(z)}
+        return {"m": z, "v": z}
+
+    moments = [one(p) for p in jax.tree.leaves(params)]
+    return {"moments": moments, "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = cosine_schedule(cfg.lr, cfg.warmup_steps, cfg.total_steps)(step)
+
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_leaves = jax.tree.leaves(grads)
+    assert len(g_leaves) == len(paths_and_leaves)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(F32) ** 2) for g in g_leaves))
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1 - cfg.b1 ** step.astype(F32)
+    bc2 = 1 - cfg.b2 ** step.astype(F32)
+
+    new_p_leaves, new_moments = [], []
+    for (path, p), g, mo in zip(paths_and_leaves, g_leaves, opt_state["moments"]):
+        g = g.astype(F32) * clip
+        if cfg.use_8bit:
+            m = q8_decode(mo["m"])
+            r = q8_decode(mo["r"])
+            v = r * r
+        else:
+            m, v = mo["m"], mo["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        # Adafactor-style update clipping: |m|/sqrt(v) ~ O(1); anything far
+        # beyond is quantization/denominator noise
+        u = jnp.clip(u, -5.0, 5.0)
+        if _decays(path):
+            u = u + cfg.weight_decay * p.astype(F32)
+        new_p_leaves.append((p.astype(F32) - lr * u).astype(p.dtype))
+        if cfg.use_8bit:
+            new_moments.append({"m": q8_encode(m), "r": q8_encode(jnp.sqrt(v))})
+        else:
+            new_moments.append({"m": m, "v": v})
+
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p_leaves)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"moments": new_moments, "step": step}, metrics

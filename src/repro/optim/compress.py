@@ -1,0 +1,93 @@
+"""int8-compressed cross-pod gradient reduction.
+
+The `pod` mesh axis crosses DCN (~25 GB/s vs ~200 GB/s ICI), so the cross-pod
+gradient all-reduce is the slowest collective of a multi-pod step.  This
+module reduces it with blockwise-int8 compression (the same codec as
+``kernels/quant`` / 8-bit moments): under ``shard_map`` over the pod axis,
+each pod quantizes its local gradient, all-gathers int8 data + f32 block
+scales (4x fewer bytes than f32, 2x fewer than bf16), and dequant-averages
+locally.
+
+Error feedback (residual carried to the next step) keeps the compression
+unbiased over time — standard distributed-SGD practice.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import QBLOCK
+
+F32 = jnp.float32
+
+
+def _q8_flat(x):
+    """Flatten + blockwise int8. Returns (data int8 (nb,Q), scales (nb,), n)."""
+    flat = x.astype(F32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % QBLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def _dq8_flat(q, scale, n, shape):
+    flat = (q.astype(F32) * scale[:, None]).reshape(-1)[:n]
+    return flat.reshape(shape)
+
+
+def compressed_pod_mean(grads, mesh, axis: str = "pod"):
+    """Mean-reduce a gradient pytree across ``axis`` with int8 payloads.
+
+    Each leaf must already be replicated across ``axis`` up to the summand
+    (i.e. per-pod partial gradients).  Returns the pod-mean with the same
+    shardings on the remaining axes.
+    """
+    n_pods = mesh.shape[axis]
+    if n_pods == 1:
+        return grads
+
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    def reduce_leaf(g):
+        spec = P(*([None] * g.ndim))
+
+        @partial(jax.shard_map, mesh=mesh, in_specs=spec, out_specs=spec,
+                 check_vma=False)
+        def go(local):
+            q, s, n = _q8_flat(local)
+            qs = jax.lax.all_gather(q, axis)          # (pods, nb, Q) int8
+            ss = jax.lax.all_gather(s, axis)          # (pods, nb) f32
+            total = jnp.zeros(local.shape, F32)
+            for p in range(n_pods):
+                total = total + _dq8_flat(qs[p], ss[p], n, local.shape)
+            return (total / n_pods).astype(local.dtype)
+
+        return go(g)
+
+    return jax.tree.map(reduce_leaf, grads)
+
+
+class ErrorFeedback:
+    """Residual accumulator making compressed reductions unbiased over time:
+    send quantize(g + e); e' = (g + e) - dequantize(sent)."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads)
+
+    @staticmethod
+    def apply(grads, residual):
+        corrected = jax.tree.map(lambda g, e: g.astype(F32) + e, grads, residual)
+
+        def roundtrip(x):
+            q, s, n = _q8_flat(x)
+            return _dq8_flat(q, s, n, x.shape)
+
+        sent = jax.tree.map(roundtrip, corrected)
+        new_residual = jax.tree.map(lambda c, s_: c - s_, corrected, sent)
+        return sent, new_residual

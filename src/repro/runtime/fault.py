@@ -1,0 +1,108 @@
+"""Fault-tolerance runtime: heartbeats, failure detection, restart policy.
+
+At 1000+ nodes, *something* is always failing.  The controller tracks
+heartbeats from producers/endpoints/executors, detects misses, and drives the
+recovery matrix:
+
+  producer dies    -> restart from last committed checkpoint (deterministic
+                      data pipeline => bitwise identical continuation)
+  endpoint dies    -> broker group senders re-route (core.broker)
+  executor dies    -> engine reassigns partitions (streaming.engine)
+  straggler        -> work stealing absorbs (streaming.engine); controller
+                      flags persistent stragglers for replacement
+
+This module is deliberately transport-agnostic (in-process for tests; the
+heartbeat source would be the pod controller on a real cluster).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class NodeState:
+    name: str
+    kind: str                     # producer | endpoint | executor
+    last_beat: float = field(default_factory=time.time)
+    alive: bool = True
+    marked_straggler: bool = False
+    beat_intervals: list = field(default_factory=list)
+
+
+class FailureDetector:
+    def __init__(self, timeout_s: float = 1.0,
+                 straggler_factor: float = 3.0):
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.nodes: dict[str, NodeState] = {}
+        self._lock = threading.Lock()
+        self.on_failure: list[Callable[[NodeState], None]] = []
+        self.on_straggler: list[Callable[[NodeState], None]] = []
+
+    def register(self, name: str, kind: str):
+        with self._lock:
+            self.nodes[name] = NodeState(name=name, kind=kind)
+
+    def beat(self, name: str):
+        now = time.time()
+        with self._lock:
+            st = self.nodes[name]
+            st.beat_intervals.append(now - st.last_beat)
+            if len(st.beat_intervals) > 32:
+                st.beat_intervals.pop(0)
+            st.last_beat = now
+
+    def scan(self) -> list[NodeState]:
+        """One detection pass; returns newly failed nodes."""
+        now = time.time()
+        failed = []
+        with self._lock:
+            for st in self.nodes.values():
+                if not st.alive:
+                    continue
+                if now - st.last_beat > self.timeout_s:
+                    st.alive = False
+                    failed.append(st)
+                elif len(st.beat_intervals) >= 4:
+                    mean = sum(st.beat_intervals) / len(st.beat_intervals)
+                    others = [n for n in self.nodes.values()
+                              if n.kind == st.kind and n is not st
+                              and n.beat_intervals]
+                    if others:
+                        peer = sorted(
+                            [iv for o in others for iv in o.beat_intervals]
+                            or [mean])
+                        med = peer[len(peer) // 2]
+                        if (mean > self.straggler_factor * max(med, 1e-6)
+                                and not st.marked_straggler):
+                            st.marked_straggler = True
+                            for cb in self.on_straggler:
+                                cb(st)
+        for st in failed:
+            for cb in self.on_failure:
+                cb(st)
+        return failed
+
+
+@dataclass
+class RestartPolicy:
+    """Checkpoint-restart driver for the training producer."""
+
+    max_restarts: int = 5
+    restarts: int = 0
+
+    def run_with_restarts(self, train_fn: Callable[[int | None], int],
+                          ckpt_mgr) -> int:
+        """train_fn(resume_step) -> final step; raises on simulated failure."""
+        resume = None
+        while True:
+            try:
+                return train_fn(resume)
+            except RuntimeError:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                resume = ckpt_mgr.latest_step()

@@ -1,0 +1,75 @@
+"""In-situ analysis DAGs — the paper's §6 future work, implemented.
+
+"In our future work, we plan to extend ElasticBroker to support in-situ
+workflows with more complex directed acyclic graphs (DAG)."
+
+A :class:`Stage` transforms one stream's value; edges fan results out to
+downstream stages; terminal results are collected per stage.  The DAG
+executes inside the stream engine's executors (one partition = one stream's
+micro-batch traversing the whole graph), so work stealing / elasticity /
+failure handling apply unchanged.
+
+Example (tests/test_dag.py):
+
+    records ──► dmd ──► stability ──► alert     (threshold -> alarm sink)
+                   └──► trend                   (windowed slope sink)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Stage:
+    name: str
+    fn: Callable[[str, Any], Any]        # (stream_key, value) -> value|None
+    downstream: list[str] = field(default_factory=list)
+
+
+class AnalysisDAG:
+    def __init__(self, stages: list[Stage], source: str):
+        self.stages = {s.name: s for s in stages}
+        assert source in self.stages, f"unknown source {source}"
+        self.source = source
+        self._validate_acyclic()
+        self.sinks: dict[str, list[tuple[str, Any, float]]] = {
+            s.name: [] for s in stages}
+        self._lock = threading.Lock()
+
+    def _validate_acyclic(self):
+        state: dict[str, int] = {}
+
+        def visit(n, path):
+            if state.get(n) == 2:
+                return
+            if n in path:
+                raise ValueError(f"cycle through {n}")
+            for d in self.stages[n].downstream:
+                if d not in self.stages:
+                    raise ValueError(f"unknown downstream stage {d}")
+                visit(d, path | {n})
+            state[n] = 2
+
+        visit(self.source, set())
+
+    # the engine's analyze_fn
+    def __call__(self, stream_key: str, records):
+        return self._run(self.source, stream_key, records)
+
+    def _run(self, name: str, key: str, value):
+        stage = self.stages[name]
+        out = stage.fn(key, value)
+        if out is None:
+            return None
+        with self._lock:
+            self.sinks[name].append((key, out, time.time()))
+        for d in stage.downstream:
+            self._run(d, key, out)
+        return out
+
+    def results(self, stage: str) -> list[tuple[str, Any, float]]:
+        with self._lock:
+            return list(self.sinks[stage])

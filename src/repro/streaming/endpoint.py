@@ -1,0 +1,87 @@
+"""Cloud endpoints — the Redis-server stand-ins of the paper's Fig 2.
+
+Each endpoint accepts framed stream records pushed by producer groups and
+holds them in per-stream buffers (stream = one producer rank's trajectory,
+exactly like the paper's per-MPI-process Redis streams).  Includes a simple
+inbound-bandwidth model (for the Fig-7 throughput study), health/failure
+injection (for failover tests), and drain APIs for the micro-batcher.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+
+from repro.core.records import StreamRecord, decode
+
+
+class Endpoint:
+    def __init__(self, name: str = "ep0", *, inbound_bw: float | None = None,
+                 port: int = 6379):
+        self.name = name
+        self.port = port
+        self.inbound_bw = inbound_bw          # bytes/s, None = unmetered
+        self._streams: dict[str, deque] = defaultdict(deque)
+        self._lock = threading.Lock()
+        self._healthy = True
+        self.bytes_in = 0
+        self.records_in = 0
+        self._bw_debt = 0.0
+        self._bw_t = time.time()
+
+    # ---- producer side --------------------------------------------------
+    def healthy(self) -> bool:
+        return self._healthy
+
+    def fail(self):
+        self._healthy = False
+
+    def recover(self):
+        self._healthy = True
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        if not self._healthy:
+            raise ConnectionError(f"endpoint {self.name} down")
+        if self.inbound_bw:
+            # token-bucket style pacing: model the shared inbound link
+            now = time.time()
+            self._bw_debt = max(0.0, self._bw_debt - (now - self._bw_t) * self.inbound_bw)
+            self._bw_t = now
+            self._bw_debt += len(blob)
+            lag = self._bw_debt / self.inbound_bw
+            if lag > 1e-4:
+                time.sleep(min(lag, 0.05))
+        rec = decode(blob)
+        with self._lock:
+            self._streams[rec.key()].append(rec)
+            self.bytes_in += len(blob)
+            self.records_in += 1
+
+    # ---- consumer side (micro-batcher) -----------------------------------
+    def stream_keys(self) -> list[str]:
+        with self._lock:
+            return list(self._streams.keys())
+
+    def drain(self, key: str, max_records: int | None = None) -> list[StreamRecord]:
+        with self._lock:
+            dq = self._streams.get(key)
+            if not dq:
+                return []
+            n = len(dq) if max_records is None else min(len(dq), max_records)
+            return [dq.popleft() for _ in range(n)]
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(d) for d in self._streams.values())
+
+
+def make_endpoints(n: int, *, inbound_bw: float | None = None,
+                   base_port: int = 6379) -> list:
+    """The paper's `struct CloudEndpoint endpoints[NUM_GROUPS]`, in-process."""
+    from repro.core.api import CloudEndpoint
+    eps = []
+    for i in range(n):
+        h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port)
+        eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
+                                 service_port=base_port, handle=h))
+    return eps

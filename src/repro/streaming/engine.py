@@ -1,0 +1,252 @@
+"""Distributed stream-processing engine — the Spark-Streaming stand-in.
+
+Implements the paper's Cloud pipeline (Fig 2/3): endpoints feed per-stream
+micro-batches (trigger-interval windows, like Spark DStreams); micro-batches
+of one stream form partitions of an RDD-like unit of work; a fixed subset of
+executors owns each endpoint's partitions (the paper's 16:1:16 mapping) and
+pipes each partition to the analysis function exactly once (rdd.pipe); a
+collector gathers results (rdd.collect) with generation->analysis latency.
+
+Beyond the paper (Spark gave these for free; we implement them):
+  * work stealing   — idle executors steal queued partitions (straggler
+                      mitigation),
+  * elastic scaling — add/remove executors at runtime,
+  * failure handling — a dead executor's queued partitions are reassigned.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.records import StreamRecord
+
+
+@dataclass
+class MicroBatch:
+    stream_key: str
+    records: list[StreamRecord]
+    t_created: float = field(default_factory=time.time)
+
+    @property
+    def steps(self) -> list[int]:
+        return [r.step for r in self.records]
+
+
+@dataclass
+class Result:
+    stream_key: str
+    value: Any
+    n_records: int
+    t_generated_min: float
+    t_analyzed: float
+    executor: int
+
+    @property
+    def latency(self) -> float:
+        """Paper §4.3 metric: data generated -> data analyzed."""
+        return self.t_analyzed - self.t_generated_min
+
+
+class _Executor(threading.Thread):
+    def __init__(self, idx: int, engine: "StreamEngine"):
+        super().__init__(daemon=True, name=f"executor-{idx}")
+        self.idx = idx
+        self.engine = engine
+        self.q: queue.Queue = queue.Queue()
+        self.alive = True
+        self.processed = 0
+        self.stolen = 0
+        self.slowdown = 0.0            # straggler injection (tests/benches)
+
+    def run(self):
+        eng = self.engine
+        while self.alive:
+            try:
+                mb = self.q.get(timeout=0.02)
+            except queue.Empty:
+                mb = eng._steal(self.idx)
+                if mb is None:
+                    continue
+                self.stolen += 1
+            if mb is _POISON:
+                break
+            if self.slowdown:
+                time.sleep(self.slowdown)
+            try:
+                value = eng.analyze_fn(mb.stream_key, mb.records)
+            except Exception as e:  # analysis failure != engine failure
+                value = e
+            tmin = min((r.t_generated for r in mb.records), default=mb.t_created)
+            eng._collect(Result(stream_key=mb.stream_key, value=value,
+                                n_records=len(mb.records),
+                                t_generated_min=tmin,
+                                t_analyzed=time.time(), executor=self.idx))
+            self.processed += 1
+
+    def kill(self):
+        """Simulated hard failure: drop the thread, orphan its queue."""
+        self.alive = False
+
+
+_POISON = MicroBatch(stream_key="__poison__", records=[])
+
+
+class StreamEngine:
+    def __init__(self, endpoints: list, analyze_fn: Callable,
+                 n_executors: int, *, trigger_interval: float = 3.0,
+                 min_batch: int = 2):
+        """endpoints: Endpoint handles (drain API).  analyze_fn(key, records)."""
+        self.endpoints = endpoints
+        self.analyze_fn = analyze_fn
+        self.trigger_interval = trigger_interval
+        self.min_batch = min_batch
+        self.results: list[Result] = []
+        self._rlock = threading.Lock()
+        self._elock = threading.Lock()
+        self.executors: list[_Executor] = []
+        self._stop = threading.Event()
+        self._assign: dict[str, int] = {}      # stream -> executor idx
+        for _ in range(n_executors):
+            self._add_executor_locked()
+        self._driver = threading.Thread(target=self._drive, daemon=True,
+                                        name="stream-driver")
+        self._driver.start()
+
+    # ---- executor lifecycle (elasticity + failure) ----------------------
+    def _add_executor_locked(self):
+        ex = _Executor(len(self.executors), self)
+        self.executors.append(ex)
+        ex.start()
+        return ex
+
+    def add_executor(self):
+        with self._elock:
+            return self._add_executor_locked()
+
+    def remove_executor(self):
+        with self._elock:
+            for ex in reversed(self.executors):
+                if ex.alive:
+                    ex.alive = False
+                    ex.q.put(_POISON)
+                    self._reassign(ex)
+                    return ex.idx
+        return None
+
+    def kill_executor(self, idx: int):
+        """Hard failure; queued partitions are reassigned to survivors."""
+        ex = self.executors[idx]
+        ex.kill()
+        self._reassign(ex)
+
+    def _reassign(self, dead: _Executor):
+        moved = 0
+        while True:
+            try:
+                mb = dead.q.get_nowait()
+            except queue.Empty:
+                break
+            if mb is _POISON:
+                continue
+            tgt = self._pick_executor(mb.stream_key, exclude=dead.idx)
+            if tgt is not None:
+                tgt.q.put(mb)
+                moved += 1
+        for k, v in list(self._assign.items()):
+            if v == dead.idx:
+                del self._assign[k]
+        return moved
+
+    def _alive(self) -> list[_Executor]:
+        return [e for e in self.executors if e.alive]
+
+    def _pick_executor(self, stream_key: str, exclude: int | None = None):
+        alive = [e for e in self._alive() if e.idx != exclude]
+        if not alive:
+            return None
+        if stream_key in self._assign:
+            idx = self._assign[stream_key]
+            for e in alive:
+                if e.idx == idx:
+                    return e
+        # sticky partition->executor mapping (paper: fixed subset per stream)
+        e = min(alive, key=lambda e: e.q.qsize())
+        self._assign[stream_key] = e.idx
+        return e
+
+    # ---- work stealing ---------------------------------------------------
+    def _steal(self, thief_idx: int):
+        victims = [e for e in self._alive() if e.idx != thief_idx and e.q.qsize() > 1]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda e: e.q.qsize())
+        try:
+            return victim.q.get_nowait()
+        except queue.Empty:
+            return None
+
+    # ---- driver: trigger-interval micro-batching -------------------------
+    def _drive(self):
+        while not self._stop.is_set():
+            t0 = time.time()
+            self.trigger_once()
+            dt = time.time() - t0
+            self._stop.wait(max(0.0, self.trigger_interval - dt))
+
+    def trigger_once(self) -> int:
+        n = 0
+        for ep in self.endpoints:
+            for key in ep.stream_keys():
+                recs = ep.drain(key)
+                if len(recs) == 0:
+                    continue
+                ex = self._pick_executor(key)
+                if ex is None:
+                    continue
+                ex.q.put(MicroBatch(stream_key=key, records=recs))
+                n += 1
+        return n
+
+    def _collect(self, r: Result):
+        with self._rlock:
+            self.results.append(r)
+
+    # ---- public ----------------------------------------------------------
+    def collect(self, clear: bool = False) -> list[Result]:
+        with self._rlock:
+            out = list(self.results)
+            if clear:
+                self.results.clear()
+            return out
+
+    def latency_stats(self) -> dict:
+        lats = [r.latency for r in self.collect()]
+        if not lats:
+            return {"n": 0}
+        lats.sort()
+        return {"n": len(lats),
+                "mean": sum(lats) / len(lats),
+                "p50": lats[len(lats) // 2],
+                "p99": lats[min(len(lats) - 1, int(len(lats) * 0.99))],
+                "max": lats[-1]}
+
+    def drain_and_stop(self, timeout: float = 30.0):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            pending = sum(ep.pending() for ep in self.endpoints)
+            queued = sum(e.q.qsize() for e in self._alive())
+            if pending == 0 and queued == 0:
+                break
+            self.trigger_once()
+            time.sleep(0.05)
+        self._stop.set()
+        survivors = self._alive()
+        for e in survivors:
+            e.alive = False
+            e.q.put(_POISON)
+        for e in survivors:          # results must be collected before return
+            e.join(timeout=5.0)

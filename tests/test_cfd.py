@@ -1,0 +1,61 @@
+"""CFD solver: physical invariants + the in-situ workflow contract."""
+import numpy as np
+import pytest
+
+from repro.sim.cfd import (CFDConfig, buildings_mask, divergence_norm,
+                           init_state, region_fields, step)
+
+
+@pytest.fixture(scope="module")
+def run():
+    cfg = CFDConfig(nx=64, nz=32, n_regions=4, pressure_iters=60)
+    state = init_state(cfg)
+    states = [state]
+    for _ in range(30):
+        state = step(state, cfg)
+        states.append(state)
+    return cfg, states
+
+
+def test_stability_and_finiteness(run):
+    cfg, states = run
+    u = np.asarray(states[-1]["u"])
+    assert np.isfinite(u).all()
+    assert np.abs(u).max() < 10 * cfg.inflow        # no blow-up
+
+
+def test_projection_reduces_divergence(run):
+    cfg, states = run
+    d = divergence_norm(states[-1])
+    assert d < 0.2, f"divergence too large after projection: {d}"
+
+
+def test_solid_cells_stay_zero(run):
+    cfg, states = run
+    mask = buildings_mask(cfg)
+    u = np.asarray(states[-1]["u"])
+    w = np.asarray(states[-1]["w"])
+    assert np.abs(u[mask]).max() == 0.0
+    assert np.abs(w[mask]).max() == 0.0
+
+
+def test_wake_forms_behind_buildings(run):
+    """Flow must decelerate somewhere downstream of obstacles (wake)."""
+    cfg, states = run
+    u = np.asarray(states[-1]["u"])
+    mask = buildings_mask(cfg)
+    zs, xs = np.where(mask)
+    behind = u[: zs.max() + 1, xs.max() + 1:]
+    assert behind.min() < 0.8 * cfg.inflow
+
+
+def test_region_fields_cover_domain(run):
+    cfg, states = run
+    fields = region_fields(states[-1], cfg)
+    assert len(fields) == cfg.n_regions
+    per = cfg.nz // cfg.n_regions
+    assert all(f.shape == (2 * per * cfg.nx,) for f in fields)
+    # reassembling u from slabs matches the state
+    u = np.asarray(states[-1]["u"])
+    recon = np.concatenate([f.reshape(2, per, cfg.nx)[0] for f in fields])
+    np.testing.assert_array_equal(recon, u)

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("B,S,T,H,Kh,D", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 100, 100, 2, 1, 32),     # non-multiple-of-block seq
+    (2, 128, 384, 4, 4, 128),    # cross lengths (cache-style)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 64)])
+def test_flash_vs_ref(rng, B, S, T, H, Kh, D, dtype, causal, window):
+    if T != S and causal:
+        pytest.skip("cross-length causal needs offset semantics")
+    q = jnp.asarray(rng.randn(B, S, H, D), dtype)
+    k = jnp.asarray(rng.randn(B, T, Kh, D), dtype)
+    v = jnp.asarray(rng.randn(B, T, Kh, D), dtype)
+    o = ops.attention(q, k, v, causal=causal, window=window)
+    ke = jnp.repeat(k, H // Kh, axis=2)
+    ve = jnp.repeat(v, H // Kh, axis=2)
+    r = ref.attention_ref(q, ke, ve, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_matches_model_layer(rng):
+    """Kernel == the model's portable chunked-flash implementation."""
+    from repro.models.layers import flash_attention
+    B, S, H, D = 2, 256, 4, 64
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, 2, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, 2, D), jnp.float32)
+    o_kernel = ops.attention(q, k, v, causal=True)
+    o_model = flash_attention(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(o_kernel), np.asarray(o_model),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("n,d", [(64, 64), (300, 200), (128, 513), (1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_vs_ref(rng, n, d, dtype):
+    x = jnp.asarray(rng.randn(n, d), dtype)
+    g = jnp.zeros((d, d), jnp.float32)
+    got = ops.gram_accumulate(x, g)
+    want = ref.gram_ref(x.astype(jnp.float32))
+    tol = 0.5 if dtype == jnp.bfloat16 else 1e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_gram_accumulates(rng):
+    d = 96
+    g = jnp.zeros((d, d), jnp.float32)
+    xs = [jnp.asarray(rng.randn(40, d), jnp.float32) for _ in range(3)]
+    for x in xs:
+        g = ops.gram_accumulate(x, g)
+    want = sum(np.asarray(ref.gram_ref(x)) for x in xs)
+    np.testing.assert_allclose(np.asarray(g), want, atol=1e-2, rtol=1e-3)
+
+
+@pytest.mark.parametrize("nb,q", [(4, 256), (100, 256), (7, 128), (1000, 64)])
+def test_quant_roundtrip(rng, nb, q):
+    x = jnp.asarray(rng.randn(nb, q) * 10, jnp.float32)
+    qd, s = ops.quantize(x)
+    qr, sr = ref.quant_ref(x)
+    assert np.array_equal(np.asarray(qd), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    back = ops.dequantize(qd, s)
+    # blockwise int8: error bounded by scale/2 per element
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-6
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound)
+
+
+@pytest.mark.parametrize("G,L,H,N,P", [(2, 32, 4, 16, 8), (1, 64, 2, 32, 16),
+                                       (3, 16, 8, 8, 8)])
+def test_ssd_intra_vs_ref(rng, G, L, H, N, P):
+    cb = jnp.asarray(rng.randn(G, L, L), jnp.float32)
+    # realistic decays: cum is a non-increasing cumsum of negatives
+    cum = jnp.asarray(np.cumsum(-np.abs(rng.randn(G, L, H)) * 0.1, axis=1),
+                      jnp.float32)
+    bmat = jnp.asarray(rng.randn(G, L, N), jnp.float32)
+    xdt = jnp.asarray(rng.randn(G, L, H, P), jnp.float32)
+    y, s = ops.ssd_intra_chunk(cb, cum, bmat, xdt)
+    yr, sr = ref.ssd_intra_ref(cb, cum, bmat, xdt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_kernel_composes_to_ssd_chunked(rng):
+    """Kernel-composed SSD == models.mamba.ssd_chunked end to end."""
+    from repro.models.mamba import ssd_chunked
+    B, S, H, P, N, L = 1, 64, 2, 8, 16, 32
+    xh = jnp.asarray(rng.randn(B, S, H, P), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.randn(B, S, H), jnp.float32)) * 0.1 + 0.01
+    A = -jnp.abs(jnp.asarray(rng.randn(H), jnp.float32))
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    y_want, s_want = ssd_chunked(xh, dt, A, Bm, Cm, chunk=L)
+
+    # compose: intra via kernel, inter via the same scan
+    nc = S // L
+    xc = xh.reshape(B * nc, L, H, P)
+    dtc = dt.reshape(B * nc, L, H)
+    Bc = Bm.reshape(B * nc, L, N)
+    Cc = Cm.reshape(B * nc, L, N)
+    a = A[None, None, :] * dtc
+    cum = jnp.cumsum(a, axis=1)
+    xdt = xc * dtc[..., None]
+    cb = jnp.einsum("gin,gjn->gij", Cc, Bc)
+    y_intra, states = ops.ssd_intra_chunk(cb, cum, Bc, xdt)
+    states = jnp.moveaxis(states, -1, -2)  # (G,H,N,P)->(G,H,P,N)
+
+    import jax as _jax
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    st = states.reshape(B, nc, H, P, N)
+    dec = jnp.exp(cum.reshape(B, nc, L, H)[:, :, -1, :])
+    def step(s, inp):
+        st_c, d = inp
+        return s * d[..., None, None] + st_c, s
+    s_fin, s_prev = _jax.lax.scan(
+        step, s0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(dec, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1).reshape(B * nc, H, P, N)
+    y_inter = jnp.einsum("gin,gih,ghpn->gihp", Cc, jnp.exp(cum), s_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_want),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_want),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,185 @@
+"""Model correctness invariants (stronger than smoke tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import transformer as T
+from repro.models.modules import materialize
+from repro.models.steps import make_prefill_step, make_decode_step
+
+B, S = 2, 32
+
+
+def _build(name):
+    cfg = C.get(name).reduced()
+    params = materialize(T.build_specs(cfg), jax.random.key(1), jnp.float32)
+    return cfg, params
+
+
+def _logits_full(cfg, params, tokens):
+    ctx = T.Ctx(cfg=cfg, mode="train", positions=jnp.arange(tokens.shape[1]))
+    h = T.embed_inputs(cfg, params, {"tokens": tokens}, ctx)
+    h, _, _, _ = T.trunk(cfg, params, h, ctx)
+    return T.lm_head(cfg, params, h)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-3b", "gemma3-12b", "mamba2-2.7b",
+                                  "jamba-1.5-large-398b"])
+def test_causality(arch, rng):
+    """Changing token t+k must not affect logits at positions <= t.
+
+    For the MoE hybrid we disable experts: GShard *capacity dropping* is
+    batch-global by construction (a future token's routing can evict an
+    earlier token's 2nd choice), so strict causality only holds for the
+    non-MoE path — decode uses group_size=1 and is unaffected.  (Documented
+    in DESIGN.md §10.)
+    """
+    cfg, params = _build(arch)
+    if cfg.n_experts:
+        from dataclasses import replace
+        cfg = replace(cfg, n_experts=0, experts_per_token=0)
+        params = materialize(T.build_specs(cfg), jax.random.key(1), jnp.float32)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    tok2 = tok.at[:, S // 2:].set((tok[:, S // 2:] + 7) % cfg.vocab_size)
+    l1 = np.asarray(_logits_full(cfg, params, tok), np.float32)
+    l2 = np.asarray(_logits_full(cfg, params, tok2), np.float32)
+    np.testing.assert_allclose(l1[:, : S // 2], l2[:, : S // 2],
+                               atol=1e-4, rtol=1e-3)
+    assert not np.allclose(l1[:, -1], l2[:, -1], atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-3b", "gemma3-12b", "mamba2-2.7b",
+                                  "musicgen-large"])
+def test_decode_matches_forward(arch, rng):
+    """prefill(S) + decode(t_S) must equal full forward on S+1 tokens."""
+    cfg, params = _build(arch)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    batch = {}
+    if cfg.frontend == "audio":
+        # audio prefill uses frames; decode embeds tokens — compare via the
+        # token-embedding path for both by feeding embeds==embed[tokens]
+        frames = jnp.take(params["embed"], tok, axis=0)
+        batch["frames"] = frames[:, :S]
+    else:
+        batch["tokens"] = tok[:, :S]
+    _, cache, _ = jax.jit(make_prefill_step(cfg))(params, batch)
+
+    def extend(c):
+        if c.ndim == 5 and c.shape[2] == S:
+            return jnp.pad(c, [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)])
+        return c
+    cache = jax.tree.map(extend, cache)
+    nxt, _, _ = jax.jit(make_decode_step(cfg))(
+        params, cache, tok[:, S:S + 1], jnp.asarray(S, jnp.int32))
+
+    if cfg.frontend == "audio":
+        ctx = T.Ctx(cfg=cfg, mode="train", positions=jnp.arange(S + 1))
+        h = jnp.take(params["embed"], tok, axis=0)
+        h, _, _, _ = T.trunk(cfg, params, h, ctx)
+        full = T.lm_head(cfg, params, h)
+    else:
+        full = _logits_full(cfg, params, tok)
+    want = np.argmax(np.asarray(full, np.float32)[:, S, : cfg.vocab_size], -1)
+    assert np.array_equal(np.asarray(nxt), want)
+
+
+def test_head_padding_exact(rng):
+    """Padded q-heads (kv-group-major layout, wo pad slots masked) must not
+    change outputs: compare Hp=16 vs Hp=n_heads models whose *real* head
+    weights coincide.  Real slots live at h = k*Gp + g, g < G_real."""
+    cfg16 = C.get("starcoder2-3b").reduced()              # H=4, K=2 -> Hp 16
+    from dataclasses import replace
+    cfg4 = replace(cfg16, head_pad_to=4)                  # Hp == 4
+    assert cfg16.padded_heads == 16 and cfg4.padded_heads == 4
+    p16 = materialize(T.build_specs(cfg16), jax.random.key(2), jnp.float32)
+
+    K = cfg16.n_kv_heads
+    gp, g_real = 16 // K, cfg16.n_heads // K
+    real = np.concatenate([np.arange(k * gp, k * gp + g_real)
+                           for k in range(K)])            # [0,1, 8,9]
+    p4 = jax.tree.map(lambda x: x, p16)
+    for slot in p4["slots"]:
+        if "wq" in slot:
+            slot["wq"] = slot["wq"][:, :, real]
+            slot["wo"] = slot["wo"][:, real]
+    tok = jnp.asarray(rng.randint(0, cfg16.vocab_size, (B, S)), jnp.int32)
+    l16 = np.asarray(_logits_full(cfg16, p16, tok), np.float32)
+    l4 = np.asarray(_logits_full(cfg4, p4, tok), np.float32)
+    np.testing.assert_allclose(l16, l4, atol=1e-4, rtol=1e-3)
+
+
+def test_local_equals_global_when_window_covers(rng):
+    """Sliding-window attention == global attention when window >= seq."""
+    from repro.models import layers as L
+    q = jnp.asarray(rng.randn(2, 64, 4, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 64, 2, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 64, 2, 32), jnp.float32)
+    o_local = L.local_block_attention(q, k, v, window=64)
+    o_global = L.flash_attention(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_local), np.asarray(o_global),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_moe_routes_and_balances(rng):
+    from repro.models.moe import moe_mlp
+    d, E, f = 32, 4, 64
+    x = jnp.asarray(rng.randn(2, 128, d), jnp.float32)
+    router = jnp.asarray(rng.randn(d, E), jnp.float32)
+    wg = jnp.asarray(rng.randn(E, d, f) * 0.05, jnp.float32)
+    wu = jnp.asarray(rng.randn(E, d, f) * 0.05, jnp.float32)
+    wd = jnp.asarray(rng.randn(E, f, d) * 0.05, jnp.float32)
+    y, aux = moe_mlp(x, router, wg, wu, wd, n_experts=E, k=2,
+                     group_size=64)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert 0.0 < float(aux) < 10.0  # load-balance loss in sane range
+    # capacity sufficiency: with cf=1.25 and uniform-ish routing most tokens
+    # must be served (output nonzero)
+    nz = np.mean(np.abs(np.asarray(y)) > 1e-8)
+    assert nz > 0.5
+
+
+def test_moe_scatter_equals_einsum(rng):
+    """The scatter router must match the GShard einsum router exactly,
+    including capacity drops (same assignment order)."""
+    from repro.models.moe import moe_mlp, moe_mlp_scatter
+    d, E, f, k = 32, 8, 64, 2
+    x = jnp.asarray(rng.randn(2, 128, d), jnp.float32)
+    router = jnp.asarray(rng.randn(d, E), jnp.float32)
+    wg = jnp.asarray(rng.randn(E, d, f) * 0.05, jnp.float32)
+    wu = jnp.asarray(rng.randn(E, d, f) * 0.05, jnp.float32)
+    wd = jnp.asarray(rng.randn(E, f, d) * 0.05, jnp.float32)
+    for cf in (1.25, 0.5):  # ample and drop-inducing capacity
+        kw = dict(n_experts=E, k=k, group_size=64, capacity_factor=cf)
+        y1, a1 = moe_mlp(x, router, wg, wu, wd, **kw)
+        y2, a2 = moe_mlp_scatter(x, router, wg, wu, wd, **kw)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-5, rtol=1e-5)
+        assert float(jnp.abs(a1 - a2)) < 1e-6
+
+
+def test_remat_block_equivalence(rng):
+    """remat_block=k must not change the training math (same loss & grads)."""
+    from dataclasses import replace
+    from repro.models.steps import make_train_step
+    from repro.optim import adamw
+    base = replace(C.get("minitron-8b").reduced(), n_layers=4, remat=True)
+    tok = jnp.asarray(rng.randint(0, base.vocab_size, (2, 32)), jnp.int32)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+    params = materialize(T.build_specs(base), jax.random.key(3), jnp.float32)
+    opt_cfg = adamw.AdamWConfig()
+    results = []
+    for k in (1, 2, 4):
+        cfg = replace(base, remat_block=k)
+        opt = adamw.init_opt_state(opt_cfg, params)
+        step = jax.jit(make_train_step(cfg, opt_cfg, 1))
+        p2, _, m, _ = step(params, opt, batch)
+        results.append((float(m["loss"]), float(m["grad_norm"]),
+                        np.asarray(jax.tree.leaves(p2)[0])))
+    for loss, gnorm, leaf in results[1:]:
+        # f32 reduction order differs across the k-blocked HLOs
+        assert abs(loss - results[0][0]) < 1e-4
+        assert abs(gnorm - results[0][1]) / results[0][1] < 1e-3
+        np.testing.assert_allclose(leaf, results[0][2], atol=1e-4)
