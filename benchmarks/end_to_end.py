@@ -39,21 +39,27 @@ FS_LATENCY_S = 0.002          # per-file create+commit on a shared PFS
 FS_BW = 500e6                 # aggregate PFS bandwidth (bytes/s)
 
 
-def _make_analyzer(n_feat):
+def _make_analyzer(n_feat, batched: bool = True):
+    """batched=True: one device call per micro-batch (update_batch);
+    False: the seed per-record protocol, kept as the comparison baseline."""
     states = {}
 
     def analyze(key, records):
         sd = states.setdefault(key, StreamingDMD(n_features=n_feat, window=12,
                                                  rank=4))
-        for r in sorted(records, key=lambda r: r.step):
-            sd.update(r.payload.reshape(-1)[:n_feat])
+        recs = sorted(records, key=lambda r: r.step)
+        if batched:
+            sd.update_batch([r.payload for r in recs])
+        else:
+            for r in recs:
+                sd.update(r.payload.reshape(-1)[:n_feat])
         return unit_circle_distance(sd.eigenvalues())
 
     return analyze
 
 
 def run_mode(mode: str, write_interval: int, cfg: CFDConfig,
-             fs_model: bool = False):
+             fs_model: bool = False, batched: bool = True):
     state = init_state(cfg)
     state = step(state, cfg)  # warm the jit outside the timed region
     n_feat = 256
@@ -65,11 +71,14 @@ def run_mode(mode: str, write_interval: int, cfg: CFDConfig,
         tmpdir = Path(tempfile.mkdtemp(prefix="ebk_fig6_"))
     elif mode == "broker":
         eps = make_endpoints(max(1, cfg.n_regions // 4))
+        bcfg = BrokerConfig(compress="int8+zstd",
+                            max_batch_records=32 if batched else 1)
         broker = broker_connect(eps, n_producers=cfg.n_regions,
-                                cfg=BrokerConfig(compress="int8+zstd"),
+                                cfg=bcfg,
                                 plan=GroupPlan(cfg.n_regions,
                                                max(1, cfg.n_regions // 4), 4))
-        engine = StreamEngine([e.handle for e in eps], _make_analyzer(n_feat),
+        engine = StreamEngine([e.handle for e in eps],
+                              _make_analyzer(n_feat, batched=batched),
                               n_executors=cfg.n_regions,
                               trigger_interval=0.25)
         ctxs = [broker_init("velocity", r) for r in range(cfg.n_regions)]
@@ -111,19 +120,21 @@ def main(csv=True):
         times = {}
         e2e_t = None
         for mode, kw in (("simonly", {}), ("file_raw", {}),
-                         ("file_pfs", {"fs_model": True}), ("broker", {})):
+                         ("file_pfs", {"fs_model": True}), ("broker", {}),
+                         ("broker_rec", {"batched": False})):
             base = {"simonly": "none", "file_raw": "file",
-                    "file_pfs": "file", "broker": "broker"}[mode]
+                    "file_pfs": "file", "broker": "broker",
+                    "broker_rec": "broker"}[mode]
             t, e2e = run_mode(base, interval, cfg, **kw)
             times[mode] = t
-            if e2e:
+            if e2e and mode == "broker":
                 e2e_t = e2e
         rows.append((interval, times["simonly"], times["file_raw"],
-                     times["file_pfs"], times["broker"],
+                     times["file_pfs"], times["broker"], times["broker_rec"],
                      e2e_t or float("nan")))
     if csv:
         print("fig6_interval,simonly_s,file_raw_s,file_pfs_s,broker_s,"
-              "workflow_e2e_s")
+              "broker_perrecord_s,workflow_e2e_s")
         for r in rows:
             print(",".join(f"{v:.3f}" if isinstance(v, float) else str(v)
                            for v in r))

@@ -1,26 +1,41 @@
 """Kernel-layer microbenchmarks (CPU-host: wall time for the portable jnp
 paths + host codec; the Pallas kernels are interpret-validated, their TPU
-performance is captured structurally in the §Roofline VMEM analysis)."""
+performance is captured structurally in the §Roofline VMEM analysis).
+
+``bench_hotpath`` is the broker→DMD hot-path scoreboard: it times the seed
+per-snapshot ``StreamingDMD`` protocol against the batched ``update_batch``
+path (counting host↔device transfers and device calls via the instance
+counters) and single-record ``encode`` against ``encode_batch``, then
+writes ``BENCH_hotpath.json`` at the repo root so the trajectory is tracked
+PR over PR.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.dmd import StreamingDMD
-from repro.core.records import StreamRecord, encode, decode
+from repro.core.records import StreamRecord, encode, decode, encode_batch, \
+    decode_batch
 from repro.kernels import ref
 from repro.models.layers import flash_attention
 
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_hotpath.json"
+
 
 def _time(fn, *args, reps=5):
-    fn(*args)  # compile/warm
+    jax.block_until_ready(fn(*args))   # compile/warm
     t0 = time.time()
     for _ in range(reps):
-        r = fn(*args)
-    jax.block_until_ready(r) if hasattr(r, "block_until_ready") else None
+        # block every rep: async backends otherwise queue all reps and only
+        # the last one is awaited, under-reporting per-call latency
+        jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps * 1e6  # us
 
 
@@ -44,11 +59,16 @@ def bench_attention():
 def bench_gram():
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(512, 256), jnp.float32)
+    y = jnp.asarray(rng.randn(512, 256), jnp.float32)
     g = jnp.zeros((256, 256), jnp.float32)
+    a = jnp.zeros((256, 256), jnp.float32)
     f = jax.jit(lambda x, g: ref.gram_ref(x, g))
+    fp = jax.jit(lambda x, y, g, a: ref.gram_pair_ref(x, y, g, a))
     t = _time(f, x, g)
+    tp = _time(fp, x, y, g, a)
     flops = 2 * 512 * 256 * 256
-    return [("gram_update_512x256", t, f"{flops/t/1e3:.1f}GF/s")]
+    return [("gram_update_512x256", t, f"{flops/t/1e3:.1f}GF/s"),
+            ("gram_pair_fused_512x256", tp, f"{2*flops/tp/1e3:.1f}GF/s")]
 
 
 def bench_codec():
@@ -94,13 +114,133 @@ def bench_dmd():
         sd.update(rng.randn(128).astype(np.float32))
         sd.eigenvalues()
     us = (time.time() - t0) / n * 1e6
-    return [("streaming_dmd_update+eigs_128", us, "per-snapshot")]
+    sb = StreamingDMD(n_features=128, window=16, rank=4)
+    batch = [rng.randn(128).astype(np.float32) for _ in range(20)]
+    sb.update_batch(batch)        # warm
+    sb.eigenvalues()
+    t0 = time.time()
+    sb.update_batch(batch)
+    sb.eigenvalues()
+    us_b = (time.time() - t0) / n * 1e6
+    return [("streaming_dmd_update+eigs_128", us, "per-snapshot"),
+            ("streaming_dmd_batched_128", us_b, "per-snapshot, batch=20")]
 
 
-def main(csv=True):
+def _run_dmd_protocol(snaps, batch: int | None, eigs: bool = True):
+    """Run the update(+eigenvalues) protocol; returns (wall_s, counters).
+
+    eigs=False isolates the update path: the full protocol also runs 16x
+    fewer eigen-solves in batched mode (one per micro-batch instead of one
+    per record), so the update-only numbers are what attribute the win to
+    transfer/dispatch batching alone."""
+    d = snaps.shape[1]
+    sd = StreamingDMD(n_features=d, window=16, rank=4)
+    t0 = time.time()
+    if batch is None:              # seed protocol: one device round per record
+        for s in snaps:
+            sd.update(s)
+            if eigs:
+                sd.eigenvalues()
+    else:                          # batched protocol: one round per micro-batch
+        for i in range(0, len(snaps), batch):
+            sd.update_batch(snaps[i: i + batch])
+            if eigs:
+                sd.eigenvalues()
+    wall = time.time() - t0
+    return wall, {"h2d": sd.h2d_transfers, "d2h": sd.d2h_transfers,
+                  "device_calls": sd.device_calls}
+
+
+def bench_hotpath(write_json: bool = True):
+    """Batched-vs-unbatched scoreboard for the two hot paths."""
+    rng = np.random.RandomState(0)
+    d, total, batch = 128, 64, 16
+    snaps = rng.randn(total, d).astype(np.float32)
+    _run_dmd_protocol(snaps, None)        # warm jit for both protocols
+    _run_dmd_protocol(snaps, batch)
+    wall_seq, c_seq = _run_dmd_protocol(snaps, None)
+    wall_bat, c_bat = _run_dmd_protocol(snaps, batch)
+    t_seq = sum(c_seq.values()) - c_seq["device_calls"]
+    t_bat = sum(c_bat.values()) - c_bat["device_calls"]
+    # update-only: isolates transfer/dispatch batching from the eigen-solve
+    # cadence (the full protocol also amortizes eigenvalues() per batch)
+    wall_useq, c_useq = _run_dmd_protocol(snaps, None, eigs=False)
+    wall_ubat, c_ubat = _run_dmd_protocol(snaps, batch, eigs=False)
+
+    n_rec = 64
+    recs = [StreamRecord("vel", 0, 1, s,
+                         rng.randn(1024).astype(np.float32))
+            for s in range(n_rec)]
+    reps = 30
+    t0 = time.time()
+    for _ in range(reps):
+        for r in recs:
+            decode(encode(r, compress="int8+zstd"))
+    us_single = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        decode_batch(encode_batch(recs, compress="int8+zstd"))
+    us_batch = (time.time() - t0) / reps * 1e6
+    bytes_single = sum(len(encode(r, compress="int8+zstd")) for r in recs)
+    bytes_batch = len(encode_batch(recs, compress="int8+zstd"))
+
+    result = {
+        "config": {"d": d, "snapshots": total, "dmd_batch": batch,
+                   "codec_records": n_rec, "backend": jax.default_backend()},
+        "streaming_dmd": {
+            "per_snapshot": {"wall_us": wall_seq * 1e6, "transfers": t_seq,
+                             **c_seq},
+            "batched": {"wall_us": wall_bat * 1e6, "transfers": t_bat,
+                        **c_bat},
+            "speedup": wall_seq / wall_bat,
+            "transfer_ratio": t_seq / max(t_bat, 1),
+            # eigen-solve cadence excluded: updates only
+            "update_only": {
+                "per_snapshot_us": wall_useq * 1e6,
+                "batched_us": wall_ubat * 1e6,
+                "speedup": wall_useq / wall_ubat,
+                "device_calls": [c_useq["device_calls"],
+                                 c_ubat["device_calls"]],
+                "h2d": [c_useq["h2d"], c_ubat["h2d"]],
+            },
+        },
+        "record_codec": {
+            "single_x64_us": us_single,
+            "batch_64_us": us_batch,
+            "speedup": us_single / us_batch,
+            "bytes_single_sum": bytes_single,
+            "bytes_batch": bytes_batch,
+        },
+    }
+    if write_json:
+        BENCH_JSON.write_text(json.dumps(result, indent=2) + "\n")
+    sd = result["streaming_dmd"]
+    return [("hotpath_dmd_per_snapshot_64", sd["per_snapshot"]["wall_us"],
+             f"{t_seq}xfers/{c_seq['device_calls']}calls"),
+            ("hotpath_dmd_batched_64", sd["batched"]["wall_us"],
+             f"{t_bat}xfers/{c_bat['device_calls']}calls "
+             f"{sd['speedup']:.1f}x"),
+            ("hotpath_dmd_update_only_64", sd["update_only"]["batched_us"],
+             f"{sd['update_only']['speedup']:.1f}x vs per-snapshot"),
+            ("hotpath_codec_single_x64", us_single, f"{bytes_single}B"),
+            ("hotpath_codec_batch_64", us_batch,
+             f"{bytes_batch}B {us_single/us_batch:.1f}x")]
+
+
+SECTIONS = {"attention": bench_attention, "gram": bench_gram,
+            "ssd": bench_ssd, "codec": bench_codec, "dmd": bench_dmd,
+            "hotpath": bench_hotpath}
+
+
+def main(csv=True, only: str | None = None):
+    want = list(SECTIONS) if not only else only.split(",")
+    unknown = [n for n in want if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(f"unknown section(s) {unknown}; "
+                         f"choose from: {','.join(SECTIONS)}")
     rows = []
-    for fn in (bench_attention, bench_gram, bench_ssd, bench_codec, bench_dmd):
-        rows.extend(fn())
+    for name in want:
+        rows.extend(SECTIONS[name]())
     if csv:
         print("kernel,us_per_call,derived")
         for name, us, d in rows:
@@ -109,4 +249,7 @@ def main(csv=True):
 
 
 if __name__ == "__main__":
-    main()
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma list of: " + ",".join(SECTIONS))
+    main(only=p.parse_args().only)

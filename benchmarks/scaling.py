@@ -29,8 +29,8 @@ def _analyzer(n_feat):
     def analyze(key, records):
         sd = states.setdefault(key, StreamingDMD(n_features=n_feat,
                                                  window=8, rank=3))
-        for r in sorted(records, key=lambda r: r.step):
-            sd.update(r.payload[:n_feat])
+        sd.update_batch([r.payload for r in
+                         sorted(records, key=lambda r: r.step)])
         return unit_circle_distance(sd.eigenvalues())
 
     return analyze

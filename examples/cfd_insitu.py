@@ -31,8 +31,8 @@ dmd = {}
 
 def analyze(key, records):
     sd = dmd.setdefault(key, StreamingDMD(n_features=N_FEAT, window=16, rank=6))
-    for r in sorted(records, key=lambda r: r.step):
-        sd.update(r.payload.reshape(-1)[:N_FEAT])
+    # one device call per micro-batch (not per record)
+    sd.update_batch([r.payload for r in sorted(records, key=lambda r: r.step)])
     return unit_circle_distance(sd.eigenvalues())
 
 engine = StreamEngine([e.handle for e in endpoints], analyze,

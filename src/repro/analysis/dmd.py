@@ -4,10 +4,20 @@ Two implementations:
 
 * ``exact_dmd`` — PyDMD-equivalent batch DMD on a snapshot window
   (SVD -> low-rank operator -> eigenvalues), jitted.
-* ``StreamingDMD`` — online DMD over unbounded streams: rank-1 Gram updates
-  G += x xᵀ, A += y xᵀ per incoming snapshot pair (the hot loop the Pallas
-  ``gram`` kernel implements on TPU), eigenvalues from the Gram-space
-  operator.  This is what each stream's executor runs per micro-batch.
+* ``StreamingDMD`` — online DMD over unbounded streams: Gram updates
+  G += XᵀX, A += YᵀX over snapshot-pair blocks, eigenvalues from the
+  Gram-space operator.  This is what each stream's executor runs per
+  micro-batch.
+
+``StreamingDMD`` is **device-resident**: G and A live as ``jax.Array`` and
+never round-trip through the host between updates.  The batched entry point
+``update_batch((n, d) snapshots)`` forms the shifted X/Y pair in one shot
+and issues a single device call per micro-batch — the fused Pallas
+``gram_pair`` kernel (kernels/gram.py) on TPU, a jitted jnp matmul pair
+elsewhere — instead of one ``G += x xᵀ, A += y xᵀ`` dispatch (plus four
+host↔device transfers) per snapshot.  ``h2d_transfers`` / ``d2h_transfers``
+/ ``device_calls`` counters make the savings measurable
+(benchmarks/kernels_bench.py writes them to BENCH_hotpath.json).
 """
 from __future__ import annotations
 
@@ -41,12 +51,19 @@ def exact_dmd(snapshots: jax.Array, rank: int = 8):
 
 @jax.jit
 def gram_update(G: jax.Array, A: jax.Array, x: jax.Array, y: jax.Array):
-    """Rank-1 online-DMD update: G += x xᵀ, A += y xᵀ.
-
-    On TPU this runs as the Pallas ``gram`` kernel (kernels/gram.py) over
-    batched snapshot blocks; this jnp form is the portable path and oracle.
-    """
+    """Rank-1 online-DMD update: G += x xᵀ, A += y xᵀ (single-pair oracle)."""
     return G + jnp.outer(x, x), A + jnp.outer(y, x)
+
+
+@jax.jit
+def gram_pair_update(G: jax.Array, A: jax.Array, X: jax.Array, Y: jax.Array):
+    """Batched online-DMD update: G += XᵀX, A += YᵀX over (n, d) pair blocks.
+
+    The portable jnp form of the fused Pallas ``gram_pair`` kernel
+    (kernels/gram.py) and its allclose oracle.  All-zero padding rows are
+    no-ops in both products, so callers may pad n freely."""
+    Xf, Yf = X.astype(F32), Y.astype(F32)
+    return G + Xf.T @ Xf, A + Yf.T @ Xf
 
 
 @partial(jax.jit, static_argnames=("rank",))
@@ -71,42 +88,100 @@ def gram_eigs(G: jax.Array, A: jax.Array, rank: int = 8,
     return jnp.where(good, eigs, jnp.nan + 0.0j)
 
 
+def _pad_rows(n: int) -> int:
+    """Round a batch size up to the next power of two so the jitted update
+    compiles O(log n) variants instead of one per micro-batch size."""
+    return 1 << max(0, n - 1).bit_length()
+
+
 @dataclass
 class StreamingDMD:
-    """Per-stream online DMD state (executor-side)."""
+    """Per-stream online DMD state (executor-side), device-resident.
+
+    ``use_kernel``: None = auto (fused Pallas kernel on TPU, jnp matmuls
+    elsewhere — interpret-mode Pallas is not a hot-path option on CPU);
+    True/False forces the choice (tests force True to exercise the kernel).
+    """
 
     n_features: int
     window: int = 32                 # snapshots kept for exact re-solves
     rank: int = 8
+    use_kernel: bool | None = None
     _buf: list = field(default_factory=list)
-    _G: np.ndarray | None = None
-    _A: np.ndarray | None = None
+    _G: jax.Array | None = None      # (d, d) Gram, lives on device
+    _A: jax.Array | None = None      # (d, d) cross-Gram, lives on device
     last_snapshot: np.ndarray | None = None
     n_seen: int = 0
+    # hot-path accounting (BENCH_hotpath.json scoreboard)
+    h2d_transfers: int = 0
+    d2h_transfers: int = 0
+    device_calls: int = 0
 
-    def update(self, snapshot: np.ndarray) -> None:
+    def _coerce(self, snapshot) -> np.ndarray:
         x = np.asarray(snapshot, np.float32).reshape(-1)[: self.n_features]
         if x.size < self.n_features:   # short payloads embed zero-padded
             x = np.pad(x, (0, self.n_features - x.size))
+        return x
+
+    def _apply_pair_block(self, X: np.ndarray, Y: np.ndarray) -> None:
+        """One device call: G += XᵀX, A += YᵀX for an (n, d) pair block."""
+        d = self.n_features
         if self._G is None:
-            self._G = np.zeros((self.n_features, self.n_features), np.float32)
-            self._A = np.zeros((self.n_features, self.n_features), np.float32)
+            self._G = jnp.zeros((d, d), F32)
+            self._A = jnp.zeros((d, d), F32)
+        Xd, Yd = jnp.asarray(X), jnp.asarray(Y)
+        self.h2d_transfers += 2
+        self.device_calls += 1
+        use_kernel = (self.use_kernel if self.use_kernel is not None
+                      else jax.default_backend() == "tpu")
+        if use_kernel:
+            from repro.kernels import ops
+            self._G, self._A = ops.gram_pair_accumulate(Xd, Yd, self._G,
+                                                        self._A)
+        else:
+            self._G, self._A = gram_pair_update(self._G, self._A, Xd, Yd)
+
+    def update(self, snapshot: np.ndarray) -> None:
+        """Single-snapshot update (legacy per-record path)."""
+        self.update_batch([snapshot])
+
+    def update_batch(self, snaps) -> None:
+        """Batched update: ``snaps`` is an (n, d) array or list of snapshots
+        (each trimmed/zero-padded to ``n_features``).  Forms the shifted
+        X = chain[:-1], Y = chain[1:] pair — chaining through the previous
+        batch's last snapshot — and applies it in one device call."""
+        rows = [self._coerce(s) for s in snaps]
+        if not rows:
+            return
         if self.last_snapshot is not None:
-            G, A = gram_update(jnp.asarray(self._G), jnp.asarray(self._A),
-                               jnp.asarray(self.last_snapshot), jnp.asarray(x))
-            self._G, self._A = np.asarray(G), np.asarray(A)
-        self.last_snapshot = x
-        self._buf.append(x)
-        if len(self._buf) > self.window:
-            self._buf.pop(0)
-        self.n_seen += 1
+            chain = np.stack([self.last_snapshot] + rows)
+        else:
+            chain = np.stack(rows)
+        X, Y = chain[:-1], chain[1:]
+        n = X.shape[0]
+        if n:
+            m = _pad_rows(n)
+            if m != n:   # zero rows contribute nothing to XᵀX / YᵀX
+                pad = np.zeros((m - n, self.n_features), np.float32)
+                X = np.concatenate([X, pad])
+                Y = np.concatenate([Y, pad])
+            self._apply_pair_block(X, Y)
+        self.last_snapshot = chain[-1]
+        self._buf.extend(rows)
+        del self._buf[: max(0, len(self._buf) - self.window)]
+        self.n_seen += len(rows)
 
     def eigenvalues(self) -> np.ndarray:
         if self.n_seen < 3:
             return np.zeros(1, np.complex64)
         if self.n_seen <= self.window:
             snaps = jnp.asarray(np.stack(self._buf, axis=1))
+            self.h2d_transfers += 1
+            self.device_calls += 1
             eigs, _ = exact_dmd(snaps, rank=self.rank)
+            self.d2h_transfers += 1
             return np.asarray(eigs)
-        return np.asarray(gram_eigs(jnp.asarray(self._G), jnp.asarray(self._A),
-                                    rank=self.rank))
+        self.device_calls += 1
+        eigs = gram_eigs(self._G, self._A, rank=self.rank)
+        self.d2h_transfers += 1
+        return np.asarray(eigs)

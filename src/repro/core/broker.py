@@ -11,6 +11,13 @@ wide-area link.  That asynchrony is what produces the paper's Fig-6 result
 Fault tolerance beyond the paper: bounded-queue backpressure policies
 (block / drop_oldest / sample), endpoint failure detection and group
 re-routing to surviving endpoints, and per-group delivery metrics.
+
+Wire aggregation (the paper's "data aggregation" duty): each sender
+wake-up coalesces all queued records — up to ``cfg.max_batch_records`` —
+into one batched frame (core/records.py ``encode_batch``), so framing,
+compression, and the endpoint's bandwidth model are paid per batch rather
+than per record.  ``stats.frames_sent`` vs ``stats.sent`` shows the
+achieved aggregation ratio.
 """
 from __future__ import annotations
 
@@ -22,7 +29,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.grouping import GroupPlan
-from repro.core.records import FieldSchema, StreamRecord, encode
+from repro.core.records import FieldSchema, StreamRecord, encode, encode_batch
 
 
 @dataclass
@@ -33,12 +40,19 @@ class BrokerConfig:
     sample_keep: int = 2              # with `sample`: keep 1 of N on pressure
     flush_timeout_s: float = 10.0
     retry_limit: int = 3
+    # Wire aggregation: each sender wake-up coalesces every record already
+    # queued (up to this many) into one batched frame — one msgpack frame,
+    # one zstd pass, one Endpoint.push per batch instead of per record.
+    # 1 disables coalescing (seed per-record framing).
+    max_batch_records: int = 32
+    delta_encode: bool = False        # delta-vs-previous-step in batch frames
 
 
 @dataclass
 class BrokerStats:
     written: int = 0
-    sent: int = 0
+    sent: int = 0                     # records delivered
+    frames_sent: int = 0              # wire frames pushed (≤ sent)
     dropped: int = 0
     rerouted: int = 0
     bytes_sent: int = 0
@@ -59,7 +73,9 @@ class _GroupSender(threading.Thread):
         self.cfg = cfg
         self.stats = stats
         self.q: queue.Queue = queue.Queue(maxsize=cfg.queue_capacity)
-        self._stop = threading.Event()
+        # NB: must not be named `_stop` — that would shadow Thread._stop(),
+        # which threading.join() calls on finished threads
+        self._stop_evt = threading.Event()
         self._sample_ctr = 0
 
     # ---- producer side ------------------------------------------------
@@ -101,17 +117,32 @@ class _GroupSender(threading.Thread):
 
     # ---- sender loop ---------------------------------------------------
     def run(self):
-        while not self._stop.is_set() or not self.q.empty():
+        """Drain the queue in aggregated frames: each wake-up takes every
+        queued record (up to cfg.max_batch_records) and ships them as one
+        batched wire frame, so a burst of writes pays framing/compression/
+        bandwidth-model cost once per batch, not once per record."""
+        cap = max(1, self.cfg.max_batch_records)
+        while not self._stop_evt.is_set() or not self.q.empty():
             try:
-                rec = self.q.get(timeout=0.05)
+                recs = [self.q.get(timeout=0.05)]
             except queue.Empty:
                 continue
-            blob = encode(rec, compress=self.cfg.compress)
+            while len(recs) < cap:
+                try:
+                    recs.append(self.q.get_nowait())
+                except queue.Empty:
+                    break
+            if len(recs) == 1:
+                blob = encode(recs[0], compress=self.cfg.compress)
+            else:
+                blob = encode_batch(recs, compress=self.cfg.compress,
+                                    delta=self.cfg.delta_encode)
             if self._send(blob):
-                self.stats.sent += 1
+                self.stats.sent += len(recs)
+                self.stats.frames_sent += 1
                 self.stats.bytes_sent += len(blob)
             else:
-                self.stats.dropped += 1   # retries exhausted: lost record
+                self.stats.dropped += len(recs)  # retries exhausted: lost
 
     def _send(self, blob: bytes) -> bool:
         """Send to primary; on failure re-route to the next healthy endpoint
@@ -132,7 +163,7 @@ class _GroupSender(threading.Thread):
         return False
 
     def stop(self, timeout: float):
-        self._stop.set()
+        self._stop_evt.set()
         self.join(timeout=timeout)
 
 

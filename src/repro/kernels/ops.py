@@ -43,6 +43,14 @@ def gram_accumulate(x, g, *, block_d: int = 128, block_n: int = 128):
                                 interpret=_interpret())
 
 
+@partial(jax.jit, static_argnames=("block_d", "block_n"))
+def gram_pair_accumulate(x, y, g, a, *, block_d: int = 128,
+                         block_n: int = 128):
+    """Fused G += XᵀX, A += YᵀX in one kernel.  x, y: (n, d); g, a: (d, d)."""
+    return gram.gram_pair_accumulate(x, y, g, a, block_d=block_d,
+                                     block_n=block_n, interpret=_interpret())
+
+
 @partial(jax.jit, static_argnames=("block_rows",))
 def quantize(x, *, block_rows: int = 256):
     return quant.quantize(x, block_rows=block_rows, interpret=_interpret())

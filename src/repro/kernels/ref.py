@@ -34,6 +34,17 @@ def gram_ref(x: jax.Array, g: jax.Array | None = None) -> jax.Array:
     return upd if g is None else g.astype(F32) + upd
 
 
+def gram_pair_ref(x: jax.Array, y: jax.Array, g: jax.Array | None = None,
+                  a: jax.Array | None = None):
+    """Fused online-DMD update: (G += XᵀX, A += YᵀX).  x, y: (n, d) paired
+    snapshot blocks; g, a: (d, d) running Gram / cross-Gram or None."""
+    xf, yf = x.astype(F32), y.astype(F32)
+    gu = jnp.dot(xf.T, xf)
+    au = jnp.dot(yf.T, xf)
+    return (gu if g is None else g.astype(F32) + gu,
+            au if a is None else a.astype(F32) + au)
+
+
 def ssd_intra_ref(cb, cum, bmat, xdt):
     """Oracle for kernels/ssd.py — the formulas from models/mamba.py.
 

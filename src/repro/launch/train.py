@@ -46,8 +46,9 @@ def dmd_analyzer(n_features: int):
     def analyze(key, records):
         sd = states.setdefault(
             key, StreamingDMD(n_features=n_features, window=16, rank=4))
-        for r in sorted(records, key=lambda r: r.step):
-            sd.update(np.asarray(r.payload).reshape(-1)[:n_features])
+        # one device call per micro-batch (not per record)
+        sd.update_batch([r.payload for r in
+                         sorted(records, key=lambda r: r.step)])
         return unit_circle_distance(sd.eigenvalues())
 
     return analyze

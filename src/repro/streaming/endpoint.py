@@ -12,7 +12,7 @@ import threading
 import time
 from collections import defaultdict, deque
 
-from repro.core.records import StreamRecord, decode
+from repro.core.records import StreamRecord, decode_any
 
 
 class Endpoint:
@@ -26,6 +26,7 @@ class Endpoint:
         self._healthy = True
         self.bytes_in = 0
         self.records_in = 0
+        self.frames_in = 0            # wire frames (batched: frames < records)
         self._bw_debt = 0.0
         self._bw_t = time.time()
 
@@ -51,11 +52,13 @@ class Endpoint:
             lag = self._bw_debt / self.inbound_bw
             if lag > 1e-4:
                 time.sleep(min(lag, 0.05))
-        rec = decode(blob)
+        recs = decode_any(blob)       # single-record or aggregated frame
         with self._lock:
-            self._streams[rec.key()].append(rec)
+            for rec in recs:
+                self._streams[rec.key()].append(rec)
             self.bytes_in += len(blob)
-            self.records_in += 1
+            self.records_in += len(recs)
+            self.frames_in += 1
 
     # ---- consumer side (micro-batcher) -----------------------------------
     def stream_keys(self) -> list[str]:

@@ -99,7 +99,13 @@ class StreamEngine:
     def __init__(self, endpoints: list, analyze_fn: Callable,
                  n_executors: int, *, trigger_interval: float = 3.0,
                  min_batch: int = 2):
-        """endpoints: Endpoint handles (drain API).  analyze_fn(key, records)."""
+        """endpoints: Endpoint handles (drain API).  analyze_fn(key, records).
+
+        ``min_batch``: a stream's drained records are held until at least
+        this many accumulate (so the analyze path sees real micro-batches —
+        one device call per batch, not per record) or until a trigger
+        interval has passed since the first held record, whichever first;
+        ``drain_and_stop`` force-flushes the remainder."""
         self.endpoints = endpoints
         self.analyze_fn = analyze_fn
         self.trigger_interval = trigger_interval
@@ -107,6 +113,9 @@ class StreamEngine:
         self.results: list[Result] = []
         self._rlock = threading.Lock()
         self._elock = threading.Lock()
+        self._tlock = threading.Lock()         # trigger_once reentrancy
+        self._hold: dict[str, list[StreamRecord]] = {}
+        self._hold_t: dict[str, float] = {}    # first-held time per stream
         self.executors: list[_Executor] = []
         self._stop = threading.Event()
         self._assign: dict[str, int] = {}      # stream -> executor idx
@@ -197,19 +206,36 @@ class StreamEngine:
             dt = time.time() - t0
             self._stop.wait(max(0.0, self.trigger_interval - dt))
 
-    def trigger_once(self) -> int:
+    def trigger_once(self, force: bool = False) -> int:
+        """Drain endpoints into per-stream hold buffers and dispatch every
+        stream that is ripe: >= min_batch records held, the first held
+        record is older than one trigger interval, or ``force``."""
         n = 0
-        for ep in self.endpoints:
-            for key in ep.stream_keys():
-                recs = ep.drain(key)
-                if len(recs) == 0:
+        now = time.time()
+        with self._tlock:
+            for ep in self.endpoints:
+                for key in ep.stream_keys():
+                    recs = ep.drain(key)
+                    if recs:
+                        self._hold.setdefault(key, []).extend(recs)
+                        self._hold_t.setdefault(key, now)
+            for key in list(self._hold):
+                held = self._hold[key]
+                ripe = (force or len(held) >= self.min_batch
+                        or now - self._hold_t[key] >= self.trigger_interval)
+                if not ripe:
                     continue
                 ex = self._pick_executor(key)
                 if ex is None:
                     continue
-                ex.q.put(MicroBatch(stream_key=key, records=recs))
+                ex.q.put(MicroBatch(stream_key=key, records=held))
+                del self._hold[key], self._hold_t[key]
                 n += 1
         return n
+
+    def held(self) -> int:
+        with self._tlock:
+            return sum(len(v) for v in self._hold.values())
 
     def _collect(self, r: Result):
         with self._rlock:
@@ -239,9 +265,9 @@ class StreamEngine:
         while time.time() < deadline:
             pending = sum(ep.pending() for ep in self.endpoints)
             queued = sum(e.q.qsize() for e in self._alive())
-            if pending == 0 and queued == 0:
+            if pending == 0 and queued == 0 and self.held() == 0:
                 break
-            self.trigger_once()
+            self.trigger_once(force=True)
             time.sleep(0.05)
         self._stop.set()
         survivors = self._alive()

@@ -4,6 +4,8 @@ import time
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.api import broker_connect, broker_init, broker_write, broker_finalize
