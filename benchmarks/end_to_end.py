@@ -26,12 +26,8 @@ import numpy as np
 
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
-from repro.core.api import broker_connect, broker_init, broker_write
-from repro.core.broker import BrokerConfig
-from repro.core.grouping import GroupPlan
 from repro.sim.cfd import CFDConfig, init_state, region_fields, step
-from repro.streaming.endpoint import make_endpoints
-from repro.streaming.engine import StreamEngine
+from repro.workflow import Session, WorkflowConfig
 
 N_STEPS = 120
 INTERVALS = (5, 10, 20)
@@ -65,23 +61,20 @@ def run_mode(mode: str, write_interval: int, cfg: CFDConfig,
     n_feat = 256
 
     tmpdir = None
-    broker = engine = None
-    ctxs = []
+    session = velocity = None
     if mode == "file":
         tmpdir = Path(tempfile.mkdtemp(prefix="ebk_fig6_"))
     elif mode == "broker":
-        eps = make_endpoints(max(1, cfg.n_regions // 4))
-        bcfg = BrokerConfig(compress="int8+zstd",
-                            max_batch_records=32 if batched else 1)
-        broker = broker_connect(eps, n_producers=cfg.n_regions,
-                                cfg=bcfg,
-                                plan=GroupPlan(cfg.n_regions,
-                                               max(1, cfg.n_regions // 4), 4))
-        engine = StreamEngine([e.handle for e in eps],
-                              _make_analyzer(n_feat, batched=batched),
-                              n_executors=cfg.n_regions,
-                              trigger_interval=0.25)
-        ctxs = [broker_init("velocity", r) for r in range(cfg.n_regions)]
+        workflow = WorkflowConfig(n_producers=cfg.n_regions,
+                                  n_groups=max(1, cfg.n_regions // 4),
+                                  executors_per_group=4,
+                                  compress="int8+zstd",
+                                  max_batch_records=32 if batched else 1,
+                                  trigger_interval=0.25,
+                                  n_executors=cfg.n_regions)
+        session = Session(workflow,
+                          analyze=_make_analyzer(n_feat, batched=batched))
+        velocity = session.open_field("velocity")
 
     t0 = time.time()
     for s in range(N_STEPS):
@@ -96,18 +89,17 @@ def run_mode(mode: str, write_interval: int, cfg: CFDConfig,
                         time.sleep(FS_LATENCY_S + f.nbytes / FS_BW)
             elif mode == "broker":
                 for r, f in enumerate(fields):
-                    broker_write(ctxs[r], s, f)
+                    velocity.write(s, f, rank=r)
     np.asarray(state["u"]).sum()  # block on device work
     sim_elapsed = time.time() - t0
 
     e2e = None
     if mode == "broker":
-        broker.flush()
-        engine.drain_and_stop()
-        results = engine.collect()
+        session.flush()
+        session.close()
+        results = session.results()
         if results:
             e2e = max(r.t_analyzed for r in results) - t0
-        broker.finalize()
     if tmpdir:
         shutil.rmtree(tmpdir, ignore_errors=True)
     return sim_elapsed, e2e

@@ -9,15 +9,10 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
-from repro.core.broker import Broker, BrokerConfig
-from repro.core.grouping import GroupPlan
 from repro.sim.synthetic import GeneratorConfig, SyntheticGenerator
-from repro.streaming.endpoint import make_endpoints
-from repro.streaming.engine import StreamEngine
+from repro.workflow import Session, WorkflowConfig
 
 RATIO = 4                     # producers per endpoint (paper: 16)
 SCALES = (4, 8, 16, 32)       # paper: 16..128
@@ -39,30 +34,27 @@ def _analyzer(n_feat):
 def run_scale(n_producers: int, *, steps: int = 40, rate_hz: float = 20.0,
               field_elems: int = 1024):
     n_eps = max(1, n_producers // RATIO)
-    eps = make_endpoints(n_eps)
-    plan = GroupPlan(n_producers, n_eps, executors_per_group=RATIO)
-    broker = Broker(plan, eps, BrokerConfig(compress="int8+zstd",
-                                            queue_capacity=1024,
-                                            backpressure="block"))
-    engine = StreamEngine([e.handle for e in eps], _analyzer(128),
-                          n_executors=plan.n_executors,
-                          trigger_interval=0.25)
+    workflow = WorkflowConfig(n_producers=n_producers, n_groups=n_eps,
+                              executors_per_group=RATIO,
+                              compress="int8+zstd", queue_capacity=1024,
+                              backpressure="block", trigger_interval=0.25)
+    session = Session(workflow, analyze=_analyzer(128))
     gen = SyntheticGenerator(
         GeneratorConfig(n_producers=n_producers, field_elems=field_elems,
-                        rate_hz=rate_hz, n_steps=steps), broker)
+                        rate_hz=rate_hz, n_steps=steps), session)
     t0 = time.time()
     gen.run(wait=True)
-    broker.flush(timeout=30)
-    engine.drain_and_stop(timeout=30)
+    session.flush(timeout=30)
+    session.close()
     wall = time.time() - t0
-    stats = engine.latency_stats()
+    stats = session.latency_stats()
     payload_bytes = gen.produced * field_elems * 4
     return {
         "producers": n_producers,
         "endpoints": n_eps,
-        "executors": plan.n_executors,
+        "executors": session.plan.n_executors,
         "records": gen.produced,
-        "dropped": broker.stats.dropped,
+        "dropped": session.stats.dropped,
         "latency_mean_s": stats.get("mean", float("nan")),
         "latency_p99_s": stats.get("p99", float("nan")),
         "throughput_MBps": payload_bytes / wall / 1e6,

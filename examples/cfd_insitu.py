@@ -1,6 +1,6 @@
 """The paper's workflow, end to end: parallel CFD (WindAroundBuildings-like)
 -> ElasticBroker -> Cloud endpoints -> stream engine -> per-region DMD
-stability panel (paper Figs 4/5).
+stability panel (paper Figs 4/5) — on the declarative Session API.
 
     PYTHONPATH=src python examples/cfd_insitu.py
 """
@@ -10,34 +10,37 @@ import numpy as np
 
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
-from repro.core.api import broker_connect, broker_init, broker_write
-from repro.core.broker import BrokerConfig
-from repro.core.grouping import GroupPlan
 from repro.sim.cfd import CFDConfig, buildings_mask, init_state, region_fields, step
-from repro.streaming.endpoint import make_endpoints
-from repro.streaming.engine import StreamEngine
+from repro.workflow import Pipeline, Session, WorkflowConfig
 
 cfg = CFDConfig(nx=128, nz=64, n_regions=8, pressure_iters=50)
 N_FEAT = 256
 WRITE_INTERVAL = 5           # paper §4.2
 N_STEPS = 200
 
-# Cloud setup: 2 endpoints, 8 executors (8:2:8 ~ paper ratio scaled down)
-endpoints = make_endpoints(2)
-broker = broker_connect(endpoints, n_producers=cfg.n_regions,
-                        cfg=BrokerConfig(compress="int8+zstd"),
-                        plan=GroupPlan(cfg.n_regions, 2, 4))
+# Cloud setup: 2 endpoints, 8 executors (8:2:8 ~ paper ratio scaled down) —
+# the whole deployment is one declarative config.
+workflow = WorkflowConfig(n_producers=cfg.n_regions, n_groups=2,
+                          executors_per_group=4, compress="int8+zstd",
+                          trigger_interval=1.0, n_executors=cfg.n_regions)
+
 dmd = {}
 
-def analyze(key, records):
+def dmd_stage(key, records):
     sd = dmd.setdefault(key, StreamingDMD(n_features=N_FEAT, window=16, rank=6))
     # one device call per micro-batch (not per record)
     sd.update_batch([r.payload for r in sorted(records, key=lambda r: r.step)])
-    return unit_circle_distance(sd.eigenvalues())
+    return sd.eigenvalues()
 
-engine = StreamEngine([e.handle for e in endpoints], analyze,
-                      n_executors=cfg.n_regions, trigger_interval=1.0)
-ctxs = [broker_init(f"velocity", r) for r in range(cfg.n_regions)]
+def stability_stage(key, eigs):
+    return unit_circle_distance(eigs)
+
+pipeline = (Pipeline()
+            .stage("dmd", dmd_stage)
+            .then("stability", stability_stage))
+
+session = Session(workflow, pipeline=pipeline)
+velocity = session.open_field("velocity", shape=(N_FEAT,))
 
 # visualize the scene
 mask = buildings_mask(cfg)
@@ -50,24 +53,22 @@ t0 = time.time()
 for s in range(N_STEPS):
     state = step(state, cfg)
     if s % WRITE_INTERVAL == 0:
-        for r, field in enumerate(region_fields(state, cfg)):
-            broker_write(ctxs[r], s, field[:N_FEAT])
+        fields = region_fields(state, cfg)
+        # all regions of the step ride one aggregated frame per group
+        velocity.write_batch(s, [f[:N_FEAT] for f in fields],
+                             ranks=list(range(cfg.n_regions)))
 sim_t = time.time() - t0
-broker.flush()
-engine.drain_and_stop()
-e2e = max((r.t_analyzed for r in engine.collect()), default=t0) - t0
+stats = session.close()      # broker.finalize() -> engine.drain_and_stop()
+e2e = max((r.t_analyzed for r in session.results()), default=t0) - t0
 
 print(f"\nsimulation: {N_STEPS} steps in {sim_t:.2f}s "
       f"(broker overhead included); workflow end-to-end {e2e:.2f}s")
-print(f"broker: {broker.stats.sent} records sent, "
-      f"{broker.stats.dropped} dropped, "
-      f"{broker.stats.bytes_sent/1e6:.2f} MB on the wire")
+print(f"broker: {stats.sent} records sent in {stats.frames_sent} frames, "
+      f"{stats.dropped} dropped, "
+      f"{stats.bytes_sent/1e6:.2f} MB on the wire")
 
 print("\nper-region flow stability (paper Fig 5; 0 = neutrally stable):")
-latest = {}
-for r in engine.collect():
-    if not isinstance(r.value, Exception):
-        latest[r.stream_key] = r.value
+latest = session.dag.latest("stability")
 for key in sorted(latest, key=lambda k: int(k.split("/r")[-1])):
     region = int(key.split("/r")[-1])
     v = latest[key]

@@ -3,28 +3,24 @@
 Trains a tiny LM while streaming per-layer field taps through the broker to a
 Cloud-style stream-processing engine running online DMD — you watch the
 training dynamics' eigen-stability converge *while the job runs*, which is
-the paper's whole point.
+the paper's whole point.  The entire HPC→Cloud deployment is one
+``WorkflowConfig`` + ``Session``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
-from repro.core.api import broker_connect, broker_init, broker_write
-from repro.core.broker import BrokerConfig
-from repro.core.grouping import GroupPlan
 from repro.core.taps import TapStreamer
 from repro.data.pipeline import TokenPipeline
 from repro.models import transformer as T
 from repro.models.modules import materialize
 from repro.models.steps import make_train_step
 from repro.optim import adamw
-from repro.streaming.endpoint import make_endpoints
-from repro.streaming.engine import StreamEngine
+from repro.workflow import Session, WorkflowConfig
 
 # ---- 1. the "HPC" side: a (tiny) LM training job --------------------------
 cfg = C.get("starcoder2-3b").reduced()
@@ -34,12 +30,11 @@ opt = adamw.init_opt_state(opt_cfg, params)
 train_step = jax.jit(make_train_step(cfg, opt_cfg))
 pipe = TokenPipeline(cfg, batch=8, seq=64)
 
-# ---- 2. the "Cloud" side: endpoints + stream engine + DMD ------------------
+# ---- 2. the "Cloud" side: one declarative workflow -------------------------
 N_REGIONS = 4
-endpoints = make_endpoints(1)
-broker = broker_connect(endpoints, n_producers=N_REGIONS,
-                        cfg=BrokerConfig(compress="int8+zstd"),
-                        plan=GroupPlan(N_REGIONS, 1, 4))
+workflow = WorkflowConfig(n_producers=N_REGIONS, n_groups=1,
+                          executors_per_group=4, compress="int8+zstd",
+                          trigger_interval=0.5)
 dmd_states = {}
 
 def analyze(key, records):
@@ -49,9 +44,8 @@ def analyze(key, records):
         sd.update(np.asarray(r.payload).reshape(-1)[: cfg.tap_snapshot_dim])
     return unit_circle_distance(sd.eigenvalues())
 
-engine = StreamEngine([e.handle for e in endpoints], analyze,
-                      n_executors=4, trigger_interval=0.5)
-streamer = TapStreamer(broker, n_regions=N_REGIONS)
+session = Session(workflow, analyze=analyze)
+streamer = TapStreamer(session, n_regions=N_REGIONS)
 
 # ---- 3. run the cross-ecosystem workflow -----------------------------------
 print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) "
@@ -63,17 +57,17 @@ for step in range(30):
     if step % 10 == 0:
         print(f"  step {step:3d}  loss {float(metrics['loss']):.4f}")
 
-broker.flush()
-engine.drain_and_stop()
+stats = session.close()
 
 # ---- 4. realtime insights (paper Fig 5 analog) -----------------------------
 print("\nper-region DMD stability of training dynamics "
       "(closer to 0 = more stable):")
-panel = {r.stream_key: r.value for r in engine.collect()
+panel = {r.stream_key: r.value for r in session.results()
          if not isinstance(r.value, Exception)}
 for key in sorted(panel):
     bar = "#" * int(min(panel[key], 1.0) * 40)
     print(f"  {key:28s} {panel[key]:8.5f} {bar}")
-lat = engine.latency_stats()
+lat = session.latency_stats()
 print(f"\nstream latency mean={lat['mean']*1e3:.1f}ms p99={lat['p99']*1e3:.1f}ms"
-      f"  (records sent: {broker.stats.sent}, dropped: {broker.stats.dropped})")
+      f"  (records: {stats.sent} in {stats.frames_sent} frames, "
+      f"dropped: {stats.dropped})")

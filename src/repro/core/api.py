@@ -5,34 +5,26 @@
     broker_write(broker_ctx*, int step, void* data, size_t len);
     broker_finalize(broker_ctx*);
 
-``broker_init`` registers a field + group with the shared Broker (connecting
-the calling rank's group to its designated Cloud endpoint); ``broker_write``
-converts one in-memory chunk into a stream record and enqueues it on the
-asynchronous group sender; ``broker_finalize`` drains and closes.
+**Deprecated compatibility shim.**  Since the ``repro.workflow`` redesign
+this module is a thin veneer over :class:`repro.workflow.Session`:
+``broker_connect`` opens a module-global Session (the C API is inherently
+global — Listing 1.1 has no session object to thread through), and every
+``broker_ctx`` wraps a typed :class:`repro.workflow.FieldHandle`.  New code
+should construct a ``Session`` directly; this surface is kept so the
+paper's listings keep running verbatim.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.broker import Broker, BrokerConfig
+from repro.core.broker import Broker, BrokerConfig, BrokerStats
 from repro.core.grouping import GroupPlan, plan_groups
-from repro.core.records import FieldSchema
-
-
-@dataclass
-class CloudEndpoint:
-    """Paper: {char* service_ip; int service_port;}."""
-    service_ip: str
-    service_port: int
-    handle: object = None          # the in-process Endpoint (Redis stand-in)
-
-    def healthy(self) -> bool:
-        return self.handle is not None and self.handle.healthy()
-
-    def push(self, group_id: int, blob: bytes) -> None:
-        self.handle.push(group_id, blob)
+from repro.core.transport import CloudEndpoint  # noqa: F401  (re-export)
+from repro.workflow.config import WorkflowConfig
+from repro.workflow.session import FieldHandle, Session
 
 
 @dataclass
@@ -41,22 +33,35 @@ class broker_ctx:
     field_name: str
     rank: int
     group_id: int
+    handle: FieldHandle | None = None
 
 
-_shared_broker: Broker | None = None
+_shared_session: Session | None = None
+_shared_broker: Broker | None = None    # deprecated alias of _shared_session.broker
 
 
 def broker_connect(endpoints: list[CloudEndpoint], n_producers: int,
                    cfg: BrokerConfig | None = None,
                    plan: GroupPlan | None = None) -> Broker:
-    """Job-level setup: bind the producer job to a set of Cloud endpoints."""
-    global _shared_broker
-    plan = plan or plan_groups(n_producers,
-                               executors_per_group=16)
-    plan = GroupPlan(n_producers=n_producers,
-                     n_groups=min(plan.n_groups, len(endpoints)),
-                     executors_per_group=plan.executors_per_group)
-    _shared_broker = Broker(plan, endpoints, cfg)
+    """Job-level setup: bind the producer job to a set of Cloud endpoints.
+
+    Deprecated — use ``repro.workflow.Session`` for new code."""
+    global _shared_session, _shared_broker
+    plan = plan or plan_groups(n_producers, executors_per_group=16)
+    if plan.n_groups > len(endpoints):
+        warnings.warn(
+            f"GroupPlan asks for {plan.n_groups} groups but only "
+            f"{len(endpoints)} endpoints are connected; shrinking to "
+            f"{len(endpoints)} groups (each endpoint absorbs more producers — "
+            "resize the deployment or the plan)",
+            RuntimeWarning, stacklevel=2)
+    effective = GroupPlan(n_producers=n_producers,
+                          n_groups=min(plan.n_groups, len(endpoints)),
+                          executors_per_group=plan.executors_per_group)
+    wf = WorkflowConfig.from_broker_config(cfg or BrokerConfig(), effective)
+    _shared_session = Session(wf, endpoints=endpoints)
+    _shared_broker = _shared_session.broker
+    _shared_broker.stats.planned_groups = plan.n_groups
     return _shared_broker
 
 
@@ -66,17 +71,22 @@ def broker_init(field_name: str, rank: int, shape=(), dtype="float32",
     if b is None:
         raise RuntimeError("call broker_connect(endpoints, n_producers) first")
     g = b.plan.group_of(rank)
-    b.register(FieldSchema(field_name=field_name, shape=tuple(shape),
-                           dtype=dtype, group_id=g))
-    return broker_ctx(broker=b, field_name=field_name, rank=rank, group_id=g)
+    # coerce_dtype=False: the paper's broker_write shipped payloads in their
+    # input dtype (the declared dtype is schema metadata) — preserve that.
+    h = FieldHandle(b, field_name, shape=shape, dtype=dtype,
+                    coerce_dtype=False)
+    return broker_ctx(broker=b, field_name=field_name, rank=rank, group_id=g,
+                      handle=h)
 
 
 def broker_write(ctx: broker_ctx, step: int, data, data_len: int | None = None) -> bool:
     arr = np.asarray(data)
     if data_len is not None:
         arr = arr.reshape(-1)[:data_len]
-    return ctx.broker.write(ctx.field_name, ctx.rank, step, arr)
+    return ctx.handle.write(step, arr, rank=ctx.rank)
 
 
-def broker_finalize(ctx: broker_ctx):
+def broker_finalize(ctx: broker_ctx) -> BrokerStats:
+    if _shared_session is not None and ctx.broker is _shared_session.broker:
+        return _shared_session.close()
     return ctx.broker.finalize()

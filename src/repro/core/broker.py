@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.grouping import GroupPlan
 from repro.core.records import FieldSchema, StreamRecord, encode, encode_batch
+from repro.core.transport import Transport
 
 
 @dataclass
@@ -58,17 +59,22 @@ class BrokerStats:
     bytes_sent: int = 0
     send_errors: int = 0
     queue_high_water: int = 0
+    # Effective deployment shape: a connect-time plan that asks for more
+    # groups than there are endpoints is silently shrunk; these two fields
+    # make that visible (planned != effective ⇒ mis-sized deployment).
+    planned_groups: int = 0
+    effective_groups: int = 0
 
 
 class _GroupSender(threading.Thread):
     """One background sender per producer group (paper: one TCP stream per
     group to its designated endpoint)."""
 
-    def __init__(self, group_id: int, endpoints, primary: int,
+    def __init__(self, group_id: int, endpoints: list[Transport], primary: int,
                  cfg: BrokerConfig, stats: BrokerStats):
         super().__init__(daemon=True, name=f"broker-g{group_id}")
         self.group_id = group_id
-        self.endpoints = endpoints            # list[Endpoint-like]
+        self.endpoints = endpoints            # anything satisfying Transport
         self.primary = primary
         self.cfg = cfg
         self.stats = stats
@@ -79,6 +85,16 @@ class _GroupSender(threading.Thread):
         self._sample_ctr = 0
 
     # ---- producer side ------------------------------------------------
+    def _evict_one(self) -> bool:
+        """Drop the oldest queue item, counting its records (items are single
+        records or submit_batch lists)."""
+        try:
+            evicted = self.q.get_nowait()
+        except queue.Empty:
+            return False
+        self.stats.dropped += len(evicted) if isinstance(evicted, list) else 1
+        return True
+
     def submit(self, rec: StreamRecord) -> bool:
         self.stats.written += 1
         self.stats.queue_high_water = max(self.stats.queue_high_water,
@@ -91,11 +107,7 @@ class _GroupSender(threading.Thread):
             return True
         except queue.Full:
             if self.cfg.backpressure == "drop_oldest":
-                try:
-                    self.q.get_nowait()
-                    self.stats.dropped += 1
-                except queue.Empty:
-                    pass
+                self._evict_one()
                 try:
                     self.q.put_nowait(rec)
                     return True
@@ -105,44 +117,88 @@ class _GroupSender(threading.Thread):
             # sample: keep 1 of N while under pressure
             self._sample_ctr += 1
             if self._sample_ctr % self.cfg.sample_keep == 0:
-                try:
-                    self.q.get_nowait()
-                    self.stats.dropped += 1
-                    self.q.put_nowait(rec)
-                    return True
-                except (queue.Empty, queue.Full):
-                    pass
+                if self._evict_one():
+                    try:
+                        self.q.put_nowait(rec)
+                        return True
+                    except queue.Full:
+                        pass
             self.stats.dropped += 1
             return False
+
+    def submit_batch(self, recs: list[StreamRecord]) -> int:
+        """Enqueue a pre-batched record list as ONE queue item, so the whole
+        batch leaves as (at most) one wire frame regardless of sender-thread
+        timing — this is what gives ``FieldHandle.write_batch`` its ≤ one
+        frame per (field, group) guarantee.  Returns #records accepted."""
+        if not recs:
+            return 0
+        self.stats.written += len(recs)
+        self.stats.queue_high_water = max(self.stats.queue_high_water,
+                                          self.q.qsize())
+        item = list(recs)
+        if self.cfg.backpressure == "block":
+            self.q.put(item)
+            return len(item)
+        try:
+            self.q.put_nowait(item)
+            return len(item)
+        except queue.Full:
+            if self.cfg.backpressure == "drop_oldest":
+                self._evict_one()
+                try:
+                    self.q.put_nowait(item)
+                    return len(item)
+                except queue.Full:
+                    pass
+            elif self.cfg.backpressure == "sample":
+                # same 1-of-N policy as submit(), at batch granularity
+                self._sample_ctr += 1
+                if self._sample_ctr % self.cfg.sample_keep == 0 \
+                        and self._evict_one():
+                    try:
+                        self.q.put_nowait(item)
+                        return len(item)
+                    except queue.Full:
+                        pass
+            # overflow: the whole batch is one unit — drop it whole
+            self.stats.dropped += len(item)
+            return 0
 
     # ---- sender loop ---------------------------------------------------
     def run(self):
         """Drain the queue in aggregated frames: each wake-up takes every
         queued record (up to cfg.max_batch_records) and ships them as one
         batched wire frame, so a burst of writes pays framing/compression/
-        bandwidth-model cost once per batch, not once per record."""
+        bandwidth-model cost once per batch, not once per record.  Queue
+        items are single records (``submit``) or record lists
+        (``submit_batch``); an oversized list is chunked at the cap."""
         cap = max(1, self.cfg.max_batch_records)
         while not self._stop_evt.is_set() or not self.q.empty():
             try:
-                recs = [self.q.get(timeout=0.05)]
+                item = self.q.get(timeout=0.05)
             except queue.Empty:
                 continue
+            recs = list(item) if isinstance(item, list) else [item]
             while len(recs) < cap:
                 try:
-                    recs.append(self.q.get_nowait())
+                    nxt = self.q.get_nowait()
                 except queue.Empty:
                     break
-            if len(recs) == 1:
-                blob = encode(recs[0], compress=self.cfg.compress)
-            else:
-                blob = encode_batch(recs, compress=self.cfg.compress,
-                                    delta=self.cfg.delta_encode)
-            if self._send(blob):
-                self.stats.sent += len(recs)
-                self.stats.frames_sent += 1
-                self.stats.bytes_sent += len(blob)
-            else:
-                self.stats.dropped += len(recs)  # retries exhausted: lost
+                recs.extend(nxt if isinstance(nxt, list) else [nxt])
+            for i in range(0, len(recs), cap):
+                chunk = recs[i:i + cap]
+                if len(chunk) == 1:
+                    blob = encode(chunk[0], compress=self.cfg.compress)
+                else:
+                    blob = encode_batch(chunk, compress=self.cfg.compress,
+                                        delta=self.cfg.delta_encode)
+                if self._send(blob):
+                    self.stats.sent += len(chunk)
+                    self.stats.frames_sent += 1
+                    self.stats.bytes_sent += len(blob)
+                else:
+                    self.stats.dropped += len(chunk)  # retries exhausted: lost
 
     def _send(self, blob: bytes) -> bool:
         """Send to primary; on failure re-route to the next healthy endpoint
@@ -170,13 +226,15 @@ class _GroupSender(threading.Thread):
 class Broker:
     """Producer-side broker: one per job, shared by all local ranks."""
 
-    def __init__(self, plan: GroupPlan, endpoints, cfg: BrokerConfig | None = None):
+    def __init__(self, plan: GroupPlan, endpoints: list[Transport],
+                 cfg: BrokerConfig | None = None):
         assert len(endpoints) >= plan.n_groups, (
             f"{plan.n_groups} groups need >= that many endpoints, "
             f"got {len(endpoints)}")
         self.plan = plan
         self.cfg = cfg or BrokerConfig()
-        self.stats = BrokerStats()
+        self.stats = BrokerStats(planned_groups=plan.n_groups,
+                                 effective_groups=plan.n_groups)
         self.schemas: dict[str, FieldSchema] = {}
         self._senders: dict[int, _GroupSender] = {}
         for g in range(plan.n_groups):
@@ -196,17 +254,44 @@ class Broker:
                            step=step, payload=np.asarray(payload))
         return self._senders[g].submit(rec)
 
+    def write_batch(self, field_name: str, ranks, steps, payloads) -> int:
+        """Submit many records at once, one aggregated queue item per group,
+        so each group ships the batch as (at most) one wire frame.  ``ranks``,
+        ``steps`` and ``payloads`` are aligned sequences; returns #records
+        accepted (backpressure may drop whole per-group batches)."""
+        by_group: dict[int, list[StreamRecord]] = {}
+        for rank, step, payload in zip(ranks, steps, payloads):
+            g = self.plan.group_of(rank)
+            by_group.setdefault(g, []).append(
+                StreamRecord(field_name=field_name, group_id=g, rank=rank,
+                             step=step, payload=np.asarray(payload)))
+        return sum(self._senders[g].submit_batch(recs)
+                   for g, recs in by_group.items())
+
     def flush(self, timeout: float | None = None) -> None:
         """Block until every written record is delivered (or dropped/errored
-        out) — exact accounting, no queue-emptiness race."""
+        out) — exact accounting, no queue-emptiness race.
+
+        Gives up early only when *this* flush has watched a full retry budget
+        burn with zero delivery progress.  The error window is measured as a
+        delta from the start of the flush (and restarts whenever a record is
+        delivered or dropped), so error counts accumulated during a past
+        failure episode cannot trigger a return while records written after
+        the endpoints recovered are still in flight."""
         deadline = time.time() + (timeout or self.cfg.flush_timeout_s)
+        err_mark = self.stats.send_errors
+        progress_mark = self.stats.sent + self.stats.dropped
         while time.time() < deadline:
             st = self.stats
             undelivered = st.written - st.sent - st.dropped
             if undelivered <= 0 and all(s.q.empty() for s in self._senders.values()):
                 return
-            if st.send_errors >= self.cfg.retry_limit * max(undelivered, 1):
-                return  # endpoints down and retries exhausted
+            delivered = st.sent + st.dropped
+            if delivered != progress_mark:     # progress: restart error window
+                progress_mark = delivered
+                err_mark = st.send_errors
+            elif st.send_errors - err_mark >= self.cfg.retry_limit * max(undelivered, 1):
+                return  # endpoints down and this flush's retries exhausted
             time.sleep(0.01)
 
     def finalize(self) -> BrokerStats:

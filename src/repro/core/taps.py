@@ -6,29 +6,34 @@ The model trunk emits a ``taps`` pytree per step:
 
 Batch stays sharded over the mesh ``data`` axis, so each data-slice is a
 "process region" (the paper's MPI process).  ``TapStreamer.publish`` slices
-the per-region rows out of the (addressable) tap arrays and issues one
-``broker_write`` per (field, region) — asynchronously, on the broker's
-sender threads, never blocking the train loop.
+the per-region rows out of the (addressable) tap arrays and issues ONE
+``FieldHandle.write_batch`` per field — all regions of a field ride a single
+aggregated queue item per group, i.e. ≤ one wire frame per (field, group) —
+asynchronously, on the broker's sender threads, never blocking the train
+loop.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.api import broker_ctx, broker_init, broker_write
 from repro.core.broker import Broker
+from repro.workflow.session import FieldHandle, Session
 
 
 class TapStreamer:
-    """One per training/serving job; ranks = mesh data slices (regions)."""
+    """One per training/serving job; ranks = mesh data slices (regions).
 
-    def __init__(self, broker: Broker, n_regions: int,
+    Accepts a :class:`repro.workflow.Session` (preferred — handles come from
+    ``session.open_field``) or a bare :class:`Broker` (legacy call sites)."""
+
+    def __init__(self, session: Session | Broker, n_regions: int,
                  fields: tuple[str, ...] = ("resid_norm", "snapshot")):
         self.n_regions = n_regions
         self.fields = fields
-        self._ctx: dict[tuple[str, int], broker_ctx] = {}
-        for f in fields:
-            for r in range(n_regions):
-                self._ctx[(f, r)] = broker_init(f, r, broker=broker)
+        if isinstance(session, Session):
+            self._handles = {f: session.open_field(f) for f in fields}
+        else:
+            self._handles = {f: FieldHandle(session, f) for f in fields}
 
     def publish(self, step: int, taps: dict) -> int:
         """taps: pytree of numpy/jax arrays with a batch axis at dim 1.
@@ -40,12 +45,13 @@ class TapStreamer:
             arr = np.asarray(taps[f])
             B = arr.shape[1]
             per = max(1, B // self.n_regions)
+            ranks, payloads = [], []
             for r in range(self.n_regions):
                 rows = arr[:, r * per:(r + 1) * per]
                 if rows.size == 0:
                     continue
                 # region field snapshot: mean over region samples -> (R,) or (R,tap)
-                payload = rows.mean(axis=1)
-                if broker_write(self._ctx[(f, r)], step, payload):
-                    n += 1
+                ranks.append(r)
+                payloads.append(rows.mean(axis=1))
+            n += self._handles[f].write_batch(step, payloads, ranks=ranks)
         return n

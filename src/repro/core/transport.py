@@ -1,0 +1,200 @@
+"""Pluggable producer→endpoint transports (the broker's wire seam).
+
+The paper's Listing 1.1 binds producer groups to ``struct CloudEndpoint
+{char* service_ip; int service_port;}``.  The broker only ever needs two
+operations from that struct — *is the service up* and *ship one framed
+blob* — so those two calls are the :class:`Transport` protocol, and
+anything implementing them can carry a group's stream:
+
+* :class:`CloudEndpoint` — the paper's struct.  By default it delegates
+  straight to the in-process :class:`repro.streaming.endpoint.Endpoint`
+  (the Redis stand-in) via ``handle``; when a ``transport`` is attached it
+  routes through that instead, so the same object works for both wirings.
+* :class:`LoopbackTransport` — frames travel over a real localhost TCP
+  socket to a server thread that feeds the Endpoint.  Functionally
+  identical to the in-process path (same failover/health semantics), it
+  exists to prove the seam: a future Redis/ADIOS2/gRPC transport only has
+  to implement ``healthy``/``push``/``close``.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What the broker's group senders require of an endpoint binding."""
+
+    def healthy(self) -> bool:
+        ...
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+@dataclass
+class CloudEndpoint:
+    """Paper: {char* service_ip; int service_port;}."""
+
+    service_ip: str
+    service_port: int
+    handle: object = None       # the in-process Endpoint (Redis stand-in)
+    transport: object = None    # optional wire transport (e.g. loopback TCP)
+
+    def healthy(self) -> bool:
+        if self.transport is not None:
+            return self.transport.healthy()
+        return self.handle is not None and self.handle.healthy()
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        if self.transport is not None:
+            self.transport.push(group_id, blob)
+        else:
+            self.handle.push(group_id, blob)
+
+    def close(self) -> None:
+        if self.transport is not None:
+            self.transport.close()
+
+
+# ---------------------------------------------------------------------------
+# Loopback TCP transport
+# ---------------------------------------------------------------------------
+
+_HDR = struct.Struct("!BII")    # frame type, group_id, payload length
+_T_DATA = 0
+_T_HEALTH = 1
+
+
+def _recv_exact(conn: socket.socket, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = conn.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+class LoopbackTransport:
+    """Ship frames to an Endpoint over a localhost TCP socket.
+
+    Server side: an accept loop on 127.0.0.1:<ephemeral>; every frame is
+    either data (``Endpoint.push``) or a health probe, answered with a
+    one-byte ack (1 = accepted / healthy, 0 = endpoint down).  Client
+    side: a persistent connection (lock-guarded — multiple group senders
+    may share one endpoint) with one reconnect attempt on socket failure.
+    A rejected data frame raises ``ConnectionError`` exactly like the
+    in-process path, so the broker's retry/failover logic is transport-
+    agnostic.
+    """
+
+    def __init__(self, endpoint):
+        self.endpoint = endpoint
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind(("127.0.0.1", 0))
+        self._srv.listen(16)
+        # accept() must wake periodically: close() from another thread does
+        # not reliably interrupt a blocking accept on all platforms
+        self._srv.settimeout(0.2)
+        self.port = self._srv.getsockname()[1]
+        self._closing = threading.Event()
+        self._cli: socket.socket | None = None
+        self._cli_lock = threading.Lock()
+        self._accepter = threading.Thread(target=self._accept_loop,
+                                          daemon=True,
+                                          name=f"loopback-:{self.port}")
+        self._accepter.start()
+
+    # ---- server side ----------------------------------------------------
+    def _accept_loop(self):
+        while not self._closing.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            threading.Thread(target=self._serve, args=(conn,),
+                             daemon=True).start()
+
+    def _serve(self, conn: socket.socket):
+        try:
+            while True:
+                hdr = _recv_exact(conn, _HDR.size)
+                if hdr is None:
+                    return
+                typ, gid, ln = _HDR.unpack(hdr)
+                blob = _recv_exact(conn, ln) if ln else b""
+                if blob is None:
+                    return
+                if typ == _T_HEALTH:
+                    ok = self.endpoint.healthy()
+                else:
+                    try:
+                        self.endpoint.push(gid, blob)
+                        ok = True
+                    except Exception:
+                        ok = False
+                conn.sendall(b"\x01" if ok else b"\x00")
+        except OSError:
+            pass
+        finally:
+            conn.close()
+
+    # ---- client side ----------------------------------------------------
+    def _request(self, typ: int, group_id: int, blob: bytes) -> bool:
+        with self._cli_lock:
+            for attempt in range(2):           # one reconnect on stale socket
+                try:
+                    if self._cli is None:
+                        self._cli = socket.create_connection(
+                            ("127.0.0.1", self.port), timeout=5.0)
+                    self._cli.sendall(_HDR.pack(typ, group_id, len(blob)) + blob)
+                    ack = _recv_exact(self._cli, 1)
+                    if ack is None:
+                        raise ConnectionError("loopback server hung up")
+                    return ack == b"\x01"
+                except OSError:
+                    if self._cli is not None:
+                        try:
+                            self._cli.close()
+                        finally:
+                            self._cli = None
+                    if attempt:
+                        raise
+        raise ConnectionError("unreachable")   # pragma: no cover
+
+    def healthy(self) -> bool:
+        if self._closing.is_set():
+            return False
+        try:
+            return self._request(_T_HEALTH, 0, b"")
+        except OSError:
+            return False
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        if not self._request(_T_DATA, group_id, blob):
+            raise ConnectionError(
+                f"endpoint behind loopback:{self.port} rejected frame")
+
+    def close(self) -> None:
+        self._closing.set()
+        with self._cli_lock:
+            if self._cli is not None:
+                try:
+                    self._cli.close()
+                finally:
+                    self._cli = None
+        try:
+            self._srv.close()
+        except OSError:
+            pass

@@ -1,6 +1,6 @@
 """Batched serving driver: prefill + decode loop with serving-time broker
-telemetry (per-layer residual norms streamed per decode step — the paper's
-"insight into a running job", applied to inference).
+telemetry — per-layer residual norms streamed through a workflow Session per
+decode step (the paper's "insight into a running job", applied to inference).
 
 Usage:
   python -m repro.launch.serve --arch starcoder2-3b --preset ci \
@@ -20,6 +20,26 @@ from repro.data.pipeline import TokenPipeline
 from repro.models import transformer as T
 from repro.models.modules import materialize
 from repro.models.steps import make_decode_step, make_prefill_step
+from repro.workflow import Pipeline, Session, WorkflowConfig
+
+
+def _telemetry_pipeline():
+    """norms (mean per micro-batch) -> drift (|latest-first| across the whole
+    decode: the stage keeps the first-seen mean per stream, so each sink
+    value is cumulative, and latest() reports drift over the full loop)."""
+    first_seen = {}
+
+    def norms_stage(key, records):
+        recs = sorted(records, key=lambda r: r.step)
+        return [float(np.asarray(r.payload).mean()) for r in recs]
+
+    def drift_stage(key, means):
+        first = first_seen.setdefault(key, means[0])
+        return abs(means[-1] - first)
+
+    return (Pipeline()
+            .stage("norms", norms_stage)
+            .then("drift", drift_stage))
 
 
 def main(argv=None):
@@ -29,6 +49,7 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--no-broker", action="store_true")
     args = p.parse_args(argv)
 
     cfg = configs.get(args.arch)
@@ -37,6 +58,15 @@ def main(argv=None):
     params = materialize(T.build_specs(cfg), jax.random.key(0), cfg.dtype)
     prefill = jax.jit(make_prefill_step(cfg))
     decode = jax.jit(make_decode_step(cfg))
+
+    session = resid = None
+    if not args.no_broker:
+        workflow = WorkflowConfig(n_producers=1, n_groups=1,
+                                  executors_per_group=1, compress="none",
+                                  trigger_interval=0.1, min_batch=4,
+                                  n_executors=1)
+        session = Session(workflow, pipeline=_telemetry_pipeline())
+        resid = session.open_field("resid_norm")
 
     pipe = TokenPipeline(cfg, batch=args.batch, seq=args.prompt_len)
     batch = pipe.batch_at(0)
@@ -59,7 +89,10 @@ def main(argv=None):
     for i in range(args.gen - 1):
         pos = jnp.asarray(args.prompt_len + i, jnp.int32)
         nxt, cache, taps = decode(params, cache, tok, pos)
-        norms.append(np.asarray(taps["resid_norm"]).mean())
+        resid_norm = np.asarray(taps["resid_norm"])
+        norms.append(resid_norm.mean())
+        if resid is not None:    # per-layer means, streamed in-flight
+            resid.write(args.prompt_len + i, resid_norm.mean(axis=1))
         tok = nxt[:, None]
         seqs.append(np.asarray(nxt))
     jax.block_until_ready(tok)
@@ -71,8 +104,16 @@ def main(argv=None):
     print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
           f"{t_decode/max(args.gen-1,1)*1e3:.2f} ms/token "
           f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.1f} tok/s)")
-    print(f"[serve] telemetry: mean residual norm per step = "
-          f"{np.mean(norms):.3f} (streamed to broker in production)")
+    if session is not None:
+        stats = session.close()
+        drift = session.dag.latest("drift")
+        print(f"[serve] telemetry: mean residual norm per step = "
+              f"{np.mean(norms):.3f}; residual drift over decode = "
+              f"{max(drift.values(), default=0.0):.4f} "
+              f"({stats.sent} records / {stats.frames_sent} frames on the wire)")
+    else:
+        print(f"[serve] telemetry: mean residual norm per step = "
+              f"{np.mean(norms):.3f} (broker disabled)")
     print(f"[serve] sample continuation ids: {out[0][:12].tolist()}")
     return out
 

@@ -15,18 +15,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import replace
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.checkpoint.ckpt import CheckpointManager
-from repro.core.api import broker_connect
-from repro.core.broker import BrokerConfig
-from repro.core.grouping import GroupPlan
 from repro.core.taps import TapStreamer
 from repro.data.pipeline import TokenPipeline
 from repro.models import transformer as T
@@ -34,8 +28,7 @@ from repro.models.modules import materialize
 from repro.models.steps import make_train_step
 from repro.optim import adamw
 from repro.runtime.fault import FailureDetector
-from repro.streaming.endpoint import make_endpoints
-from repro.streaming.engine import StreamEngine
+from repro.workflow import Session, WorkflowConfig
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
 
@@ -97,16 +90,16 @@ def main(argv=None):
         params, opt = tree["params"], tree["opt"]
         print(f"[train] resumed from step {start}")
 
-    broker = engine = streamer = None
+    session = streamer = None
     if not args.no_broker:
-        eps = make_endpoints(max(1, args.regions // 4))
-        broker = broker_connect(
-            eps, n_producers=args.regions, cfg=BrokerConfig(compress="int8+zstd"),
-            plan=GroupPlan(args.regions, max(1, args.regions // 4), 4))
-        engine = StreamEngine([e.handle for e in eps],
-                              dmd_analyzer(cfg.tap_snapshot_dim),
-                              n_executors=args.regions, trigger_interval=1.0)
-        streamer = TapStreamer(broker, n_regions=args.regions)
+        workflow = WorkflowConfig(n_producers=args.regions,
+                                  n_groups=max(1, args.regions // 4),
+                                  executors_per_group=4,
+                                  compress="int8+zstd", trigger_interval=1.0,
+                                  n_executors=args.regions)
+        session = Session(workflow,
+                          analyze=dmd_analyzer(cfg.tap_snapshot_dim))
+        streamer = TapStreamer(session, n_regions=args.regions)
 
     det = FailureDetector(timeout_s=30.0)
     det.register("trainer", "producer")
@@ -127,19 +120,18 @@ def main(argv=None):
                   f"({(time.time()-t0)/(s-start+1):.2f}s/step)", flush=True)
     mgr.wait()
 
-    if engine is not None:
-        broker.flush()
-        engine.drain_and_stop()
+    if session is not None:
+        stats = session.close()      # broker drain -> engine drain, in order
         panel = {}
-        for r in engine.collect():
+        for r in session.results():
             if not isinstance(r.value, Exception):
                 panel[r.stream_key] = r.value
         print("[analysis] per-region DMD stability "
               "(closer to 0 = more stable dynamics):")
         for k in sorted(panel):
             print(f"  {k:32s} {panel[k]:.5f}")
-        print(f"[analysis] stream latency: {engine.latency_stats()}")
-        print(f"[broker] {broker.finalize()}")
+        print(f"[analysis] stream latency: {session.latency_stats()}")
+        print(f"[broker] {stats}")
     return float(metrics["loss"])
 
 

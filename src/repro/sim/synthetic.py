@@ -13,8 +13,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.api import broker_init, broker_write
 from repro.core.broker import Broker
+from repro.workflow.session import FieldHandle, Session
 
 
 @dataclass
@@ -30,9 +30,12 @@ class SyntheticGenerator:
     """Runs n_producers threads; payloads follow a low-rank linear dynamical
     system (so downstream DMD finds real eigenstructure, not noise)."""
 
-    def __init__(self, cfg: GeneratorConfig, broker: Broker):
+    def __init__(self, cfg: GeneratorConfig, session: Session | Broker):
         self.cfg = cfg
+        broker = session.broker if isinstance(session, Session) else session
         self.broker = broker
+        self._field = FieldHandle(broker, "synthetic",
+                                  shape=(cfg.field_elems,))
         rng = np.random.RandomState(0)
         k = cfg.coupled_modes
         theta = rng.uniform(0.05, 0.3, size=k)
@@ -54,12 +57,10 @@ class SyntheticGenerator:
         return self._mix @ z.astype(np.float32) + noise
 
     def _produce(self, rank: int):
-        ctx = broker_init("synthetic", rank, shape=(self.cfg.field_elems,),
-                          broker=self.broker)
         period = 1.0 / self.cfg.rate_hz
         for step in range(self.cfg.n_steps):
             t0 = time.time()
-            broker_write(ctx, step, self._payload(rank, step))
+            self._field.write(step, self._payload(rank, step), rank=rank)
             with self._lock:
                 self.produced += 1
             dt = time.time() - t0

@@ -31,6 +31,10 @@ class Stage:
 
 class AnalysisDAG:
     def __init__(self, stages: list[Stage], source: str):
+        names = [s.name for s in stages]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate stage names {dupes}")
         self.stages = {s.name: s for s in stages}
         assert source in self.stages, f"unknown source {source}"
         self.source = source
@@ -73,3 +77,10 @@ class AnalysisDAG:
     def results(self, stage: str) -> list[tuple[str, Any, float]]:
         with self._lock:
             return list(self.sinks[stage])
+
+    def latest(self, stage: str) -> dict[str, Any]:
+        """Most recent sink value per stream key (dashboards/panels)."""
+        out: dict[str, Any] = {}
+        for key, value, _t in self.results(stage):
+            out[key] = value
+        return out

@@ -79,12 +79,25 @@ class Endpoint:
 
 
 def make_endpoints(n: int, *, inbound_bw: float | None = None,
-                   base_port: int = 6379) -> list:
-    """The paper's `struct CloudEndpoint endpoints[NUM_GROUPS]`, in-process."""
-    from repro.core.api import CloudEndpoint
+                   base_port: int = 6379, transport: str = "inprocess") -> list:
+    """The paper's `struct CloudEndpoint endpoints[NUM_GROUPS]`.
+
+    ``transport="inprocess"`` binds each CloudEndpoint straight to its
+    Endpoint handle; ``"loopback"`` routes frames through a real localhost
+    TCP socket (same semantics, proves the Transport seam)."""
+    from repro.core.transport import CloudEndpoint, LoopbackTransport
     eps = []
     for i in range(n):
         h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port)
-        eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
-                                 service_port=base_port, handle=h))
+        if transport == "inprocess":
+            eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
+                                     service_port=base_port, handle=h))
+        elif transport == "loopback":
+            t = LoopbackTransport(h)
+            eps.append(CloudEndpoint(service_ip="127.0.0.1",
+                                     service_port=t.port, handle=h,
+                                     transport=t))
+        else:
+            raise ValueError(f"unknown transport {transport!r} "
+                             "(expected 'inprocess' or 'loopback')")
     return eps

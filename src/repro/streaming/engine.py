@@ -125,6 +125,28 @@ class StreamEngine:
                                         name="stream-driver")
         self._driver.start()
 
+    @classmethod
+    def from_config(cls, cfg, endpoints: list, analyze_fn: Callable, *,
+                    plan=None) -> "StreamEngine":
+        """Build from a ``repro.workflow.WorkflowConfig`` (duck-typed here to
+        keep streaming← workflow import-free).  ``n_executors=None`` falls
+        back to the plan's groups × executors_per_group — the paper's
+        16:1:16 operating point."""
+        n_exec = cfg.n_executors
+        if n_exec is None:
+            n_exec = plan.n_executors if plan is not None \
+                else max(1, len(endpoints)) * cfg.executors_per_group
+        return cls(endpoints, analyze_fn, n_executors=n_exec,
+                   trigger_interval=cfg.trigger_interval,
+                   min_batch=cfg.min_batch)
+
+    def attach_dag(self, dag: Callable) -> None:
+        """Session-driven rewiring: route every micro-batch through an
+        ``AnalysisDAG`` (or any ``(stream_key, records) -> value`` callable).
+        Takes effect for the next dispatched partition — executors look up
+        ``analyze_fn`` per call."""
+        self.analyze_fn = dag
+
     # ---- executor lifecycle (elasticity + failure) ----------------------
     def _add_executor_locked(self):
         ex = _Executor(len(self.executors), self)

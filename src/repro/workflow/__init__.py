@@ -1,0 +1,20 @@
+"""repro.workflow — the declarative HPC→Cloud workflow API.
+
+Public surface:
+
+* :class:`WorkflowConfig` — one validated config (topology + endpoint +
+  broker + engine knobs) with a lossless ``to_dict``/``from_dict``.
+* :class:`Session` — context manager owning endpoint creation, broker
+  construction, engine/DAG lifecycle, and ordered teardown.
+* :class:`FieldHandle` — typed producer handle (``write``/``write_batch``).
+* :class:`Pipeline` — fluent builder compiling to an ``AnalysisDAG``.
+
+The paper's Listing 1.1 C API (``broker_connect``/``broker_init``/
+``broker_write``/``broker_finalize`` in :mod:`repro.core.api`) is kept as a
+thin, deprecated compatibility shim over :class:`Session`.
+"""
+from repro.workflow.config import WorkflowConfig
+from repro.workflow.pipeline import Pipeline
+from repro.workflow.session import FieldHandle, Session
+
+__all__ = ["WorkflowConfig", "Session", "FieldHandle", "Pipeline"]

@@ -1,0 +1,138 @@
+"""One validated config for the whole HPC→Cloud workflow.
+
+The seed wired three separately-configured knob sets at every call site:
+``BrokerConfig`` (wire/queue), ``make_endpoints`` arguments (bandwidth,
+port), and the engine's constructor (``trigger_interval``/``min_batch``/
+``n_executors``).  :class:`WorkflowConfig` unifies them into a single
+declarative description of the deployment — the paper's
+producers : endpoints : executors topology plus every tuning knob — with a
+lossless ``to_dict``/``from_dict`` round-trip so deployments can live in
+JSON/YAML next to the job script.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, fields
+
+from repro.core.broker import BrokerConfig
+from repro.core.grouping import GroupPlan, plan_groups
+
+_BACKPRESSURE = ("block", "drop_oldest", "sample")
+_COMPRESS = ("none", "zstd", "int8", "int8+zstd")
+_TRANSPORT = ("inprocess", "loopback")
+
+
+@dataclass(frozen=True)
+class WorkflowConfig:
+    # -- topology (paper Fig 1: producers -> groups -> endpoints) ---------
+    n_producers: int = 4
+    n_groups: int | None = None        # None: bandwidth planner (plan_groups)
+    executors_per_group: int = 4
+    # -- endpoints --------------------------------------------------------
+    n_endpoints: int | None = None     # None: one per group
+    inbound_bw: float | None = None    # bytes/s per endpoint, None = unmetered
+    base_port: int = 6379
+    transport: str = "inprocess"       # inprocess | loopback
+    # -- broker (wire + queueing) -----------------------------------------
+    compress: str = "int8+zstd"
+    queue_capacity: int = 256
+    backpressure: str = "drop_oldest"
+    sample_keep: int = 2
+    flush_timeout_s: float = 10.0
+    retry_limit: int = 3
+    max_batch_records: int = 32
+    delta_encode: bool = False
+    # -- engine (micro-batching + executors) ------------------------------
+    trigger_interval: float = 1.0
+    min_batch: int = 2
+    n_executors: int | None = None     # None: plan.n_executors
+
+    # ---- validation -----------------------------------------------------
+    def validate(self) -> "WorkflowConfig":
+        if self.n_producers < 1:
+            raise ValueError(f"n_producers must be >= 1, got {self.n_producers}")
+        if self.n_groups is not None and not (1 <= self.n_groups <= self.n_producers):
+            raise ValueError(
+                f"n_groups must be in [1, n_producers={self.n_producers}], "
+                f"got {self.n_groups}")
+        if self.executors_per_group < 1:
+            raise ValueError("executors_per_group must be >= 1")
+        if self.n_endpoints is not None \
+                and self.n_endpoints < self.group_plan().n_groups:
+            raise ValueError(
+                f"{self.group_plan().n_groups} groups (explicit or "
+                f"auto-planned) need >= that many endpoints, "
+                f"config declares {self.n_endpoints}")
+        if self.sample_keep < 1:
+            raise ValueError("sample_keep must be >= 1")
+        if self.backpressure not in _BACKPRESSURE:
+            raise ValueError(f"backpressure must be one of {_BACKPRESSURE}, "
+                             f"got {self.backpressure!r}")
+        if self.compress not in _COMPRESS:
+            raise ValueError(f"compress must be one of {_COMPRESS}, "
+                             f"got {self.compress!r}")
+        if self.transport not in _TRANSPORT:
+            raise ValueError(f"transport must be one of {_TRANSPORT}, "
+                             f"got {self.transport!r}")
+        if self.queue_capacity < 1 or self.max_batch_records < 1:
+            raise ValueError("queue_capacity and max_batch_records must be >= 1")
+        if self.retry_limit < 1:
+            raise ValueError("retry_limit must be >= 1")
+        if self.trigger_interval <= 0 or self.flush_timeout_s <= 0:
+            raise ValueError("trigger_interval and flush_timeout_s must be > 0")
+        if self.min_batch < 1:
+            raise ValueError("min_batch must be >= 1")
+        if self.n_executors is not None and self.n_executors < 1:
+            raise ValueError("n_executors must be >= 1")
+        return self
+
+    # ---- derived sub-configs -------------------------------------------
+    def group_plan(self) -> GroupPlan:
+        if self.n_groups is None:
+            auto = plan_groups(self.n_producers,
+                               executors_per_group=self.executors_per_group)
+            n_groups = min(auto.n_groups, self.n_producers)
+        else:
+            n_groups = self.n_groups
+        return GroupPlan(n_producers=self.n_producers, n_groups=n_groups,
+                         executors_per_group=self.executors_per_group)
+
+    def broker_config(self) -> BrokerConfig:
+        return BrokerConfig(compress=self.compress,
+                            queue_capacity=self.queue_capacity,
+                            backpressure=self.backpressure,
+                            sample_keep=self.sample_keep,
+                            flush_timeout_s=self.flush_timeout_s,
+                            retry_limit=self.retry_limit,
+                            max_batch_records=self.max_batch_records,
+                            delta_encode=self.delta_encode)
+
+    @property
+    def endpoint_count(self) -> int:
+        return self.n_endpoints if self.n_endpoints is not None \
+            else self.group_plan().n_groups
+
+    # ---- (de)serialization ---------------------------------------------
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkflowConfig":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown WorkflowConfig keys: {sorted(unknown)}")
+        return cls(**d).validate()
+
+    @classmethod
+    def from_broker_config(cls, bcfg: BrokerConfig, plan: GroupPlan,
+                           **overrides) -> "WorkflowConfig":
+        """Lift the seed-era (BrokerConfig, GroupPlan) pair into a workflow
+        config — the compat shim's bridge."""
+        return cls(n_producers=plan.n_producers, n_groups=plan.n_groups,
+                   executors_per_group=plan.executors_per_group,
+                   compress=bcfg.compress, queue_capacity=bcfg.queue_capacity,
+                   backpressure=bcfg.backpressure, sample_keep=bcfg.sample_keep,
+                   flush_timeout_s=bcfg.flush_timeout_s,
+                   retry_limit=bcfg.retry_limit,
+                   max_batch_records=bcfg.max_batch_records,
+                   delta_encode=bcfg.delta_encode, **overrides).validate()

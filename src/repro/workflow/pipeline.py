@@ -1,0 +1,93 @@
+"""Fluent builder for in-situ analysis DAGs.
+
+The paper's §6 future work ("more complex DAGs") is implemented by
+:class:`repro.streaming.dag.AnalysisDAG`; this builder is the workflow-level
+front door that composes one without hand-assembling ``Stage`` lists:
+
+    pipe = (Pipeline()
+            .stage("dmd", dmd_fn)            # source: consumes micro-batches
+            .then("stability", stab_fn)      # downstream of the cursor
+            .branch("trend", trend_fn))      # sibling: same parent as cursor
+
+``stage`` declares the source (exactly once), ``then`` appends downstream of
+the cursor and advances it, ``branch`` attaches a sibling of the cursor
+(fan-out from the cursor's parent) without moving it, and ``at`` repositions
+the cursor for deeper topologies.  ``compile`` materializes the (validated,
+acyclic by construction) graph as an ``AnalysisDAG`` ready for
+``Session.attach_pipeline`` / ``StreamEngine.attach_dag``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.streaming.dag import AnalysisDAG, Stage
+
+StageFn = Callable[[str, Any], Any]
+
+
+class Pipeline:
+    def __init__(self):
+        self._fns: dict[str, StageFn] = {}
+        self._parent: dict[str, str | None] = {}
+        self._source: str | None = None
+        self._cursor: str | None = None
+
+    # ---- construction ---------------------------------------------------
+    def _add(self, name: str, fn: StageFn, parent: str | None) -> None:
+        if not name:
+            raise ValueError("stage name must be non-empty")
+        if name in self._fns:
+            raise ValueError(f"duplicate stage {name!r}")
+        self._fns[name] = fn
+        self._parent[name] = parent
+
+    def stage(self, name: str, fn: StageFn) -> "Pipeline":
+        """Declare the source stage (receives the raw micro-batch records)."""
+        if self._source is not None:
+            raise ValueError(
+                f"source {self._source!r} already declared; use then()/branch()")
+        self._add(name, fn, parent=None)
+        self._source = self._cursor = name
+        return self
+
+    def then(self, name: str, fn: StageFn) -> "Pipeline":
+        """Append ``name`` downstream of the cursor and move the cursor."""
+        if self._cursor is None:
+            raise ValueError("call stage() before then()")
+        self._add(name, fn, parent=self._cursor)
+        self._cursor = name
+        return self
+
+    def branch(self, name: str, fn: StageFn) -> "Pipeline":
+        """Attach ``name`` as a sibling of the cursor (fan-out from the
+        cursor's parent); the cursor stays put."""
+        if self._cursor is None:
+            raise ValueError("call stage() before branch()")
+        parent = self._parent[self._cursor]
+        if parent is None:
+            raise ValueError(
+                "branch() needs a prior then(); the source has no parent to "
+                "fan out from")
+        self._add(name, fn, parent=parent)
+        return self
+
+    def at(self, name: str) -> "Pipeline":
+        """Move the cursor to an existing stage (for multi-arm topologies)."""
+        if name not in self._fns:
+            raise ValueError(f"unknown stage {name!r}")
+        self._cursor = name
+        return self
+
+    # ---- introspection / compilation ------------------------------------
+    def edges(self) -> list[tuple[str, str]]:
+        return [(p, c) for c, p in self._parent.items() if p is not None]
+
+    def compile(self) -> AnalysisDAG:
+        if self._source is None:
+            raise ValueError("empty pipeline: declare a source with stage()")
+        downstream: dict[str, list[str]] = {n: [] for n in self._fns}
+        for parent, child in self.edges():
+            downstream[parent].append(child)
+        stages = [Stage(name=n, fn=fn, downstream=downstream[n])
+                  for n, fn in self._fns.items()]
+        return AnalysisDAG(stages, source=self._source)

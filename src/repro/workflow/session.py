@@ -1,0 +1,216 @@
+"""The composable Session owning the whole HPC→Cloud pipeline.
+
+One object replaces the seed's four hand-wired call sites:
+
+    with Session(WorkflowConfig(n_producers=8, n_groups=2),
+                 analyze=my_analyzer) as sess:
+        vel = sess.open_field("velocity", shape=(256,))
+        for s in range(steps):
+            vel.write(s, field, rank=r)            # or write_batch(...)
+    panel = sess.results()                         # after ordered teardown
+
+``Session`` owns endpoint creation (per the config's transport), broker
+construction, engine + DAG lifecycle, and ordered teardown —
+``broker.finalize()`` (drain producer queues onto the endpoints) then
+``engine.drain_and_stop()`` (drain endpoints through the analyzers) then
+transport close.  :class:`FieldHandle` is the typed producer-side handle the
+paper's free-floating ``broker_ctx`` grew into: dtype-coercing,
+shape-checking, and batch-aware (``write_batch`` ships all regions of a
+field as one aggregated queue item per group ⇒ ≤ one wire frame per
+(field, group)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.broker import Broker, BrokerStats
+from repro.core.records import FieldSchema
+from repro.streaming.dag import AnalysisDAG
+from repro.streaming.endpoint import make_endpoints
+from repro.streaming.engine import StreamEngine
+from repro.workflow.config import WorkflowConfig
+from repro.workflow.pipeline import Pipeline
+
+
+class FieldHandle:
+    """Typed handle for one streamed field (all ranks of the job).
+
+    ``shape=()`` means "unchecked" (the paper's ``void* data``); a concrete
+    shape makes every write validate the payload's size.  Arrays are coerced
+    to the declared dtype before they hit the wire — except with
+    ``coerce_dtype=False`` (the paper-API compat path), where the declared
+    dtype is schema metadata only and payloads keep their input dtype, as
+    the original ``broker_write`` did.
+    """
+
+    def __init__(self, broker: Broker, name: str, shape=(),
+                 dtype: str = "float32", rank: int = 0, *,
+                 coerce_dtype: bool = True):
+        self.broker = broker
+        self.name = name
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.coerce_dtype = coerce_dtype
+        self.rank = rank                    # default rank for write()
+        for g in range(broker.plan.n_groups):
+            broker.register(FieldSchema(field_name=name, shape=self.shape,
+                                        dtype=dtype, group_id=g))
+
+    def _coerce(self, arr) -> np.ndarray:
+        out = np.asarray(arr, dtype=self.dtype if self.coerce_dtype else None)
+        if self.shape and out.size != int(np.prod(self.shape)):
+            raise ValueError(
+                f"field {self.name!r} declared shape {self.shape} "
+                f"({int(np.prod(self.shape))} elems) but payload has shape "
+                f"{out.shape} ({out.size} elems)")
+        return out
+
+    def write(self, step: int, arr, *, rank: int | None = None) -> bool:
+        """Enqueue one snapshot; returns False if backpressure dropped it."""
+        r = self.rank if rank is None else rank
+        return self.broker.write(self.name, r, step, self._coerce(arr))
+
+    def write_batch(self, steps, arrs, *, ranks=None) -> int:
+        """Enqueue many snapshots as one aggregated batch.
+
+        ``steps`` is a scalar (broadcast) or a sequence aligned with
+        ``arrs``; ``ranks`` likewise (default: the handle's rank).  Records
+        are grouped by destination and each group receives ONE queue item,
+        so the batch leaves as at most one wire frame per (field, group).
+        Returns #records accepted.
+        """
+        arrs = [self._coerce(a) for a in arrs]
+        n = len(arrs)
+        if np.isscalar(steps):
+            steps = [int(steps)] * n
+        if ranks is None:
+            ranks = [self.rank] * n
+        elif np.isscalar(ranks):
+            ranks = [int(ranks)] * n
+        if not (len(steps) == len(ranks) == n):
+            raise ValueError(
+                f"write_batch needs aligned sequences: {len(steps)} steps, "
+                f"{len(ranks)} ranks, {n} payloads")
+        return self.broker.write_batch(self.name, list(ranks), list(steps), arrs)
+
+    def __repr__(self):
+        return (f"FieldHandle({self.name!r}, shape={self.shape}, "
+                f"dtype={self.dtype!r})")
+
+
+class Session:
+    """Context manager owning broker → endpoint → engine → DAG wiring."""
+
+    def __init__(self, config: WorkflowConfig | None = None, *,
+                 endpoints: list | None = None, analyze=None, pipeline=None):
+        self.config = (config or WorkflowConfig()).validate()
+        self.plan = self.config.group_plan()
+        if endpoints is not None:
+            self.endpoints = list(endpoints)
+            self._owns_endpoints = False
+        else:
+            # endpoint_count >= plan.n_groups is enforced by validate()
+            self.endpoints = make_endpoints(
+                self.config.endpoint_count,
+                inbound_bw=self.config.inbound_bw,
+                base_port=self.config.base_port,
+                transport=self.config.transport)
+            self._owns_endpoints = True
+        self.broker = Broker(self.plan, self.endpoints,
+                             self.config.broker_config())
+        self.engine: StreamEngine | None = None
+        self.dag: AnalysisDAG | None = None
+        self._fields: dict[tuple, FieldHandle] = {}
+        self._closed = False
+        try:
+            if pipeline is not None:
+                self.attach_pipeline(pipeline)
+            elif analyze is not None:
+                self.attach_analyzer(analyze)
+        except Exception:   # don't leak sender threads / loopback sockets
+            self.close()
+            raise
+
+    # ---- consumer-side wiring -------------------------------------------
+    def _handles(self) -> list:
+        return [e.handle for e in self.endpoints]
+
+    def attach_analyzer(self, fn) -> StreamEngine:
+        """Point the engine at ``fn(stream_key, records)`` (created lazily
+        on first attach; swapped in place afterwards)."""
+        if self.engine is None:
+            self.engine = StreamEngine.from_config(
+                self.config, self._handles(), fn, plan=self.plan)
+        else:
+            self.engine.analyze_fn = fn
+        return self.engine
+
+    def attach_pipeline(self, pipeline: Pipeline | AnalysisDAG) -> AnalysisDAG:
+        """Compile a Pipeline (or adopt a prebuilt AnalysisDAG) and route
+        every micro-batch through it."""
+        dag = pipeline.compile() if isinstance(pipeline, Pipeline) else pipeline
+        if self.engine is None:
+            self.engine = StreamEngine.from_config(
+                self.config, self._handles(), dag, plan=self.plan)
+        else:
+            self.engine.attach_dag(dag)
+        self.dag = dag
+        return dag
+
+    # ---- producer-side API ----------------------------------------------
+    def open_field(self, name: str, shape=(), dtype: str = "float32") -> FieldHandle:
+        """Register a field and return its (cached) typed handle."""
+        key = (name, tuple(shape), dtype)
+        if key not in self._fields:
+            self._fields[key] = FieldHandle(self.broker, name, shape=shape,
+                                            dtype=dtype)
+        return self._fields[key]
+
+    # ---- observability ---------------------------------------------------
+    @property
+    def stats(self) -> BrokerStats:
+        return self.broker.stats
+
+    def results(self, stage: str | None = None) -> list:
+        """Engine results, or a DAG stage's sink when ``stage`` is given."""
+        if stage is not None:
+            if self.dag is None:
+                raise ValueError("no pipeline attached; results(stage=...) "
+                                 "needs attach_pipeline()")
+            return self.dag.results(stage)
+        return self.engine.collect() if self.engine is not None else []
+
+    def latency_stats(self) -> dict:
+        return self.engine.latency_stats() if self.engine is not None else {"n": 0}
+
+    def flush(self, timeout: float | None = None) -> None:
+        self.broker.flush(timeout=timeout)
+
+    # ---- lifecycle --------------------------------------------------------
+    def close(self) -> BrokerStats:
+        """Ordered teardown: broker.finalize() → engine.drain_and_stop() →
+        transport close.  Idempotent; returns the final broker stats."""
+        if self._closed:
+            return self.broker.stats
+        self._closed = True
+        stats = self.broker.finalize()
+        if self.engine is not None:
+            self.engine.drain_and_stop()
+        if self._owns_endpoints:
+            for ep in self.endpoints:
+                close = getattr(ep, "close", None)
+                if close is not None:
+                    close()
+        return stats
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def __repr__(self):
+        state = "closed" if self._closed else "open"
+        return (f"Session({state}, plan={self.plan.n_producers}p/"
+                f"{self.plan.n_groups}g, transport={self.config.transport!r}, "
+                f"fields={sorted({k[0] for k in self._fields})})")

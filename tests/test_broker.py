@@ -5,8 +5,11 @@ import time
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:        # hypothesis gates only the property tests, not the whole module
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core.api import broker_connect, broker_init, broker_write, broker_finalize
 from repro.core.broker import Broker, BrokerConfig
@@ -15,70 +18,79 @@ from repro.core.records import StreamRecord, encode, decode, quantize_int8, dequ
 from repro.streaming.endpoint import make_endpoints
 
 
-# ---------------------------------------------------------------- grouping
-@given(n=st.integers(1, 512), groups=st.integers(1, 64))
-@settings(max_examples=60, deadline=None)
-def test_grouping_partitions(n, groups):
-    plan = GroupPlan(n_producers=n, n_groups=min(groups, n), executors_per_group=2)
-    seen = {}
-    for r in range(n):
-        g = plan.group_of(r)
-        assert 0 <= g < plan.n_groups
-        seen.setdefault(g, []).append(r)
-    # complete partition + balanced within 1
-    assert sum(len(v) for v in seen.values()) == n
-    sizes = [len(v) for v in seen.values()]
-    assert max(sizes) - min(sizes) <= 1
+# ------------------------------------------------- grouping + codec (property)
+if HAS_HYPOTHESIS:
+    @given(n=st.integers(1, 512), groups=st.integers(1, 64))
+    @settings(max_examples=60, deadline=None)
+    def test_grouping_partitions(n, groups):
+        plan = GroupPlan(n_producers=n, n_groups=min(groups, n),
+                         executors_per_group=2)
+        seen = {}
+        for r in range(n):
+            g = plan.group_of(r)
+            assert 0 <= g < plan.n_groups
+            seen.setdefault(g, []).append(r)
+        # complete partition + balanced within 1
+        assert sum(len(v) for v in seen.values()) == n
+        sizes = [len(v) for v in seen.values()]
+        assert max(sizes) - min(sizes) <= 1
 
+    @given(n=st.integers(1, 2048),
+           rate=st.floats(0.1, 100), rec=st.floats(1e3, 1e8))
+    @settings(max_examples=60, deadline=None)
+    def test_planner_respects_bandwidth(n, rate, rec):
+        plan = plan_groups(n, record_rate_hz=rate, record_bytes=rec,
+                           endpoint_in_bw=10e9)
+        demand = min(rate * rec, 1e9)
+        per_ep = (n + plan.n_groups - 1) // plan.n_groups
+        assert per_ep * demand <= 10e9 * 1.01 or per_ep <= 1 or per_ep <= 16
 
-@given(n=st.integers(1, 2048),
-       rate=st.floats(0.1, 100), rec=st.floats(1e3, 1e8))
-@settings(max_examples=60, deadline=None)
-def test_planner_respects_bandwidth(n, rate, rec):
-    plan = plan_groups(n, record_rate_hz=rate, record_bytes=rec,
-                       endpoint_in_bw=10e9)
-    demand = min(rate * rec, 1e9)
-    per_ep = (n + plan.n_groups - 1) // plan.n_groups
-    assert per_ep * demand <= 10e9 * 1.01 or per_ep <= 1 or per_ep <= 16
+    @given(shape=st.sampled_from([(4,), (64,), (3, 5), (128,), (2, 2, 2)]),
+           compress=st.sampled_from(["none", "zstd", "int8", "int8+zstd"]))
+    @settings(max_examples=40, deadline=None)
+    def test_record_roundtrip(shape, compress):
+        rng = np.random.RandomState(1)
+        payload = rng.randn(*shape).astype(np.float32) * 5
+        rec = StreamRecord(field_name="velocity_x", group_id=3, rank=7,
+                           step=11, payload=payload)
+        out = decode(encode(rec, compress=compress))
+        assert out.field_name == "velocity_x" and out.rank == 7 and out.step == 11
+        assert out.payload.shape == tuple(shape)
+        tol = 0.0 if "int8" not in compress else np.abs(payload).max() / 100
+        np.testing.assert_allclose(out.payload, payload, atol=tol + 1e-7)
 
-
-# ---------------------------------------------------------------- codec
-@given(shape=st.sampled_from([(4,), (64,), (3, 5), (128,), (2, 2, 2)]),
-       compress=st.sampled_from(["none", "zstd", "int8", "int8+zstd"]))
-@settings(max_examples=40, deadline=None)
-def test_record_roundtrip(shape, compress):
-    rng = np.random.RandomState(1)
-    payload = rng.randn(*shape).astype(np.float32) * 5
-    rec = StreamRecord(field_name="velocity_x", group_id=3, rank=7, step=11,
-                       payload=payload)
-    out = decode(encode(rec, compress=compress))
-    assert out.field_name == "velocity_x" and out.rank == 7 and out.step == 11
-    assert out.payload.shape == tuple(shape)
-    tol = 0.0 if "int8" not in compress else np.abs(payload).max() / 100
-    np.testing.assert_allclose(out.payload, payload, atol=tol + 1e-7)
-
-
-@given(n=st.integers(1, 2000))
-@settings(max_examples=30, deadline=None)
-def test_int8_codec_bound(n):
-    rng = np.random.RandomState(n)
-    x = (rng.randn(n) * rng.uniform(0.01, 100)).astype(np.float32)
-    back = dequantize_int8(quantize_int8(x))
-    # per-block error <= scale/2 = absmax/254
-    assert np.abs(back - x).max() <= np.abs(x).max() / 100
+    @given(n=st.integers(1, 2000))
+    @settings(max_examples=30, deadline=None)
+    def test_int8_codec_bound(n):
+        rng = np.random.RandomState(n)
+        x = (rng.randn(n) * rng.uniform(0.01, 100)).astype(np.float32)
+        back = dequantize_int8(quantize_int8(x))
+        # per-block error <= scale/2 = absmax/254
+        assert np.abs(back - x).max() <= np.abs(x).max() / 100
 
 
 # ---------------------------------------------------------------- transport
-def _mk(n_producers=8, n_eps=2, **cfg_kw):
-    eps = make_endpoints(n_eps)
-    plan = GroupPlan(n_producers=n_producers, n_groups=n_eps,
-                     executors_per_group=2)
-    broker = Broker(plan, eps, BrokerConfig(**cfg_kw))
-    return broker, eps
+# The same broker suite runs over both Transport implementations: the
+# in-process CloudEndpoint.handle delegation and the loopback TCP socket.
+@pytest.fixture(params=["inprocess", "loopback"])
+def mk(request):
+    created = []
+
+    def _mk(n_producers=8, n_eps=2, **cfg_kw):
+        eps = make_endpoints(n_eps, transport=request.param)
+        created.extend(eps)
+        plan = GroupPlan(n_producers=n_producers, n_groups=n_eps,
+                         executors_per_group=2)
+        broker = Broker(plan, eps, BrokerConfig(**cfg_kw))
+        return broker, eps
+
+    yield _mk
+    for e in created:
+        e.close()
 
 
-def test_write_reaches_designated_endpoint():
-    broker, eps = _mk()
+def test_write_reaches_designated_endpoint(mk):
+    broker, eps = mk()
     for rank in range(8):
         broker.write("f", rank, step=0, payload=np.arange(4, dtype=np.float32))
     broker.finalize()
@@ -90,9 +102,9 @@ def test_write_reaches_designated_endpoint():
     assert len(keys) == 8
 
 
-def test_backpressure_drop_oldest():
-    broker, eps = _mk(n_producers=1, n_eps=1, queue_capacity=4,
-                      backpressure="drop_oldest")
+def test_backpressure_drop_oldest(mk):
+    broker, eps = mk(n_producers=1, n_eps=1, queue_capacity=4,
+                     backpressure="drop_oldest")
     eps[0].handle.fail()  # sender can't drain -> queue fills
     for step in range(50):
         broker.write("f", 0, step, np.zeros(8, np.float32))
@@ -107,8 +119,8 @@ def test_backpressure_drop_oldest():
         assert max(r.step for r in recs) == 49
 
 
-def test_endpoint_failover_reroutes():
-    broker, eps = _mk(n_producers=4, n_eps=2, retry_limit=3)
+def test_endpoint_failover_reroutes(mk):
+    broker, eps = mk(n_producers=4, n_eps=2, retry_limit=3)
     eps[0].handle.fail()   # group 0's designated endpoint dies
     for step in range(10):
         for rank in range(4):
