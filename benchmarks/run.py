@@ -1,11 +1,13 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-  fig6      end-to-end simulation time: file vs broker vs sim-only (Fig 6)
-  fig7      latency + aggregated throughput scaling (Fig 7a/7b)
-  kernels   kernel-layer microbenchmarks
-  roofline  the 40-cell dry-run roofline table (from artifacts)
+  fig6        end-to-end simulation time: file vs broker vs sim-only (Fig 6)
+  fig7        latency + aggregated throughput scaling (Fig 7a/7b)
+  kernels     kernel-layer microbenchmarks
+  roofline    the 40-cell dry-run roofline table (from artifacts)
+  elasticity  closed-loop load-spike study (off by default; ~30s extra)
 
-``python -m benchmarks.run [--only fig6,fig7,kernels,roofline] [--json PATH]``
+``python -m benchmarks.run [--only fig6,fig7,kernels,roofline,elasticity]
+[--json PATH]``
 
 Each section's rows are also written as JSON (default ``BENCH_run.json`` at
 the repo root) so the BENCH trajectory is machine-readable PR over PR.
@@ -53,6 +55,9 @@ def main() -> None:
     if "roofline" in want:
         from benchmarks import roofline
         sections.append(("roofline", roofline.main))
+    if "elasticity" in want:
+        from benchmarks import elasticity
+        sections.append(("elasticity", lambda: elasticity.main(smoke=True)))
 
     for name, fn in sections:
         print(f"\n# ==== {name} ====", flush=True)

@@ -61,7 +61,7 @@ def broker_connect(endpoints: list[CloudEndpoint], n_producers: int,
     wf = WorkflowConfig.from_broker_config(cfg or BrokerConfig(), effective)
     _shared_session = Session(wf, endpoints=endpoints)
     _shared_broker = _shared_session.broker
-    _shared_broker.stats.planned_groups = plan.n_groups
+    _shared_broker.planned_groups = plan.n_groups
     return _shared_broker
 
 

@@ -13,18 +13,27 @@ Fault tolerance beyond the paper: bounded-queue backpressure policies
 re-routing to surviving endpoints, and per-group delivery metrics.
 
 Wire aggregation (the paper's "data aggregation" duty): each sender
-wake-up coalesces all queued records — up to ``cfg.max_batch_records`` —
-into one batched frame (core/records.py ``encode_batch``), so framing,
-compression, and the endpoint's bandwidth model are paid per batch rather
-than per record.  ``stats.frames_sent`` vs ``stats.sent`` shows the
+wake-up coalesces all queued records — up to the sender's ``batch_cap``,
+seeded from ``cfg.max_batch_records`` and adjustable at runtime
+(``Broker.set_batch_cap``, driven by the elasticity controller from queue
+depth) — into one batched frame (core/records.py ``encode_batch``), so
+framing, compression, and the endpoint's bandwidth model are paid per batch
+rather than per record.  ``stats.frames_sent`` vs ``stats.sent`` shows the
 achieved aggregation ratio.
+
+Stats accounting is race-free by construction: every ``_GroupSender`` owns a
+lock-guarded :class:`_SenderStats` that only its producers/sender touch, and
+``Broker.stats`` merges them into one :class:`BrokerStats` view on read —
+counters stay exact under arbitrary producer/sender concurrency (the seed
+shared one unlocked dataclass across all sender threads, so ``+=`` lost
+updates under load).
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -44,13 +53,17 @@ class BrokerConfig:
     # Wire aggregation: each sender wake-up coalesces every record already
     # queued (up to this many) into one batched frame — one msgpack frame,
     # one zstd pass, one Endpoint.push per batch instead of per record.
-    # 1 disables coalescing (seed per-record framing).
+    # 1 disables coalescing (seed per-record framing).  This seeds each
+    # sender's mutable ``batch_cap``.
     max_batch_records: int = 32
     delta_encode: bool = False        # delta-vs-previous-step in batch frames
 
 
 @dataclass
 class BrokerStats:
+    """Merged, read-only view over the per-sender counters (``Broker.stats``
+    builds a fresh one per read)."""
+
     written: int = 0
     sent: int = 0                     # records delivered
     frames_sent: int = 0              # wire frames pushed (≤ sent)
@@ -66,23 +79,73 @@ class BrokerStats:
     effective_groups: int = 0
 
 
+_COUNTER_FIELDS = ("written", "sent", "frames_sent", "dropped", "rerouted",
+                   "bytes_sent", "send_errors")
+
+
+class _SenderStats:
+    """Lock-guarded per-sender counters.  One instance per ``_GroupSender``;
+    the producer threads (submit/submit_batch) and the sender thread mutate
+    it under ``lock``, so reads via ``snapshot()`` are exact."""
+
+    __slots__ = ("lock", "written", "sent", "frames_sent", "dropped",
+                 "rerouted", "bytes_sent", "send_errors", "queue_high_water")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        for f in _COUNTER_FIELDS:
+            setattr(self, f, 0)
+        self.queue_high_water = 0
+
+    def add(self, **deltas: int) -> None:
+        with self.lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def observe_depth(self, depth: int) -> None:
+        with self.lock:
+            if depth > self.queue_high_water:
+                self.queue_high_water = depth
+
+    def snapshot(self) -> dict:
+        with self.lock:
+            out = {f: getattr(self, f) for f in _COUNTER_FIELDS}
+            out["queue_high_water"] = self.queue_high_water
+            return out
+
+
 class _GroupSender(threading.Thread):
     """One background sender per producer group (paper: one TCP stream per
     group to its designated endpoint)."""
 
     def __init__(self, group_id: int, endpoints: list[Transport], primary: int,
-                 cfg: BrokerConfig, stats: BrokerStats):
+                 cfg: BrokerConfig):
         super().__init__(daemon=True, name=f"broker-g{group_id}")
         self.group_id = group_id
         self.endpoints = endpoints            # anything satisfying Transport
         self.primary = primary
         self.cfg = cfg
-        self.stats = stats
+        # each sender owns its counters; Broker.stats merges them on read
+        self.stats = _SenderStats()
+        # mutable wire-aggregation cap, adapted at runtime from queue depth
+        # by the elasticity controller (seeded from the static config)
+        self.batch_cap = max(1, cfg.max_batch_records)
         self.q: queue.Queue = queue.Queue(maxsize=cfg.queue_capacity)
         # NB: must not be named `_stop` — that would shadow Thread._stop(),
         # which threading.join() calls on finished threads
         self._stop_evt = threading.Event()
+        self._sample_lock = threading.Lock()
         self._sample_ctr = 0
+
+    def set_batch_cap(self, cap: int) -> int:
+        self.batch_cap = max(1, int(cap))
+        return self.batch_cap
+
+    def _sample_tick(self) -> bool:
+        """1-of-N admission under `sample` pressure, race-free."""
+        with self._sample_lock:
+            self._sample_ctr += 1
+            return self._sample_ctr % self.cfg.sample_keep == 0
 
     # ---- producer side ------------------------------------------------
     def _evict_one(self) -> bool:
@@ -92,13 +155,12 @@ class _GroupSender(threading.Thread):
             evicted = self.q.get_nowait()
         except queue.Empty:
             return False
-        self.stats.dropped += len(evicted) if isinstance(evicted, list) else 1
+        self.stats.add(dropped=len(evicted) if isinstance(evicted, list) else 1)
         return True
 
     def submit(self, rec: StreamRecord) -> bool:
-        self.stats.written += 1
-        self.stats.queue_high_water = max(self.stats.queue_high_water,
-                                          self.q.qsize())
+        self.stats.add(written=1)
+        self.stats.observe_depth(self.q.qsize())
         if self.cfg.backpressure == "block":
             self.q.put(rec)
             return True
@@ -112,18 +174,17 @@ class _GroupSender(threading.Thread):
                     self.q.put_nowait(rec)
                     return True
                 except queue.Full:
-                    self.stats.dropped += 1
+                    self.stats.add(dropped=1)
                     return False
             # sample: keep 1 of N while under pressure
-            self._sample_ctr += 1
-            if self._sample_ctr % self.cfg.sample_keep == 0:
+            if self._sample_tick():
                 if self._evict_one():
                     try:
                         self.q.put_nowait(rec)
                         return True
                     except queue.Full:
                         pass
-            self.stats.dropped += 1
+            self.stats.add(dropped=1)
             return False
 
     def submit_batch(self, recs: list[StreamRecord]) -> int:
@@ -133,9 +194,8 @@ class _GroupSender(threading.Thread):
         frame per (field, group) guarantee.  Returns #records accepted."""
         if not recs:
             return 0
-        self.stats.written += len(recs)
-        self.stats.queue_high_water = max(self.stats.queue_high_water,
-                                          self.q.qsize())
+        self.stats.add(written=len(recs))
+        self.stats.observe_depth(self.q.qsize())
         item = list(recs)
         if self.cfg.backpressure == "block":
             self.q.put(item)
@@ -153,28 +213,27 @@ class _GroupSender(threading.Thread):
                     pass
             elif self.cfg.backpressure == "sample":
                 # same 1-of-N policy as submit(), at batch granularity
-                self._sample_ctr += 1
-                if self._sample_ctr % self.cfg.sample_keep == 0 \
-                        and self._evict_one():
+                if self._sample_tick() and self._evict_one():
                     try:
                         self.q.put_nowait(item)
                         return len(item)
                     except queue.Full:
                         pass
             # overflow: the whole batch is one unit — drop it whole
-            self.stats.dropped += len(item)
+            self.stats.add(dropped=len(item))
             return 0
 
     # ---- sender loop ---------------------------------------------------
     def run(self):
         """Drain the queue in aggregated frames: each wake-up takes every
-        queued record (up to cfg.max_batch_records) and ships them as one
-        batched wire frame, so a burst of writes pays framing/compression/
-        bandwidth-model cost once per batch, not once per record.  Queue
-        items are single records (``submit``) or record lists
-        (``submit_batch``); an oversized list is chunked at the cap."""
-        cap = max(1, self.cfg.max_batch_records)
+        queued record (up to ``batch_cap``, re-read per wake-up so the
+        controller can retune it live) and ships them as one batched wire
+        frame, so a burst of writes pays framing/compression/bandwidth-model
+        cost once per batch, not once per record.  Queue items are single
+        records (``submit``) or record lists (``submit_batch``); an oversized
+        list is chunked at the cap."""
         while not self._stop_evt.is_set() or not self.q.empty():
+            cap = max(1, self.batch_cap)
             try:
                 item = self.q.get(timeout=0.05)
             except queue.Empty:
@@ -194,11 +253,10 @@ class _GroupSender(threading.Thread):
                     blob = encode_batch(chunk, compress=self.cfg.compress,
                                         delta=self.cfg.delta_encode)
                 if self._send(blob):
-                    self.stats.sent += len(chunk)
-                    self.stats.frames_sent += 1
-                    self.stats.bytes_sent += len(blob)
+                    self.stats.add(sent=len(chunk), frames_sent=1,
+                                   bytes_sent=len(blob))
                 else:
-                    self.stats.dropped += len(chunk)  # retries exhausted: lost
+                    self.stats.add(dropped=len(chunk))  # retries exhausted
 
     def _send(self, blob: bytes) -> bool:
         """Send to primary; on failure re-route to the next healthy endpoint
@@ -210,13 +268,31 @@ class _GroupSender(threading.Thread):
                 if ep.healthy():
                     ep.push(self.group_id, blob)
                     if attempt > 0:
-                        self.stats.rerouted += 1
+                        self.stats.add(rerouted=1)
                         self.primary = (self.primary + attempt) % n
                     return True
             except Exception:
                 pass
-            self.stats.send_errors += 1
+            self.stats.add(send_errors=1)
         return False
+
+    def reroute(self) -> int | None:
+        """Proactively move the primary off a known-dead endpoint (the
+        controller's FailureDetector path) instead of waiting for the next
+        send to burn retries.  Returns the new primary index, or None when no
+        healthy endpoint exists."""
+        n = len(self.endpoints)
+        for shift in range(1, n + 1):
+            idx = (self.primary + shift) % n
+            try:
+                if self.endpoints[idx].healthy():
+                    if idx != self.primary:
+                        self.primary = idx
+                        self.stats.add(rerouted=1)
+                    return idx
+            except Exception:
+                continue
+        return None
 
     def stop(self, timeout: float):
         self._stop_evt.set()
@@ -233,15 +309,65 @@ class Broker:
             f"got {len(endpoints)}")
         self.plan = plan
         self.cfg = cfg or BrokerConfig()
-        self.stats = BrokerStats(planned_groups=plan.n_groups,
-                                 effective_groups=plan.n_groups)
+        self.endpoints = list(endpoints)
+        self.planned_groups = plan.n_groups
+        self.effective_groups = plan.n_groups
         self.schemas: dict[str, FieldSchema] = {}
         self._senders: dict[int, _GroupSender] = {}
         for g in range(plan.n_groups):
-            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg,
-                             self.stats)
+            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg)
             s.start()
             self._senders[g] = s
+
+    # ---- observability --------------------------------------------------
+    @property
+    def stats(self) -> BrokerStats:
+        """Exact merged view: per-sender counters aggregated on read."""
+        out = BrokerStats(planned_groups=self.planned_groups,
+                          effective_groups=self.effective_groups)
+        for s in self._senders.values():
+            snap = s.stats.snapshot()
+            for f in _COUNTER_FIELDS:
+                setattr(out, f, getattr(out, f) + snap[f])
+            out.queue_high_water = max(out.queue_high_water,
+                                       snap["queue_high_water"])
+        return out
+
+    def group_telemetry(self) -> list[dict]:
+        """Per-group control-plane sample: live queue depth, batch cap,
+        primary endpoint, and the sender's exact counters — the broker's
+        contribution to ``runtime.telemetry.TelemetrySnapshot``."""
+        rows = []
+        for g, s in sorted(self._senders.items()):
+            row = s.stats.snapshot()
+            row.update(group=g, queue_depth=s.q.qsize(),
+                       queue_capacity=self.cfg.queue_capacity,
+                       batch_cap=s.batch_cap, primary=s.primary)
+            rows.append(row)
+        return rows
+
+    # ---- control-plane actuators ----------------------------------------
+    def set_batch_cap(self, cap: int, group: int | None = None) -> None:
+        """Retune wire aggregation at runtime (controller: deep queue ⇒
+        bigger frames to amortize, shallow queue ⇒ small frames for
+        latency).  ``group=None`` applies to every sender."""
+        targets = self._senders.values() if group is None \
+            else [self._senders[group]]
+        for s in targets:
+            s.set_batch_cap(cap)
+
+    def reroute_group(self, group: int) -> int | None:
+        """Move one group's primary to the next healthy endpoint."""
+        return self._senders[group].reroute()
+
+    def reroute_from_endpoint(self, endpoint_idx: int) -> int:
+        """Detector-driven failover: every group whose primary is the dead
+        endpoint is proactively re-pointed.  Returns #groups rerouted."""
+        n = 0
+        for s in self._senders.values():
+            if s.primary == endpoint_idx and s.reroute() is not None:
+                n += 1
+        return n
 
     # -- the paper's three-call API surface lives in core.api ------------
     def register(self, schema: FieldSchema) -> None:
@@ -279,8 +405,9 @@ class Broker:
         failure episode cannot trigger a return while records written after
         the endpoints recovered are still in flight."""
         deadline = time.time() + (timeout or self.cfg.flush_timeout_s)
-        err_mark = self.stats.send_errors
-        progress_mark = self.stats.sent + self.stats.dropped
+        st = self.stats
+        err_mark = st.send_errors
+        progress_mark = st.sent + st.dropped
         while time.time() < deadline:
             st = self.stats
             undelivered = st.written - st.sent - st.dropped

@@ -20,10 +20,18 @@ Optional delta encoding (``delta=True``) stores ``payload[i] -
 payload[i-1]`` whenever record i-1 belongs to the same stream and has the
 same shape — a big win for slowly-varying CFD fields under zstd/int8; the
 ``d`` flag column marks delta'd records and decode reconstructs the chain in
-order (with int8, quantization error accumulates along a delta chain, so
-chains reset at every stream/shape change).  ``decode_any`` dispatches on
-the tag and always returns a list, so consumers (Endpoint.push) are
-agnostic to framing.
+order (chains reset at every stream/shape change).  ``decode_any``
+dispatches on the tag and always returns a list, so consumers
+(Endpoint.push) are agnostic to framing.
+
+int8 batch frames use **per-stream scales** (enc tag ``int8s``): quantization
+blocks restart at every record boundary instead of running blindly over the
+concatenated buffer, and deltas are **closed-loop** — each delta is taken
+against the *dequantized* reconstruction of the previous record, so the
+decoder's accumulated value is bitwise the encoder's reconstruction and
+quantization error no longer accumulates along a delta chain (every record's
+error is bounded by its own quantization step).  Legacy ``int8`` batch
+frames (shared blocks over the concatenated buffer) still decode.
 """
 from __future__ import annotations
 
@@ -91,6 +99,55 @@ def dequantize_int8(d: dict) -> np.ndarray:
     return flat.reshape(d["shape"])
 
 
+def _quantize_stream(flat: np.ndarray) -> tuple[bytes, bytes]:
+    """Record-local int8: blocks of QBLOCK restart at the record boundary and
+    the last block is truncated (no padding on the wire).  Returns
+    (q bytes — exactly flat.size — , per-block f32 scale bytes)."""
+    n = flat.size
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    padded = np.pad(flat, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
+    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) / 127.0
+    q = np.clip(np.round(padded / scale[:, None]), -127, 127).astype(np.int8)
+    return q.reshape(-1)[:n].tobytes(), scale.astype(np.float32).tobytes()
+
+
+def _dequantize_stream(qb: bytes, sb: bytes, n: int,
+                       q_off: int = 0, s_off: int = 0) -> np.ndarray:
+    """Inverse of ``_quantize_stream`` reading at byte offsets into shared
+    buffers (the batch frame concatenates every record's q/scale bytes)."""
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    q = np.frombuffer(qb, np.int8, count=n, offset=q_off).astype(np.float32)
+    scale = np.frombuffer(sb, np.float32, count=nb, offset=s_off)
+    padded = np.pad(q, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
+    return (padded * scale[:, None]).reshape(-1)[:n]
+
+
+def _quantize_stream_rows(mat: np.ndarray) -> tuple[bytes, bytes]:
+    """Vectorized ``_quantize_stream`` over B same-length records (rows):
+    one numpy pass instead of B, bitwise-identical bytes (blocks still
+    restart at every record boundary).  This keeps the batched-frame
+    encode cheaper than B single encodes on the broker hot path."""
+    b, n = mat.shape
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    padded = np.pad(mat, ((0, 0), (0, nb * QBLOCK - n))).reshape(b * nb,
+                                                                 QBLOCK)
+    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) / 127.0
+    q = np.clip(np.round(padded / scale[:, None]), -127, 127).astype(np.int8)
+    q = np.ascontiguousarray(q.reshape(b, nb * QBLOCK)[:, :n])
+    return q.tobytes(), scale.astype(np.float32).tobytes()
+
+
+def _dequantize_stream_rows(qb: bytes, sb: bytes, b: int, n: int) -> np.ndarray:
+    """Vectorized ``_dequantize_stream`` for B same-length records; returns
+    a (B, n) float32 array, bitwise-identical to the per-record path."""
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    q = np.frombuffer(qb, np.int8, count=b * n).reshape(b, n).astype(
+        np.float32)
+    scale = np.frombuffer(sb, np.float32, count=b * nb)
+    padded = np.pad(q, ((0, 0), (0, nb * QBLOCK - n))).reshape(b * nb, QBLOCK)
+    return (padded * scale[:, None]).reshape(b, nb * QBLOCK)[:, :n]
+
+
 def encode(rec: StreamRecord, *, compress: str = "zstd") -> bytes:
     """compress: none | zstd | int8 | int8+zstd."""
     arr = np.asarray(rec.payload)
@@ -145,31 +202,59 @@ def encode_batch(recs: list[StreamRecord], *, compress: str = "zstd",
     compress: none | zstd | int8 | int8+zstd (same modes as ``encode``).
     delta: store payload[i] - payload[i-1] when record i-1 is from the same
     stream with the same shape (flagged per record in the ``d`` column).
-    Note delta reconstruction is float-exact only to roundoff ((b-a)+a can
-    differ from b in the last ulp); disable delta where bitwise fidelity
-    matters.
+    With int8, deltas are closed-loop (taken against the dequantized
+    reconstruction) so chain error never accumulates; with raw floats,
+    reconstruction is float-exact only to roundoff ((b-a)+a can differ from
+    b in the last ulp) — disable delta where bitwise fidelity matters.
     """
     if not recs:
         raise ValueError("encode_batch needs at least one record")
-    flats, flags = [], []
-    prev_key = prev_shape = None
-    prev_flat = None
-    for rec in recs:
-        arr = np.asarray(rec.payload, np.float32)
-        flat = arr.reshape(-1)
-        if (delta and prev_flat is not None and rec.key() == prev_key
-                and arr.shape == prev_shape):
-            flats.append(flat - prev_flat)
-            flags.append(1)
-        else:
-            flats.append(flat)
-            flags.append(0)
-        prev_key, prev_shape, prev_flat = rec.key(), arr.shape, flat
-    buf = np.concatenate(flats) if flats else np.zeros(0, np.float32)
+    flags: list[int] = []
     if compress.startswith("int8"):
-        payload: Any = quantize_int8(buf)
-        enc = "int8"
+        # per-stream scales + closed-loop deltas (enc tag "int8s")
+        flats = [np.asarray(r.payload, np.float32).reshape(-1) for r in recs]
+        sizes = {f.size for f in flats}
+        if not delta and len(sizes) == 1:
+            # uniform non-delta batch (the broker hot path): one vectorized
+            # quantization pass over all records at once
+            qb, sb = _quantize_stream_rows(np.stack(flats))
+            flags = [0] * len(recs)
+            payload: Any = {"q": qb, "scale": sb}
+        else:
+            qs, scales = [], []
+            prev_key = prev_shape = None
+            prev_recon = None
+            for rec, flat in zip(recs, flats):
+                shape = np.asarray(rec.payload).shape
+                chained = (delta and prev_recon is not None
+                           and rec.key() == prev_key and shape == prev_shape)
+                src = flat - prev_recon if chained else flat
+                flags.append(1 if chained else 0)
+                qb, sb = _quantize_stream(src)
+                qs.append(qb)
+                scales.append(sb)
+                recon = _dequantize_stream(qb, sb, flat.size)
+                if chained:
+                    recon = recon + prev_recon
+                prev_key, prev_shape, prev_recon = rec.key(), shape, recon
+            payload = {"q": b"".join(qs), "scale": b"".join(scales)}
+        enc = "int8s"
     else:
+        flats = []
+        prev_key = prev_shape = None
+        prev_flat = None
+        for rec in recs:
+            arr = np.asarray(rec.payload, np.float32)
+            flat = arr.reshape(-1)
+            if (delta and prev_flat is not None and rec.key() == prev_key
+                    and arr.shape == prev_shape):
+                flats.append(flat - prev_flat)
+                flags.append(1)
+            else:
+                flats.append(flat)
+                flags.append(0)
+            prev_key, prev_shape, prev_flat = rec.key(), arr.shape, flat
+        buf = np.concatenate(flats) if flats else np.zeros(0, np.float32)
         payload = {"raw": buf.tobytes()}
         enc = "raw"
     msg = {
@@ -196,24 +281,38 @@ def decode_batch(data: bytes) -> list[StreamRecord]:
         blob = _ZSTD_D.decompress(blob)
     msg = msgpack.unpackb(blob, raw=False)
     n = msg["n"]
-    if msg["e"] == "int8":
+    per_stream = msg["e"] == "int8s"
+    if msg["e"] == "int8":          # legacy frames: shared concatenated blocks
         d = dict(msg["p"])
         d["shape"] = [d["n"]]   # flatten; per-record shapes applied below
         buf = dequantize_int8(d)
-    else:
+    elif not per_stream:
         buf = np.frombuffer(msg["p"]["raw"], np.float32)
     fields = _unpack_col(msg["f"], n)
     groups = _unpack_col(msg["g"], n)
     ranks = _unpack_col(msg["r"], n)
     flags = _unpack_col(msg["d"], n) if msg["d"] else [0] * n
+    shapes = [tuple(s) for s in msg["sh"]]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    rows = None
+    if per_stream and not any(flags) and len(set(sizes)) == 1:
+        rows = _dequantize_stream_rows(msg["p"]["q"], msg["p"]["scale"],
+                                       n, sizes[0])
     out: list[StreamRecord] = []
-    off = 0
+    off = q_off = s_off = 0
     prev_flat = None
     for i in range(n):
-        shape = tuple(msg["sh"][i])
-        size = int(np.prod(shape)) if shape else 1
-        flat = buf[off: off + size]
-        off += size
+        shape, size = shapes[i], sizes[i]
+        if rows is not None:
+            flat = rows[i]
+        elif per_stream:
+            flat = _dequantize_stream(msg["p"]["q"], msg["p"]["scale"], size,
+                                      q_off=q_off, s_off=s_off)
+            q_off += size
+            s_off += 4 * max(1, (size + QBLOCK - 1) // QBLOCK)
+        else:
+            flat = buf[off: off + size]
+            off += size
         if flags[i]:
             flat = flat + prev_flat
         prev_flat = flat

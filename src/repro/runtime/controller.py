@@ -1,0 +1,321 @@
+"""QoS-driven elasticity controller — the control plane's actuator layer.
+
+The system is *named* ElasticBroker; this module is where elasticity stops
+being manual.  An :class:`ElasticController` thread consumes
+:class:`repro.runtime.telemetry.TelemetrySnapshot`s and closes the loop the
+paper leaves open (§6 "adjusting cloud resources according to the amount of
+data"):
+
+  * **scale out** when the rolling p99 generation→analysis latency breaches
+    the QoS target or backlog piles up anywhere in the pipeline
+    (broker queues, endpoint buffers, engine hold),
+  * **scale in** after sustained quiet, down to ``min_executors``,
+  * **adapt wire aggregation**: each broker sender's ``batch_cap`` follows
+    its queue depth (deep queue ⇒ bigger frames amortize; drained queue ⇒
+    smaller frames keep latency low),
+  * **react to failure**: heartbeats are pumped into a
+    :class:`repro.runtime.fault.FailureDetector`; a dead endpoint proactively
+    re-routes its groups, a dead or persistently-straggling executor is
+    replaced and its partitions rebalanced.
+
+Policies are pluggable: anything with ``decide(snapshot, history) ->
+list[Action]`` can be handed to the controller, so deployments can bring
+their own scaling logic without touching the loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+
+from repro.runtime.fault import FailureDetector, NodeState
+from repro.runtime.telemetry import TelemetryBus, TelemetrySnapshot
+
+
+@dataclass(frozen=True)
+class ElasticityConfig:
+    """The control-plane knob block (embedded in WorkflowConfig)."""
+
+    enabled: bool = False
+    interval_s: float = 0.25          # control loop period
+    target_p99_s: float = 1.0         # QoS: generation→analysis p99 latency
+    min_executors: int = 1
+    max_executors: int = 64
+    scale_up_step: int = 2            # executors added per breach
+    backlog_high: int = 64            # records pending anywhere ⇒ breach
+    idle_scale_down_s: float = 3.0    # sustained quiet before scale-in
+    cooldown_s: float = 1.0           # min gap between scale actions
+    adapt_batch: bool = True          # drive per-sender batch_cap from depth
+    batch_cap_min: int = 1
+    batch_cap_max: int = 256
+    heartbeat_timeout_s: float = 1.0  # FailureDetector miss window
+    # 4x margin: a merely-loaded executor working through big batches beats
+    # ~2-3x slower than idle peers and must not read as a straggler
+    straggler_factor: float = 4.0
+    replace_stragglers: bool = True
+    # an executor mid-analysis emits no beats (that's how stragglers stand
+    # out), so a single analyze call longer than heartbeat_timeout_s trips
+    # the failure scan; the controller revives it unless the SAME analysis
+    # has run longer than this — only then is the executor deemed wedged
+    stuck_analysis_s: float = 30.0
+
+    def validate(self) -> "ElasticityConfig":
+        if self.interval_s <= 0:
+            raise ValueError("interval_s must be > 0")
+        if self.target_p99_s <= 0:
+            raise ValueError("target_p99_s must be > 0")
+        if not (1 <= self.min_executors <= self.max_executors):
+            raise ValueError(
+                f"need 1 <= min_executors <= max_executors, got "
+                f"{self.min_executors}..{self.max_executors}")
+        if self.scale_up_step < 1:
+            raise ValueError("scale_up_step must be >= 1")
+        if not (1 <= self.batch_cap_min <= self.batch_cap_max):
+            raise ValueError("need 1 <= batch_cap_min <= batch_cap_max")
+        if self.idle_scale_down_s < 0 or self.cooldown_s < 0:
+            raise ValueError("idle_scale_down_s and cooldown_s must be >= 0")
+        if self.heartbeat_timeout_s <= 0:
+            raise ValueError("heartbeat_timeout_s must be > 0")
+        if self.stuck_analysis_s <= 0:
+            raise ValueError("stuck_analysis_s must be > 0")
+        return self
+
+
+@dataclass(frozen=True)
+class Action:
+    """One control decision (recorded in the controller's action log)."""
+
+    kind: str                     # scale_up | scale_down | set_batch_cap |
+                                  # replace_executor | reroute_endpoint
+    value: int | None = None
+    group: int | None = None
+    reason: str = ""
+
+
+class LatencyScalePolicy:
+    """Scale executors from the QoS signal: out on p99/backlog breach (with
+    cooldown), in after ``idle_scale_down_s`` of empty pipeline."""
+
+    def __init__(self, cfg: ElasticityConfig):
+        self.cfg = cfg
+        self._last_scale = 0.0
+        self._quiet_since: float | None = None
+
+    def decide(self, snap: TelemetrySnapshot, history) -> list[Action]:
+        cfg = self.cfg
+        now = snap.t
+        p99_breach = (snap.latency_n > 0
+                      and snap.latency_p99 > cfg.target_p99_s)
+        backlog_breach = snap.backlog > cfg.backlog_high
+        if p99_breach or backlog_breach:
+            self._quiet_since = None
+            if (now - self._last_scale >= cfg.cooldown_s
+                    and snap.alive_executors < cfg.max_executors):
+                step = min(cfg.scale_up_step,
+                           cfg.max_executors - snap.alive_executors)
+                self._last_scale = now
+                why = (f"p99={snap.latency_p99:.3f}s>target"
+                       if p99_breach else f"backlog={snap.backlog}")
+                return [Action("scale_up", value=step, reason=why)]
+            return []
+        quiet = snap.backlog == 0 and snap.queued_partitions == 0
+        if quiet and snap.alive_executors > cfg.min_executors:
+            if self._quiet_since is None:
+                self._quiet_since = now
+            elif (now - self._quiet_since >= cfg.idle_scale_down_s
+                    and now - self._last_scale >= cfg.cooldown_s):
+                self._last_scale = now
+                self._quiet_since = now      # one step per quiet window
+                return [Action("scale_down", value=1,
+                               reason=f"idle {cfg.idle_scale_down_s:.1f}s")]
+        elif not quiet:
+            self._quiet_since = None
+        return []
+
+
+class BatchCapPolicy:
+    """Adapt each sender's wire batch cap to its queue depth with hysteresis:
+    a queue ≥2× the cap doubles aggregation (amortize framing under load); a
+    queue below cap/4 decays the cap back toward the configured baseline
+    (small frames ⇒ low latency when drained)."""
+
+    def __init__(self, cfg: ElasticityConfig, baseline: int = 32):
+        self.cfg = cfg
+        self.baseline = max(cfg.batch_cap_min,
+                            min(cfg.batch_cap_max, baseline))
+
+    def decide(self, snap: TelemetrySnapshot, history) -> list[Action]:
+        cfg = self.cfg
+        acts = []
+        for g in snap.groups:
+            cap, depth = g.batch_cap, g.queue_depth
+            new = cap
+            if depth >= 2 * cap:
+                new = min(cfg.batch_cap_max, max(2 * cap, depth))
+            elif depth <= cap // 4 and cap > self.baseline:
+                new = max(self.baseline, cap // 2)
+            if new != cap:
+                acts.append(Action("set_batch_cap", value=new, group=g.group,
+                                   reason=f"depth={depth} cap={cap}"))
+        return acts
+
+
+class ElasticController(threading.Thread):
+    """The loop: sample telemetry → run policies → actuate engine/broker,
+    plus heartbeat pumping and FailureDetector-driven recovery.
+
+    Owns nothing it actuates — engine/broker/detector are injected, so the
+    controller can be run against any wiring (Session does this) or driven
+    tick-by-tick in tests via :meth:`tick`.
+    """
+
+    def __init__(self, bus: TelemetryBus, cfg: ElasticityConfig | None = None,
+                 *, engine=None, broker=None,
+                 detector: FailureDetector | None = None, policies=None):
+        super().__init__(daemon=True, name="elastic-controller")
+        self.bus = bus
+        self.cfg = (cfg or ElasticityConfig(enabled=True)).validate()
+        self.engine = engine if engine is not None else bus.engine
+        self.broker = broker if broker is not None else bus.broker
+        self.detector = detector or FailureDetector(
+            timeout_s=self.cfg.heartbeat_timeout_s,
+            straggler_factor=self.cfg.straggler_factor)
+        if policies is None:
+            baseline = getattr(getattr(self.broker, "cfg", None),
+                               "max_batch_records", 32)
+            policies = [LatencyScalePolicy(self.cfg)]
+            if self.cfg.adapt_batch:
+                policies.append(BatchCapPolicy(self.cfg, baseline=baseline))
+        self.policies = list(policies)
+        self.actions_log: list[tuple[float, Action]] = []
+        self.apply_errors = 0
+        self._stop_evt = threading.Event()
+        self._exec_processed: dict[int, int] = {}
+        self.detector.on_failure.append(self._on_node_failure)
+        self.detector.on_straggler.append(self._on_straggler)
+
+    # ---- heartbeats ------------------------------------------------------
+    def _pump_heartbeats(self) -> None:
+        det = self.detector
+        for ep in self.bus.endpoints:
+            name = getattr(ep, "name", None)
+            if name is None:
+                continue
+            if name not in det.nodes:
+                det.register(name, "endpoint")
+            if ep.healthy():
+                det.beat(name)
+        if self.engine is not None:
+            for e in self.engine.metrics()["executors"]:
+                name = f"executor-{e['idx']}"
+                if not e["alive"]:
+                    continue
+                if name not in det.nodes:
+                    det.register(name, "executor")
+                prev = self._exec_processed.get(e["idx"], 0)
+                # proof of life: progress, an ordering-ticket wait, or true
+                # idleness (nothing queued AND nothing being analyzed).  An
+                # executor stuck *inside* an analysis gets no beat, so a
+                # straggler's long service times stand out against its peers
+                if (e["processed"] > prev or e.get("waiting")
+                        or (e["queue_depth"] == 0
+                            and e["current_key"] is None)):
+                    det.beat(name)
+                self._exec_processed[e["idx"]] = e["processed"]
+
+    # ---- detector callbacks ---------------------------------------------
+    def _endpoint_index(self, name: str) -> int | None:
+        for i, ep in enumerate(self.bus.endpoints):
+            if getattr(ep, "name", None) == name:
+                return i
+        return None
+
+    def _on_node_failure(self, node: NodeState) -> None:
+        if node.kind == "endpoint" and self.broker is not None:
+            idx = self._endpoint_index(node.name)
+            if idx is not None:
+                self._apply(Action("reroute_endpoint", value=idx,
+                                   reason=f"{node.name} heartbeat lost"))
+        elif node.kind == "executor" and self.engine is not None:
+            idx = int(node.name.rsplit("-", 1)[-1])
+            ex = self.engine.executors[idx]
+            if not ex.alive:
+                return
+            # busy ≠ dead: an executor mid-analysis emits no beats by
+            # design; revive it unless this one analysis has overrun the
+            # wedge threshold
+            if (ex.current_key is not None
+                    and time.time() - ex.t_busy_since
+                    < self.cfg.stuck_analysis_s):
+                node.alive = True
+                self.detector.beat(node.name)
+                return
+            self._apply(Action("replace_executor", value=idx,
+                               reason=f"{node.name} heartbeat lost"))
+
+    def _on_straggler(self, node: NodeState) -> None:
+        if (node.kind == "executor" and self.engine is not None
+                and self.cfg.replace_stragglers):
+            idx = int(node.name.rsplit("-", 1)[-1])
+            if self.engine.executors[idx].alive:
+                self._apply(Action("replace_executor", value=idx,
+                                   reason=f"{node.name} straggling"))
+
+    # ---- actuation -------------------------------------------------------
+    def _apply(self, action: Action) -> None:
+        try:
+            if action.kind == "scale_up" and self.engine is not None:
+                for _ in range(action.value or 1):
+                    self.engine.add_executor()
+            elif action.kind == "scale_down" and self.engine is not None:
+                for _ in range(action.value or 1):
+                    self.engine.remove_executor()
+            elif action.kind == "set_batch_cap" and self.broker is not None:
+                self.broker.set_batch_cap(action.value, group=action.group)
+            elif action.kind == "replace_executor" and self.engine is not None:
+                self.engine.replace_executor(action.value)
+            elif action.kind == "reroute_endpoint" and self.broker is not None:
+                self.broker.reroute_from_endpoint(action.value)
+            self.actions_log.append((time.time(), action))
+        except Exception:
+            self.apply_errors += 1
+
+    # ---- the loop --------------------------------------------------------
+    def tick(self) -> TelemetrySnapshot:
+        """One control period: heartbeats → failure scan → sample →
+        policies → actuate.  Public so tests/benches can drive the loop
+        deterministically without the thread."""
+        if self.engine is None and self.bus.engine is not None:
+            self.engine = self.bus.engine        # Session attaches it lazily
+        self._pump_heartbeats()
+        self.detector.scan()
+        snap = self.bus.sample()
+        for policy in self.policies:
+            for action in policy.decide(snap, self.bus.history):
+                self._apply(action)
+        return snap
+
+    def run(self):
+        while not self._stop_evt.is_set():
+            t0 = time.time()
+            try:
+                self.tick()
+            except Exception:
+                self.apply_errors += 1
+            dt = time.time() - t0
+            self._stop_evt.wait(max(0.0, self.cfg.interval_s - dt))
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop_evt.set()
+        if self.is_alive():
+            self.join(timeout=timeout)
+
+    # ---- reporting -------------------------------------------------------
+    def summary(self) -> dict:
+        kinds: dict[str, int] = {}
+        for _, a in self.actions_log:
+            kinds[a.kind] = kinds.get(a.kind, 0) + 1
+        return {"actions": kinds, "apply_errors": self.apply_errors,
+                "n_policies": len(self.policies),
+                "executor_seconds": (self.engine.executor_seconds()
+                                     if self.engine is not None else 0.0)}

@@ -68,9 +68,13 @@ class FailureDetector:
                     failed.append(st)
                 elif len(st.beat_intervals) >= 4:
                     mean = sum(st.beat_intervals) / len(st.beat_intervals)
+                    # only peers with a meaningful sample: a just-registered
+                    # node's single ~0s interval (register→beat in one
+                    # control tick) would poison the median and flag any
+                    # long-running busy node as a straggler
                     others = [n for n in self.nodes.values()
                               if n.kind == st.kind and n is not st
-                              and n.beat_intervals]
+                              and len(n.beat_intervals) >= 4]
                     if others:
                         peer = sorted(
                             [iv for o in others for iv in o.beat_intervals]

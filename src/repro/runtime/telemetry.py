@@ -1,0 +1,208 @@
+"""Unified telemetry bus — the control plane's sensor layer.
+
+Every layer of the HPC→Cloud pipeline already kept private counters (the
+broker's per-sender stats, the endpoints' ingest totals, the engine's
+results); :class:`TelemetryBus` samples them into one immutable
+:class:`TelemetrySnapshot` per tick:
+
+  * per-group broker state — live queue depth, drop/error *rates* (computed
+    as deltas between consecutive samples), wire batch cap,
+  * per-endpoint ingest rate and pending backlog,
+  * per-executor queue depth / steal counts,
+  * rolling p50/p99 generation→analysis latency (the paper's §4.3 QoS
+    metric, over the engine's windowed recent results).
+
+Snapshots fan out to subscribers (the :class:`repro.runtime.controller.
+ElasticController` closes the loop on them) and accumulate in a bounded
+history so policies can reason about trends, not just instants.  The bus
+holds weak expectations of its sources — anything exposing
+``group_telemetry()`` / ``telemetry()`` / ``metrics()`` works — so it stays
+import-free of broker/engine internals.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GroupTelemetry:
+    """One broker group sender, sampled."""
+
+    group: int
+    queue_depth: int
+    queue_capacity: int
+    batch_cap: int
+    primary: int
+    written: int
+    sent: int
+    dropped: int
+    send_errors: int
+    drop_rate: float = 0.0        # records/s since previous sample
+    error_rate: float = 0.0       # send errors/s since previous sample
+    send_rate: float = 0.0        # delivered records/s since previous sample
+
+
+@dataclass(frozen=True)
+class EndpointTelemetry:
+    name: str
+    healthy: bool
+    pending: int                  # undrained records buffered
+    records_in: int
+    ingest_rate_rps: float
+
+
+@dataclass(frozen=True)
+class ExecutorTelemetry:
+    idx: int
+    alive: bool
+    queue_depth: int              # micro-batches waiting
+    queued_records: int           # records inside those micro-batches
+    processed: int
+    stolen: int
+
+
+@dataclass(frozen=True)
+class TelemetrySnapshot:
+    """One consistent-enough control-plane sample across all layers."""
+
+    t: float
+    groups: tuple[GroupTelemetry, ...] = ()
+    endpoints: tuple[EndpointTelemetry, ...] = ()
+    executors: tuple[ExecutorTelemetry, ...] = ()
+    held_records: int = 0         # engine hold-buffer backlog
+    alive_executors: int = 0
+    queued_partitions: int = 0    # micro-batches waiting on executors
+    latency_p50: float = math.nan
+    latency_p99: float = math.nan
+    latency_n: int = 0            # samples in the rolling window
+    executor_seconds: float = 0.0
+
+    @property
+    def backlog(self) -> int:
+        """Total records not yet analyzed anywhere in the pipeline: broker
+        queues + endpoint buffers + engine hold + records queued on
+        executors — the load signal scale-up policies watch.  (Executor
+        queues matter most: when analysis saturates, dispatch keeps up and
+        the pile-up happens there.)"""
+        return (sum(g.queue_depth for g in self.groups)
+                + sum(e.pending for e in self.endpoints)
+                + self.held_records
+                + sum(x.queued_records for x in self.executors if x.alive))
+
+
+@dataclass
+class _GroupPrev:
+    t: float = 0.0
+    dropped: int = 0
+    send_errors: int = 0
+    sent: int = 0
+
+
+class TelemetryBus:
+    """Samples broker + endpoints + engine into TelemetrySnapshots, keeps a
+    bounded history, and fans snapshots out to subscribers.
+
+    All sources are optional and attachable after construction (the Session
+    creates its engine lazily): ``attach_engine`` late-binds the consumer
+    side.  ``sample()`` is safe from any thread; subscriber callbacks run on
+    the sampling thread and must not block.
+    """
+
+    def __init__(self, *, broker=None, endpoints=(), engine=None,
+                 history: int = 256):
+        self.broker = broker
+        self.endpoints = list(endpoints)
+        self.engine = engine
+        self.history: deque[TelemetrySnapshot] = deque(maxlen=history)
+        self._subs: list = []
+        self._prev: dict[int, _GroupPrev] = {}
+        self._lock = threading.Lock()
+
+    def attach_engine(self, engine) -> None:
+        self.engine = engine
+
+    def subscribe(self, cb) -> None:
+        """cb(snapshot) on every sample()."""
+        self._subs.append(cb)
+
+    def last(self) -> TelemetrySnapshot | None:
+        with self._lock:
+            return self.history[-1] if self.history else None
+
+    # ---- sampling --------------------------------------------------------
+    def _sample_groups(self, now: float) -> tuple[GroupTelemetry, ...]:
+        if self.broker is None:
+            return ()
+        out = []
+        for row in self.broker.group_telemetry():
+            g = row["group"]
+            prev = self._prev.get(g)
+            dt = (now - prev.t) if prev else 0.0
+            if prev and dt > 1e-6:
+                drop_rate = (row["dropped"] - prev.dropped) / dt
+                error_rate = (row["send_errors"] - prev.send_errors) / dt
+                send_rate = (row["sent"] - prev.sent) / dt
+            else:
+                drop_rate = error_rate = send_rate = 0.0
+            self._prev[g] = _GroupPrev(t=now, dropped=row["dropped"],
+                                       send_errors=row["send_errors"],
+                                       sent=row["sent"])
+            out.append(GroupTelemetry(
+                group=g, queue_depth=row["queue_depth"],
+                queue_capacity=row["queue_capacity"],
+                batch_cap=row["batch_cap"], primary=row["primary"],
+                written=row["written"], sent=row["sent"],
+                dropped=row["dropped"], send_errors=row["send_errors"],
+                drop_rate=drop_rate, error_rate=error_rate,
+                send_rate=send_rate))
+        return tuple(out)
+
+    def _sample_endpoints(self) -> tuple[EndpointTelemetry, ...]:
+        out = []
+        for ep in self.endpoints:
+            t = ep.telemetry()
+            out.append(EndpointTelemetry(
+                name=t["name"], healthy=t["healthy"], pending=t["pending"],
+                records_in=t["records_in"],
+                ingest_rate_rps=t["ingest_rate_rps"]))
+        return tuple(out)
+
+    def sample(self) -> TelemetrySnapshot:
+        now = time.time()
+        with self._lock:
+            groups = self._sample_groups(now)
+        endpoints = self._sample_endpoints()
+        executors: tuple[ExecutorTelemetry, ...] = ()
+        held = queued = alive = lat_n = 0
+        p50 = p99 = math.nan
+        exec_secs = 0.0
+        if self.engine is not None:
+            m = self.engine.metrics()
+            executors = tuple(ExecutorTelemetry(
+                idx=e["idx"], alive=e["alive"],
+                queue_depth=e["queue_depth"],
+                queued_records=e["queued_records"], processed=e["processed"],
+                stolen=e["stolen"]) for e in m["executors"])
+            held = m["held_records"]
+            queued = m["queued"]
+            alive = m["alive_executors"]
+            p50, p99 = m["latency_p50"], m["latency_p99"]
+            lat_n = m["latency_window_n"]
+            exec_secs = m["executor_seconds"]
+        snap = TelemetrySnapshot(
+            t=now, groups=groups, endpoints=endpoints, executors=executors,
+            held_records=held, queued_partitions=queued,
+            alive_executors=alive, latency_p50=p50, latency_p99=p99,
+            latency_n=lat_n, executor_seconds=exec_secs)
+        with self._lock:
+            self.history.append(snap)
+        for cb in list(self._subs):
+            try:
+                cb(snap)
+            except Exception:       # a broken subscriber must not kill the bus
+                pass
+        return snap

@@ -29,6 +29,9 @@ class Endpoint:
         self.frames_in = 0            # wire frames (batched: frames < records)
         self._bw_debt = 0.0
         self._bw_t = time.time()
+        # rolling ingest window for the telemetry bus: (t, n_records) per
+        # push, trimmed to the rate window on read
+        self._ingest_win: deque = deque(maxlen=4096)
 
     # ---- producer side --------------------------------------------------
     def healthy(self) -> bool:
@@ -59,6 +62,7 @@ class Endpoint:
             self.bytes_in += len(blob)
             self.records_in += len(recs)
             self.frames_in += 1
+            self._ingest_win.append((time.time(), len(recs)))
 
     # ---- consumer side (micro-batcher) -----------------------------------
     def stream_keys(self) -> list[str]:
@@ -76,6 +80,22 @@ class Endpoint:
     def pending(self) -> int:
         with self._lock:
             return sum(len(d) for d in self._streams.values())
+
+    # ---- telemetry -------------------------------------------------------
+    def ingest_rate(self, window_s: float = 2.0) -> float:
+        """Records/s over the trailing window (telemetry-bus feed)."""
+        now = time.time()
+        with self._lock:
+            while self._ingest_win and now - self._ingest_win[0][0] > window_s:
+                self._ingest_win.popleft()
+            return sum(n for _, n in self._ingest_win) / max(window_s, 1e-9)
+
+    def telemetry(self) -> dict:
+        """One control-plane sample: ingest rate, pending backlog, totals."""
+        return {"name": self.name, "healthy": self._healthy,
+                "pending": self.pending(), "records_in": self.records_in,
+                "bytes_in": self.bytes_in, "frames_in": self.frames_in,
+                "ingest_rate_rps": self.ingest_rate()}
 
 
 def make_endpoints(n: int, *, inbound_bw: float | None = None,

@@ -9,20 +9,50 @@ collector gathers results (rdd.collect) with generation->analysis latency.
 
 Beyond the paper (Spark gave these for free; we implement them):
   * work stealing   — idle executors steal queued partitions (straggler
-                      mitigation),
-  * elastic scaling — add/remove executors at runtime,
-  * failure handling — a dead executor's queued partitions are reassigned.
+                      mitigation).  Steals migrate the stream's sticky
+                      assignment to the thief, and per-stream sequence
+                      tickets guarantee a stolen micro-batch is never
+                      analyzed concurrently with — or ahead of — an earlier
+                      micro-batch of the same stream,
+  * elastic scaling — add/remove/replace executors at runtime; every scale
+                      event triggers ``rebalance()`` so stream→executor
+                      stickiness is recomputed against the new fleet,
+  * failure handling — a dead executor's queued partitions are reassigned,
+  * observability   — ``metrics()`` returns a thread-safe control-plane
+                      snapshot (per-executor queues, rolling latency
+                      percentiles, executor-seconds) consumed by
+                      ``repro.runtime.telemetry``.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from collections import defaultdict
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.core.records import StreamRecord
+
+# A waiting executor proceeds out-of-order after this long rather than stall
+# the pipeline if its stream's ticket chain broke (a dropped partition with
+# no surviving executor); counted in metrics()["order_timeouts"].
+_ORDER_WAIT_S = 5.0
+
+# metrics() latency percentiles cover at most this much trailing wall time,
+# so a past breach episode ages out of the QoS signal instead of pinning
+# the controller's p99 reading high through a quiet period.
+_LATENCY_WINDOW_S = 30.0
+
+
+def percentile_sorted(sorted_vals: list, p: float) -> float:
+    """Nearest-rank percentile over an ASCENDING-sorted list; NaN if empty.
+    The one definition shared by latency_stats(), metrics(), and the
+    elasticity benchmark, so the controller's QoS signal and the bench's
+    pass/fail gate measure the same quantity."""
+    if not sorted_vals:
+        return float("nan")
+    return sorted_vals[min(len(sorted_vals) - 1, int(len(sorted_vals) * p))]
 
 
 @dataclass
@@ -30,6 +60,7 @@ class MicroBatch:
     stream_key: str
     records: list[StreamRecord]
     t_created: float = field(default_factory=time.time)
+    seq: int = 0                 # per-stream dispatch sequence (ordering)
 
     @property
     def steps(self) -> list[int]:
@@ -61,6 +92,9 @@ class _Executor(threading.Thread):
         self.processed = 0
         self.stolen = 0
         self.slowdown = 0.0            # straggler injection (tests/benches)
+        self.current_key: str | None = None    # stream being analyzed now
+        self.t_busy_since = 0.0        # when the current analysis started
+        self.waiting = False           # blocked on an ordering ticket
 
     def run(self):
         eng = self.engine
@@ -74,6 +108,11 @@ class _Executor(threading.Thread):
                 self.stolen += 1
             if mb is _POISON:
                 break
+            self.current_key = mb.stream_key
+            self.waiting = True
+            eng._await_turn(mb)        # per-stream order even across steals
+            self.waiting = False
+            self.t_busy_since = time.time()
             if self.slowdown:
                 time.sleep(self.slowdown)
             try:
@@ -86,6 +125,12 @@ class _Executor(threading.Thread):
                                 t_generated_min=tmin,
                                 t_analyzed=time.time(), executor=self.idx))
             self.processed += 1
+            self.current_key = None
+            eng._release_turn(mb)
+        # hand back anything still queued: a partition can land here AFTER
+        # _reassign drained this queue (e.g. this thread was mid-_steal when
+        # it was replaced and put the stolen run into its own dead queue)
+        eng._reassign(self)
 
     def kill(self):
         """Simulated hard failure: drop the thread, orphan its queue."""
@@ -111,14 +156,25 @@ class StreamEngine:
         self.trigger_interval = trigger_interval
         self.min_batch = min_batch
         self.results: list[Result] = []
+        self._recent_lat: deque = deque(maxlen=512)  # rolling latency window
         self._rlock = threading.Lock()
         self._elock = threading.Lock()
-        self._tlock = threading.Lock()         # trigger_once reentrancy
+        # trigger_once reentrancy + hold/assign/seq state (RLock: _reassign
+        # and _pick_executor may be reached both under it and bare)
+        self._tlock = threading.RLock()
         self._hold: dict[str, list[StreamRecord]] = {}
         self._hold_t: dict[str, float] = {}    # first-held time per stream
         self.executors: list[_Executor] = []
         self._stop = threading.Event()
         self._assign: dict[str, int] = {}      # stream -> executor idx
+        self._next_seq: dict[str, int] = {}    # stream -> next dispatch seq
+        self._done_cv = threading.Condition()
+        self._done_seq: dict[str, int] = {}    # stream -> completed prefix
+        self.order_timeouts = 0                # broken-chain escapes (rare)
+        self.rebalances = 0
+        # executor-seconds integral (elasticity cost accounting)
+        self._exec_secs = 0.0
+        self._exec_t = time.time()
         for _ in range(n_executors):
             self._add_executor_locked()
         self._driver = threading.Thread(target=self._drive, daemon=True,
@@ -147,8 +203,44 @@ class StreamEngine:
         ``analyze_fn`` per call."""
         self.analyze_fn = dag
 
+    # ---- per-stream ordering tickets ------------------------------------
+    def _await_turn(self, mb: MicroBatch) -> bool:
+        """Block until every earlier micro-batch of this stream has been
+        analyzed.  Sequence tickets are issued at dispatch, so order holds
+        across steals, reassignment, and rebalance.  Returns False on the
+        (pathological) broken-chain timeout."""
+        deadline = time.time() + _ORDER_WAIT_S
+        with self._done_cv:
+            while self._done_seq.get(mb.stream_key, 0) < mb.seq:
+                if time.time() >= deadline:
+                    self.order_timeouts += 1
+                    return False
+                self._done_cv.wait(0.05)
+        return True
+
+    def _release_turn(self, mb: MicroBatch) -> None:
+        with self._done_cv:
+            if mb.seq + 1 > self._done_seq.get(mb.stream_key, 0):
+                self._done_seq[mb.stream_key] = mb.seq + 1
+            self._done_cv.notify_all()
+
     # ---- executor lifecycle (elasticity + failure) ----------------------
+    def _account_locked(self, now: float | None = None) -> None:
+        """Advance the executor-seconds integral (call under _elock)."""
+        now = time.time() if now is None else now
+        alive = sum(1 for e in self.executors if e.alive)
+        self._exec_secs += alive * (now - self._exec_t)
+        self._exec_t = now
+
+    def executor_seconds(self) -> float:
+        """∫ alive-executor-count dt since engine start — the provisioning
+        cost the elasticity benchmark compares against static peak."""
+        with self._elock:
+            self._account_locked()
+            return self._exec_secs
+
     def _add_executor_locked(self):
+        self._account_locked()
         ex = _Executor(len(self.executors), self)
         self.executors.append(ex)
         ex.start()
@@ -156,23 +248,85 @@ class StreamEngine:
 
     def add_executor(self):
         with self._elock:
-            return self._add_executor_locked()
+            ex = self._add_executor_locked()
+        self.rebalance()
+        return ex
 
     def remove_executor(self):
         with self._elock:
+            removed = None
             for ex in reversed(self.executors):
                 if ex.alive:
+                    self._account_locked()
                     ex.alive = False
                     ex.q.put(_POISON)
                     self._reassign(ex)
-                    return ex.idx
-        return None
+                    removed = ex.idx
+                    break
+        if removed is not None:
+            self.rebalance()
+        return removed
 
     def kill_executor(self, idx: int):
         """Hard failure; queued partitions are reassigned to survivors."""
         ex = self.executors[idx]
-        ex.kill()
-        self._reassign(ex)
+        with self._elock:
+            self._account_locked()
+            ex.kill()
+            self._reassign(ex)
+        self.rebalance()
+
+    def replace_executor(self, idx: int):
+        """Straggler/failure remediation: retire executor ``idx`` (its queue
+        is reassigned) and bring up a fresh one.  Returns the replacement."""
+        ex = self.executors[idx]
+        with self._elock:
+            self._account_locked()
+            if ex.alive:
+                ex.alive = False
+                ex.q.put(_POISON)
+            self._reassign(ex)
+            new = self._add_executor_locked()
+        self.rebalance()
+        return new
+
+    def rebalance(self) -> int:
+        """Recompute stream→executor stickiness against the current fleet
+        (called on every scale/failure event).  Only streams with NO
+        dispatched-but-unfinished micro-batches are released — a backlogged
+        stream must keep its assignment so new dispatches queue behind the
+        backlog in order; *stealing* is what migrates a backlog to a new
+        executor (oldest batch first, assignment moved with it).  Returns
+        the number of stream assignments released."""
+        with self._done_cv:
+            done = dict(self._done_seq)
+        n = 0
+        with self._tlock:
+            for key in list(self._assign):
+                if done.get(key, 0) >= self._next_seq.get(key, 0):
+                    del self._assign[key]
+                    n += 1
+        self.rebalances += 1
+        return n
+
+    @staticmethod
+    def _enqueue_in_seq_order(tgt: _Executor, mb: MicroBatch) -> None:
+        """Insert a reassigned partition BEFORE any later-seq partition of
+        the same stream already queued on the target (the driver may have
+        dispatched newer batches to the new sticky executor while the dead
+        one's queue was still being drained); plain append would make the
+        target block on its own queue and then analyze out of order."""
+        with tgt.q.mutex:
+            dq = tgt.q.queue
+            pos = next((i for i, x in enumerate(dq)
+                        if isinstance(x, MicroBatch) and x is not _POISON
+                        and x.stream_key == mb.stream_key
+                        and x.seq > mb.seq), None)
+            if pos is None:
+                dq.append(mb)
+            else:
+                dq.insert(pos, mb)
+            tgt.q.not_empty.notify()
 
     def _reassign(self, dead: _Executor):
         moved = 0
@@ -185,11 +339,17 @@ class StreamEngine:
                 continue
             tgt = self._pick_executor(mb.stream_key, exclude=dead.idx)
             if tgt is not None:
-                tgt.q.put(mb)
+                self._enqueue_in_seq_order(tgt, mb)
                 moved += 1
-        for k, v in list(self._assign.items()):
-            if v == dead.idx:
-                del self._assign[k]
+            else:
+                # no survivor: release the ticket so later batches of this
+                # stream (none can exist yet without executors, but a scale-up
+                # may follow) don't wait on a batch nobody holds
+                self._release_turn(mb)
+        with self._tlock:
+            for k, v in list(self._assign.items()):
+                if v == dead.idx:
+                    del self._assign[k]
         return moved
 
     def _alive(self) -> list[_Executor]:
@@ -199,26 +359,66 @@ class StreamEngine:
         alive = [e for e in self._alive() if e.idx != exclude]
         if not alive:
             return None
-        if stream_key in self._assign:
-            idx = self._assign[stream_key]
-            for e in alive:
-                if e.idx == idx:
-                    return e
-        # sticky partition->executor mapping (paper: fixed subset per stream)
-        e = min(alive, key=lambda e: e.q.qsize())
-        self._assign[stream_key] = e.idx
-        return e
+        with self._tlock:
+            if stream_key in self._assign:
+                idx = self._assign[stream_key]
+                for e in alive:
+                    if e.idx == idx:
+                        return e
+            # sticky partition->executor mapping (paper: fixed subset per
+            # stream), least-loaded at (re)assignment time
+            e = min(alive, key=lambda e: e.q.qsize())
+            self._assign[stream_key] = e.idx
+            return e
 
     # ---- work stealing ---------------------------------------------------
+    @staticmethod
+    def _peek_key(ex: _Executor) -> str | None:
+        with ex.q.mutex:
+            head = ex.q.queue[0] if ex.q.queue else None
+        return head.stream_key if isinstance(head, MicroBatch) else None
+
     def _steal(self, thief_idx: int):
-        victims = [e for e in self._alive() if e.idx != thief_idx and e.q.qsize() > 1]
+        """Steal the oldest queued partition from the deepest victim — and
+        migrate the WHOLE stream with it: every later queued partition of
+        that stream moves to the thief (in order) and the sticky assignment
+        follows, so the thief owns the stream's run end-to-end instead of
+        blocking on ordering tickets behind the victim's queue.  Prefer
+        victims whose head partition is NOT the stream the victim is
+        analyzing right now (that ticket would make the thief wait out the
+        victim's in-flight batch); tickets keep order correct either way."""
+        victims = sorted(
+            (e for e in self._alive()
+             if e.idx != thief_idx and e.q.qsize() > 1),
+            key=lambda e: e.q.qsize(), reverse=True)
         if not victims:
             return None
-        victim = max(victims, key=lambda e: e.q.qsize())
-        try:
-            return victim.q.get_nowait()
-        except queue.Empty:
-            return None
+        preferred = [v for v in victims
+                     if self._peek_key(v) != v.current_key] or victims
+        for victim in preferred:
+            try:
+                mb = victim.q.get_nowait()
+            except queue.Empty:
+                continue
+            if mb is _POISON:          # dying executor: hand it back
+                victim.q.put(_POISON)
+                continue
+            key = mb.stream_key
+            # extract the rest of this stream's queued run, preserving order
+            with victim.q.mutex:
+                rest = [x for x in victim.q.queue
+                        if isinstance(x, MicroBatch) and x is not _POISON
+                        and x.stream_key == key]
+                for x in rest:
+                    victim.q.queue.remove(x)
+            with self._tlock:
+                if self._assign.get(key) == victim.idx:
+                    self._assign[key] = thief_idx
+            thief = self.executors[thief_idx]
+            for x in rest:
+                thief.q.put(x)
+            return mb
+        return None
 
     # ---- driver: trigger-interval micro-batching -------------------------
     def _drive(self):
@@ -250,7 +450,9 @@ class StreamEngine:
                 ex = self._pick_executor(key)
                 if ex is None:
                     continue
-                ex.q.put(MicroBatch(stream_key=key, records=held))
+                seq = self._next_seq.get(key, 0)
+                self._next_seq[key] = seq + 1
+                ex.q.put(MicroBatch(stream_key=key, records=held, seq=seq))
                 del self._hold[key], self._hold_t[key]
                 n += 1
         return n
@@ -262,6 +464,7 @@ class StreamEngine:
     def _collect(self, r: Result):
         with self._rlock:
             self.results.append(r)
+            self._recent_lat.append((r.t_analyzed, r.latency))
 
     # ---- public ----------------------------------------------------------
     def collect(self, clear: bool = False) -> list[Result]:
@@ -278,20 +481,69 @@ class StreamEngine:
         lats.sort()
         return {"n": len(lats),
                 "mean": sum(lats) / len(lats),
-                "p50": lats[len(lats) // 2],
-                "p99": lats[min(len(lats) - 1, int(len(lats) * 0.99))],
+                "p50": percentile_sorted(lats, 0.50),
+                "p99": percentile_sorted(lats, 0.99),
                 "max": lats[-1]}
+
+    def metrics(self) -> dict:
+        """Thread-safe control-plane snapshot: per-executor queue depth /
+        steal counts, hold-buffer backlog, rolling (windowed) latency
+        percentiles, and the executor-seconds integral.  This is the
+        engine's feed into ``runtime.telemetry.TelemetryBus``."""
+        def _qrecords(ex: _Executor) -> int:
+            with ex.q.mutex:
+                return sum(len(x.records) for x in ex.q.queue
+                           if isinstance(x, MicroBatch))
+        with self._elock:
+            self._account_locked()
+            execs = [{"idx": e.idx, "alive": e.alive,
+                      "queue_depth": e.q.qsize(),
+                      "queued_records": _qrecords(e),
+                      "processed": e.processed,
+                      "stolen": e.stolen, "current_key": e.current_key,
+                      "waiting": e.waiting}
+                     for e in self.executors]
+            exec_secs = self._exec_secs
+        with self._tlock:
+            held = sum(len(v) for v in self._hold.values())
+            n_streams = len(self._next_seq)
+        cut = time.time() - _LATENCY_WINDOW_S
+        with self._rlock:
+            lats = sorted(lat for t, lat in self._recent_lat if t >= cut)
+            n_results = len(self.results)
+        return {"executors": execs,
+                "alive_executors": sum(1 for e in execs if e["alive"]),
+                "queued": sum(e["queue_depth"] for e in execs if e["alive"]),
+                "queued_records": sum(e["queued_records"] for e in execs),
+                "held_records": held,
+                "n_streams": n_streams,
+                "n_results": n_results,
+                "latency_window_n": len(lats),
+                "latency_p50": percentile_sorted(lats, 0.50),
+                "latency_p99": percentile_sorted(lats, 0.99),
+                "executor_seconds": exec_secs,
+                "order_timeouts": self.order_timeouts,
+                "rebalances": self.rebalances}
 
     def drain_and_stop(self, timeout: float = 30.0):
         deadline = time.time() + timeout
         while time.time() < deadline:
+            # partitions stranded on dead executors (dispatch/steal raced a
+            # kill) go back to survivors before we test for emptiness
+            for e in self.executors:
+                if not e.alive and e.q.qsize() and self._alive():
+                    self._reassign(e)
             pending = sum(ep.pending() for ep in self.endpoints)
             queued = sum(e.q.qsize() for e in self._alive())
-            if pending == 0 and queued == 0 and self.held() == 0:
+            stranded = sum(e.q.qsize() for e in self.executors if not e.alive)
+            if pending == 0 and queued == 0 and self.held() == 0 \
+                    and (stranded == 0 or not self._alive()):
                 break
             self.trigger_once(force=True)
             time.sleep(0.05)
         self._stop.set()
+        with self._elock:
+            self._account_locked()
         survivors = self._alive()
         for e in survivors:
             e.alive = False

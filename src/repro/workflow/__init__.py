@@ -8,13 +8,19 @@ Public surface:
   construction, engine/DAG lifecycle, and ordered teardown.
 * :class:`FieldHandle` — typed producer handle (``write``/``write_batch``).
 * :class:`Pipeline` — fluent builder compiling to an ``AnalysisDAG``.
+* :class:`ElasticityConfig` — the control-plane knob block; with
+  ``enabled=True`` the Session owns a telemetry bus + ElasticController
+  that holds the p99 QoS target by scaling executors, adapting wire batch
+  caps, and recovering from endpoint/executor failure.
 
 The paper's Listing 1.1 C API (``broker_connect``/``broker_init``/
 ``broker_write``/``broker_finalize`` in :mod:`repro.core.api`) is kept as a
 thin, deprecated compatibility shim over :class:`Session`.
 """
+from repro.runtime.controller import ElasticityConfig
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.pipeline import Pipeline
 from repro.workflow.session import FieldHandle, Session
 
-__all__ = ["WorkflowConfig", "Session", "FieldHandle", "Pipeline"]
+__all__ = ["WorkflowConfig", "Session", "FieldHandle", "Pipeline",
+           "ElasticityConfig"]

@@ -15,6 +15,7 @@ from dataclasses import asdict, dataclass, fields
 
 from repro.core.broker import BrokerConfig
 from repro.core.grouping import GroupPlan, plan_groups
+from repro.runtime.controller import ElasticityConfig
 
 _BACKPRESSURE = ("block", "drop_oldest", "sample")
 _COMPRESS = ("none", "zstd", "int8", "int8+zstd")
@@ -45,6 +46,10 @@ class WorkflowConfig:
     trigger_interval: float = 1.0
     min_batch: int = 2
     n_executors: int | None = None     # None: plan.n_executors
+    # -- control plane (telemetry bus + ElasticController) ----------------
+    # ``elasticity.enabled=True`` makes the Session own a TelemetryBus, a
+    # FailureDetector, and an ElasticController for the engine's lifetime.
+    elasticity: ElasticityConfig = ElasticityConfig()
 
     # ---- validation -----------------------------------------------------
     def validate(self) -> "WorkflowConfig":
@@ -83,6 +88,7 @@ class WorkflowConfig:
             raise ValueError("min_batch must be >= 1")
         if self.n_executors is not None and self.n_executors < 1:
             raise ValueError("n_executors must be >= 1")
+        self.elasticity.validate()
         return self
 
     # ---- derived sub-configs -------------------------------------------
@@ -121,6 +127,14 @@ class WorkflowConfig:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown WorkflowConfig keys: {sorted(unknown)}")
+        if isinstance(d.get("elasticity"), dict):
+            el = dict(d["elasticity"])
+            el_known = {f.name for f in fields(ElasticityConfig)}
+            el_unknown = set(el) - el_known
+            if el_unknown:
+                raise ValueError(
+                    f"unknown ElasticityConfig keys: {sorted(el_unknown)}")
+            d = dict(d, elasticity=ElasticityConfig(**el))
         return cls(**d).validate()
 
     @classmethod

@@ -25,6 +25,9 @@ import numpy as np
 
 from repro.core.broker import Broker, BrokerStats
 from repro.core.records import FieldSchema
+from repro.runtime.controller import ElasticController
+from repro.runtime.fault import FailureDetector
+from repro.runtime.telemetry import TelemetryBus
 from repro.streaming.dag import AnalysisDAG
 from repro.streaming.endpoint import make_endpoints
 from repro.streaming.engine import StreamEngine
@@ -120,6 +123,10 @@ class Session:
                              self.config.broker_config())
         self.engine: StreamEngine | None = None
         self.dag: AnalysisDAG | None = None
+        # control plane (built lazily with the engine when elasticity is on)
+        self.telemetry: TelemetryBus | None = None
+        self.detector: FailureDetector | None = None
+        self.controller: ElasticController | None = None
         self._fields: dict[tuple, FieldHandle] = {}
         self._closed = False
         try:
@@ -141,6 +148,7 @@ class Session:
         if self.engine is None:
             self.engine = StreamEngine.from_config(
                 self.config, self._handles(), fn, plan=self.plan)
+            self._start_control_plane()
         else:
             self.engine.analyze_fn = fn
         return self.engine
@@ -152,10 +160,31 @@ class Session:
         if self.engine is None:
             self.engine = StreamEngine.from_config(
                 self.config, self._handles(), dag, plan=self.plan)
+            self._start_control_plane()
         else:
             self.engine.attach_dag(dag)
         self.dag = dag
         return dag
+
+    def _start_control_plane(self) -> None:
+        """With ``elasticity.enabled``, the Session owns the closed loop:
+        a TelemetryBus over its broker/endpoints/engine, a FailureDetector,
+        and the ElasticController thread (started here, stopped FIRST in
+        :meth:`close` so no actuator races the ordered teardown)."""
+        el = self.config.elasticity
+        if not el.enabled or self.controller is not None \
+                or self.engine is None:
+            return
+        self.telemetry = TelemetryBus(broker=self.broker,
+                                      endpoints=self._handles(),
+                                      engine=self.engine)
+        self.detector = FailureDetector(
+            timeout_s=el.heartbeat_timeout_s,
+            straggler_factor=el.straggler_factor)
+        self.controller = ElasticController(
+            self.telemetry, el, engine=self.engine, broker=self.broker,
+            detector=self.detector)
+        self.controller.start()
 
     # ---- producer-side API ----------------------------------------------
     def open_field(self, name: str, shape=(), dtype: str = "float32") -> FieldHandle:
@@ -188,11 +217,15 @@ class Session:
 
     # ---- lifecycle --------------------------------------------------------
     def close(self) -> BrokerStats:
-        """Ordered teardown: broker.finalize() → engine.drain_and_stop() →
-        transport close.  Idempotent; returns the final broker stats."""
+        """Ordered teardown: controller.stop() (quiesce the control plane so
+        no scale/reroute action races the drain) → broker.finalize() →
+        engine.drain_and_stop() → transport close.  Idempotent; returns the
+        final broker stats."""
         if self._closed:
             return self.broker.stats
         self._closed = True
+        if self.controller is not None:
+            self.controller.stop()
         stats = self.broker.finalize()
         if self.engine is not None:
             self.engine.drain_and_stop()

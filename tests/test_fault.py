@@ -1,4 +1,5 @@
-"""Fault-tolerance runtime: detection, stragglers, checkpoint-restart."""
+"""Fault-tolerance runtime: detection, stragglers, checkpoint-restart, and
+the detector→controller→engine recovery loop."""
 import time
 
 import jax
@@ -8,12 +9,18 @@ import pytest
 
 import repro.configs as C
 from repro.checkpoint.ckpt import CheckpointManager
+from repro.core.broker import Broker, BrokerConfig
+from repro.core.grouping import GroupPlan
 from repro.data.pipeline import TokenPipeline
 from repro.models import transformer as T
 from repro.models.modules import materialize
 from repro.models.steps import make_train_step
 from repro.optim import adamw
+from repro.runtime.controller import ElasticController, ElasticityConfig
 from repro.runtime.fault import FailureDetector, RestartPolicy
+from repro.runtime.telemetry import TelemetryBus
+from repro.streaming.endpoint import make_endpoints
+from repro.streaming.engine import StreamEngine
 
 
 def test_heartbeat_failure_detection():
@@ -48,6 +55,95 @@ def test_straggler_detection():
             det.beat("slow")
     det.scan()
     assert "slow" in flagged
+
+
+def test_straggler_callback_drives_executor_replacement():
+    """End-to-end over the real callbacks: a slowed executor's sparse
+    heartbeats trip FailureDetector.on_straggler, the ElasticController
+    replaces it, the engine rebalances, and every record still lands —
+    previously test-only callbacks now close a real loop."""
+    eps = make_endpoints(1)
+    plan = GroupPlan(n_producers=4, n_groups=1, executors_per_group=1)
+    broker = Broker(plan, eps, BrokerConfig(compress="none",
+                                            backpressure="block",
+                                            queue_capacity=4096))
+
+    import threading
+    seen: dict[str, list[int]] = {}
+    seen_lock = threading.Lock()
+
+    def analyze(key, recs):
+        time.sleep(0.01 * len(recs))
+        with seen_lock:
+            seen.setdefault(key, []).extend(r.step for r in recs)
+        return len(recs)
+
+    eng = StreamEngine([e.handle for e in eps], analyze, n_executors=3,
+                       trigger_interval=0.03, min_batch=1)
+    straggler = eng.executors[0]
+    straggler.slowdown = 0.5               # ~10x its peers' service time
+    bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps],
+                       engine=eng)
+    el = ElasticityConfig(enabled=True, interval_s=0.05,
+                          heartbeat_timeout_s=10.0, straggler_factor=2.5,
+                          min_executors=1, max_executors=8,
+                          idle_scale_down_s=3600, target_p99_s=3600)
+    ctl = ElasticController(bus, el, engine=eng, broker=broker)
+    deadline = time.time() + 25.0
+    written = 0
+    while time.time() < deadline:
+        for r in range(4):                 # keep every executor fed
+            broker.write("f", r, written, np.zeros(8, np.float32))
+        written += 1
+        ctl.tick()
+        if any(a.kind == "replace_executor" for _, a in ctl.actions_log):
+            break
+        time.sleep(0.02)
+    assert any(a.kind == "replace_executor" for _, a in ctl.actions_log), \
+        "controller never replaced the straggler"
+    assert ctl.detector.nodes["executor-0"].marked_straggler
+    assert not straggler.alive                 # retired
+    assert sum(1 for e in eng.executors if e.alive) >= 3   # replacement up
+    broker.flush()
+    eng.drain_and_stop(timeout=30)
+    broker.finalize()
+    assert sum(r.n_records for r in eng.collect()) == 4 * written
+    for key, steps in seen.items():
+        assert steps == sorted(steps), f"{key} reordered across replacement"
+
+
+def test_dead_executor_heartbeat_timeout_triggers_replacement():
+    """An executor whose thread dies (hard kill) stops beating entirely;
+    the detector times it out and the controller replaces it."""
+    eps = make_endpoints(1)
+    plan = GroupPlan(n_producers=1, n_groups=1, executors_per_group=2)
+    broker = Broker(plan, eps, BrokerConfig(compress="none"))
+    eng = StreamEngine([e.handle for e in eps],
+                       lambda k, recs: len(recs), n_executors=1,
+                       trigger_interval=0.03, min_batch=1)
+    bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps],
+                       engine=eng)
+    el = ElasticityConfig(enabled=True, interval_s=0.05,
+                          heartbeat_timeout_s=0.2, stuck_analysis_s=0.3,
+                          idle_scale_down_s=3600, target_p99_s=3600)
+    ctl = ElasticController(bus, el, engine=eng, broker=broker)
+    ctl.tick()                                  # register + first beats
+    # simulate a wedged (not cooperatively-killed) executor: alive flag on,
+    # but it neither progresses nor empties its queue
+    from repro.streaming.engine import MicroBatch
+    victim = eng.executors[0]
+    victim.slowdown = 1e9                       # never finishes anything
+    victim.q.put(MicroBatch(stream_key="probe", records=[]))   # being "run"
+    victim.q.put(MicroBatch(stream_key="probe", records=[]))   # stuck queued
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        ctl.tick()
+        if any(a.kind == "replace_executor" for _, a in ctl.actions_log):
+            break
+        time.sleep(0.05)
+    assert any(a.kind == "replace_executor" for _, a in ctl.actions_log)
+    eng.drain_and_stop(timeout=5)
+    broker.finalize()
 
 
 def test_restart_policy_resumes_training(tmp_path):

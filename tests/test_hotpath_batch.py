@@ -9,7 +9,7 @@ import pytest
 
 from repro.analysis.dmd import StreamingDMD, gram_pair_update
 from repro.core import records as rec_mod
-from repro.core.broker import Broker, BrokerConfig, BrokerStats, _GroupSender
+from repro.core.broker import Broker, BrokerConfig, _GroupSender
 from repro.core.grouping import GroupPlan
 from repro.core.records import (StreamRecord, decode_any, decode_batch,
                                 encode, encode_batch)
@@ -122,6 +122,49 @@ def test_batch_codec_roundtrip(rng, compress, delta):
             np.testing.assert_array_equal(a.payload, b.payload)
 
 
+def test_int8_delta_chain_error_does_not_accumulate(rng):
+    """Per-stream scales + closed-loop deltas: along a 64-record delta chain
+    every record's error stays bounded by its OWN quantization step instead
+    of summing the chain's.  (The seed codec accumulated error record over
+    record — tail error grew with chain length.)"""
+    base = rng.randn(1000).astype(np.float32)
+    recs, p = [], base.copy()
+    for s in range(64):
+        p = p + 0.01 * rng.randn(1000).astype(np.float32)
+        recs.append(StreamRecord("vel", 0, 1, s, p.copy()))
+    out = decode_batch(encode_batch(recs, compress="int8", delta=True))
+    errs = [np.abs(a.payload - b.payload).max() for a, b in zip(recs, out)]
+    # every record within the classic single-record int8 bound...
+    bound = max(np.abs(r.payload).max() for r in recs) / 100
+    assert max(errs) <= bound
+    # ...and the chain tail is no worse than the chain head: deltas are tiny
+    # relative to the base record, so closed-loop errors should be far
+    # SMALLER downstream, not accumulating
+    assert max(errs[32:]) <= errs[0]
+    assert max(errs[1:]) < bound / 5
+
+
+def test_legacy_int8_batch_frames_still_decode(rng):
+    """Pre-per-stream-scale frames (enc tag 'int8', one blockwise pass over
+    the concatenated buffer) must keep decoding."""
+    import msgpack
+    from repro.core.records import quantize_int8
+    recs = [StreamRecord("f", 0, 0, s, rng.randn(40).astype(np.float32))
+            for s in range(5)]
+    buf = np.concatenate([r.payload.reshape(-1) for r in recs])
+    msg = {"n": len(recs), "f": "f", "g": 0, "r": 0,
+           "s": [r.step for r in recs], "t": [r.t_generated for r in recs],
+           "e": "int8", "d": 0,
+           "sh": [list(r.payload.shape) for r in recs],
+           "p": quantize_int8(buf)}
+    blob = b"B" + msgpack.packb(msg, use_bin_type=True)
+    out = decode_batch(blob)
+    assert len(out) == 5
+    for a, b in zip(recs, out):
+        np.testing.assert_allclose(a.payload, b.payload, atol=0.05)
+        assert a.step == b.step
+
+
 def test_batch_codec_mixed_streams_and_shapes(rng):
     """Delta chains must reset across stream/shape changes; identity columns
     expand back per record."""
@@ -179,8 +222,7 @@ def test_sender_coalesces_queued_records(rng):
     eps = make_endpoints(1)
     s = _GroupSender(0, eps, 0,
                      BrokerConfig(compress="none", max_batch_records=8,
-                                  queue_capacity=64),
-                     BrokerStats())
+                                  queue_capacity=64))
     for i in range(32):
         s.submit(StreamRecord("f", 0, 0, i, np.arange(4, dtype=np.float32)))
     s.start()

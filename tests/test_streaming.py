@@ -85,6 +85,74 @@ def test_executor_failure_reassigns():
     assert all(r.executor != victim.idx or True for r in eng.collect())
 
 
+def test_per_stream_order_survives_stealing():
+    """Regression for the steal ordering hazard: a stolen micro-batch must
+    never be analyzed concurrently with — or ahead of — an earlier
+    micro-batch of the same stream still on the sticky executor.  A slowed
+    executor + single hot stream forces steals; per-stream sequence tickets
+    must keep analysis order == dispatch order."""
+    import threading
+    broker, eps, eng = _mk_engine(n_exec=2, trigger=30, n_ranks=1)
+    eng.min_batch = 1
+    eng.executors[0].slowdown = 0.05
+    order: dict[str, list[int]] = {}
+    in_flight: dict[str, int] = {}
+    overlap = []
+    lock = threading.Lock()
+
+    def analyze(key, recs):
+        with lock:
+            if in_flight.get(key):
+                overlap.append(key)        # concurrent same-stream analysis
+            in_flight[key] = in_flight.get(key, 0) + 1
+        time.sleep(0.01)
+        with lock:
+            in_flight[key] -= 1
+            order.setdefault(key, []).extend(r.step for r in recs)
+        return len(recs)
+
+    eng.analyze_fn = analyze
+    for step in range(30):                 # many 1-record batches, one stream
+        broker.write("f", 0, step, np.full(8, float(step), np.float32))
+        broker.flush()
+        eng.trigger_once()
+    eng.drain_and_stop(timeout=30)
+    stolen = sum(e.stolen for e in eng.executors)
+    assert stolen > 0, "scenario must actually exercise stealing"
+    assert not overlap, f"concurrent same-stream analysis on {overlap}"
+    for key, steps in order.items():
+        assert steps == sorted(steps), f"stream {key} reordered: {steps}"
+    assert sum(len(s) for s in order.values()) == 30
+    assert eng.order_timeouts == 0
+
+
+def test_rebalance_releases_only_idle_streams():
+    """Scale events must not migrate a backlogged stream away from the
+    executor still holding its dispatched batches (ordering would stall);
+    only fully-drained streams are released for reassignment."""
+    broker, eps, eng = _mk_engine(n_exec=2, trigger=30)
+    for e in eng.executors:
+        e.slowdown = 0.3               # keep dispatched batches unfinished
+    _push(broker, steps=4)
+    broker.flush()
+    assert eng.trigger_once() > 0
+    with eng._tlock:
+        assigned_before = dict(eng._assign)
+    assert assigned_before
+    released = eng.rebalance()
+    assert released == 0, "busy streams must keep their assignment"
+    with eng._tlock:
+        assert eng._assign == assigned_before
+    for e in eng.executors:
+        e.slowdown = 0.0
+    eng.drain_and_stop(timeout=30)
+    # exiting executors hand back their queues and drop their assignments;
+    # with everything drained a rebalance has nothing left to hold
+    with eng._tlock:
+        assert eng._assign == {}
+    assert eng.rebalance() == 0
+
+
 def test_elastic_scale_up_down():
     broker, eps, eng = _mk_engine(n_exec=1, trigger=0.02)
     assert len([e for e in eng.executors if e.alive]) == 1

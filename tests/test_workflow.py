@@ -251,10 +251,9 @@ def _parked_sender(**cfg_kw):
     """A _GroupSender that is never start()ed: queue state and eviction
     accounting are fully deterministic (same construction as
     test_hotpath_batch's coalescing test)."""
-    from repro.core.broker import BrokerStats, _GroupSender
+    from repro.core.broker import _GroupSender
     eps = make_endpoints(1)
-    sender = _GroupSender(0, eps, 0, BrokerConfig(compress="none", **cfg_kw),
-                          BrokerStats())
+    sender = _GroupSender(0, eps, 0, BrokerConfig(compress="none", **cfg_kw))
     return sender, eps
 
 
