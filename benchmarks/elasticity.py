@@ -13,11 +13,20 @@ provisioning strategies:
                it holds the configured p99 target through the spike while
                spending measurably fewer executor-seconds than static peak.
 
-Per-phase p99 is computed from Result timestamps (records *generated* inside
-the phase window), executor cost from the engine's executor-seconds
-integral.  Results land in ``BENCH_elasticity.json``.
+By default the study runs on **virtual time** (``repro.sim.scenario`` under
+a seeded ``VirtualClock``): the whole three-mode suite finishes in a couple
+of wall seconds, is deterministic (``--trace`` dumps the elastic run's
+event trace; two same-seed invocations are byte-identical — CI's
+``scenario-smoke`` job diffs them), and still exercises the real broker /
+endpoints / engine / controller stack.  ``--wall`` switches back to the
+original real-sleep mode for calibration against actual hardware.
 
-  PYTHONPATH=src python benchmarks/elasticity.py [--smoke] [--json PATH]
+Per-phase p99 is computed from records *generated* inside the phase window,
+executor cost from the engine's executor-seconds integral.  Results land in
+``BENCH_elasticity.json``.
+
+  PYTHONPATH=src python benchmarks/elasticity.py [--smoke] [--wall]
+      [--seed N] [--trace PATH] [--json PATH]
 """
 from __future__ import annotations
 
@@ -28,13 +37,14 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.sim.scenario import LoadPhase, Scenario, ScenarioRunner
 from repro.streaming.engine import percentile_sorted
 from repro.workflow import ElasticityConfig, Session, WorkflowConfig
 
 N_RANKS = 4
 FIELD_ELEMS = 256
 ANALYZE_COST_S = 0.008          # simulated per-record analysis work
-TARGET_P99_S = 1.5              # sits between elastic (~1.1s) and the
+TARGET_P99_S = 1.5              # sits between elastic (~0.2s) and the
                                 # underprovisioned static run (~3.5s)
 BASE_EXECUTORS = 1              # quiet-phase provisioning
 PEAK_EXECUTORS = 4              # spike provisioning
@@ -48,11 +58,11 @@ def _profile(smoke: bool) -> list[tuple[str, float, float]]:
     return [("low", 5.0, 5.0), ("spike", 10.0, 60.0), ("low", 8.0, 5.0)]
 
 
-def _run_mode(mode: str, smoke: bool) -> dict:
+def _workflow(mode: str) -> WorkflowConfig:
     elastic = mode == "elastic"
     n_exec = {"static_low": BASE_EXECUTORS, "static_peak": PEAK_EXECUTORS,
               "elastic": BASE_EXECUTORS}[mode]
-    cfg = WorkflowConfig(
+    return WorkflowConfig(
         n_producers=N_RANKS, n_groups=2, executors_per_group=2,
         compress="none", backpressure="block", queue_capacity=4096,
         trigger_interval=0.05, min_batch=4, n_executors=n_exec,
@@ -61,6 +71,44 @@ def _run_mode(mode: str, smoke: bool) -> dict:
             enabled=elastic, interval_s=0.1, target_p99_s=TARGET_P99_S,
             min_executors=1, max_executors=PEAK_EXECUTORS, scale_up_step=2,
             backlog_high=24, idle_scale_down_s=1.0, cooldown_s=0.3))
+
+
+# --------------------------------------------------------------- virtual mode
+def _run_mode_virtual(mode: str, smoke: bool, seed: int):
+    """One provisioning strategy on deterministic simulated time; returns
+    (result row, full event trace)."""
+    sc = Scenario(
+        workflow=_workflow(mode),
+        phases=tuple(LoadPhase(name, dur, rate)
+                     for name, dur, rate in _profile(smoke)),
+        seed=seed, analysis_cost_s=ANALYZE_COST_S,
+        payload_elems=FIELD_ELEMS)
+    trace = ScenarioRunner(sc).run()
+    s = trace.summary
+    row = {
+        "mode": mode,
+        "records": s["sent"],
+        "dropped": s["dropped_by_policy"],
+        "p99_overall_s": s["latency_p99"],
+        "p99_spike_s": trace.phase_p99("spike"),
+        "p99_low_s": trace.phase_p99("low"),
+        "executor_seconds": s["executor_seconds"],
+        "executors_configured": sc.workflow.n_executors,
+        "executors_peak_observed": max(s["executors_peak"],
+                                       sc.workflow.n_executors),
+        "virtual_duration_s": s["virtual_duration_s"],
+    }
+    if mode == "elastic":
+        row["controller_actions"] = s.get("controller_actions", {})
+    return row, trace
+
+
+# ------------------------------------------------------------------ wall mode
+def _run_mode_wall(mode: str, smoke: bool) -> dict:
+    """The original real-sleep study (hardware calibration path)."""
+    cfg = _workflow(mode)               # the one place the mode table lives
+    elastic = cfg.elasticity.enabled
+    n_exec = cfg.n_executors
 
     def analyze(key, records):
         time.sleep(ANALYZE_COST_S * len(records))
@@ -113,12 +161,24 @@ def _run_mode(mode: str, smoke: bool) -> dict:
     return row
 
 
-def main(smoke: bool = False) -> dict:
-    rows = [_run_mode(m, smoke)
-            for m in ("static_low", "static_peak", "elastic")]
+def main(smoke: bool = False, wall: bool = False, seed: int = 0,
+         trace_path: str | None = None) -> dict:
+    rows = []
+    for m in ("static_low", "static_peak", "elastic"):
+        if wall:
+            rows.append(_run_mode_wall(m, smoke))
+        else:
+            row, trace = _run_mode_virtual(m, smoke, seed)
+            rows.append(row)
+            if m == "elastic" and trace_path:
+                Path(trace_path).write_text(trace.to_jsonl())
+                print(f"# elastic event trace -> {trace_path} "
+                      f"(sha256 {trace.digest()[:16]}…)")
     by = {r["mode"]: r for r in rows}
     verdict = {
         "target_p99_s": TARGET_P99_S,
+        "clock": "wall" if wall else "virtual",
+        "seed": None if wall else seed,
         # the headline claims:
         "elastic_holds_target": by["elastic"]["p99_spike_s"] <= TARGET_P99_S,
         "static_low_breaches": by["static_low"]["p99_spike_s"] > TARGET_P99_S,
@@ -141,12 +201,26 @@ def main(smoke: bool = False) -> dict:
 if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
-                   help="short CI profile (~10s per mode)")
+                   help="short CI profile (virtual: <2s wall; wall: ~10s/mode)")
+    p.add_argument("--wall", action="store_true",
+                   help="real-sleep mode (original study; minutes of wall "
+                        "time) instead of deterministic virtual time")
+    p.add_argument("--seed", type=int, default=0,
+                   help="VirtualClock seed (virtual mode only)")
+    p.add_argument("--trace", default=None,
+                   help="write the elastic run's event trace (jsonl) here "
+                        "(virtual mode only)")
     p.add_argument("--json", default=str(Path(__file__).resolve().parents[1]
                                          / "BENCH_elasticity.json"))
     args = p.parse_args()
-    out = main(smoke=args.smoke)
+    t0 = time.time()
+    out = main(smoke=args.smoke, wall=args.wall, seed=args.seed,
+               trace_path=args.trace)
+    out["wall_seconds"] = round(time.time() - t0, 2)
     Path(args.json).write_text(json.dumps(out, indent=2) + "\n")
-    print(f"# results -> {args.json}")
+    print(f"# results -> {args.json} ({out['wall_seconds']}s wall)")
     if not out["verdict"]["elastic_holds_target"]:
         raise SystemExit("elastic run failed to hold the p99 target")
+    if not out["verdict"]["static_low_breaches"]:
+        raise SystemExit("static_low unexpectedly held the target — "
+                         "the study lost its contrast")

@@ -32,7 +32,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -40,6 +39,7 @@ import numpy as np
 from repro.core.grouping import GroupPlan
 from repro.core.records import FieldSchema, StreamRecord, encode, encode_batch
 from repro.core.transport import Transport
+from repro.runtime.clock import Clock, ensure_clock
 
 
 @dataclass
@@ -119,12 +119,13 @@ class _GroupSender(threading.Thread):
     group to its designated endpoint)."""
 
     def __init__(self, group_id: int, endpoints: list[Transport], primary: int,
-                 cfg: BrokerConfig):
+                 cfg: BrokerConfig, clock: Clock | None = None):
         super().__init__(daemon=True, name=f"broker-g{group_id}")
         self.group_id = group_id
         self.endpoints = endpoints            # anything satisfying Transport
         self.primary = primary
         self.cfg = cfg
+        self.clock = ensure_clock(clock)
         # each sender owns its counters; Broker.stats merges them on read
         self.stats = _SenderStats()
         # mutable wire-aggregation cap, adapted at runtime from queue depth
@@ -162,7 +163,7 @@ class _GroupSender(threading.Thread):
         self.stats.add(written=1)
         self.stats.observe_depth(self.q.qsize())
         if self.cfg.backpressure == "block":
-            self.q.put(rec)
+            self.clock.queue_put(self.q, rec)
             return True
         try:
             self.q.put_nowait(rec)
@@ -198,7 +199,7 @@ class _GroupSender(threading.Thread):
         self.stats.observe_depth(self.q.qsize())
         item = list(recs)
         if self.cfg.backpressure == "block":
-            self.q.put(item)
+            self.clock.queue_put(self.q, item)
             return len(item)
         try:
             self.q.put_nowait(item)
@@ -234,9 +235,8 @@ class _GroupSender(threading.Thread):
         list is chunked at the cap."""
         while not self._stop_evt.is_set() or not self.q.empty():
             cap = max(1, self.batch_cap)
-            try:
-                item = self.q.get(timeout=0.05)
-            except queue.Empty:
+            item = self.clock.queue_get(self.q, timeout=0.05)
+            if item is None:
                 continue
             recs = list(item) if isinstance(item, list) else [item]
             while len(recs) < cap:
@@ -257,6 +257,9 @@ class _GroupSender(threading.Thread):
                                    bytes_sent=len(blob))
                 else:
                     self.stats.add(dropped=len(chunk))  # retries exhausted
+        # leave the clock's schedule on exit so a virtual schedule never
+        # waits out the dead-participant watchdog for this thread
+        self.clock.detach()
 
     def _send(self, blob: bytes) -> bool:
         """Send to primary; on failure re-route to the next healthy endpoint
@@ -296,26 +299,32 @@ class _GroupSender(threading.Thread):
 
     def stop(self, timeout: float):
         self._stop_evt.set()
-        self.join(timeout=timeout)
+        # clock-mediated join: under VirtualClock a native join would stall
+        # the schedule (the joiner is runnable but blocked outside the clock)
+        self.clock.join(self, timeout=timeout)
 
 
 class Broker:
     """Producer-side broker: one per job, shared by all local ranks."""
 
     def __init__(self, plan: GroupPlan, endpoints: list[Transport],
-                 cfg: BrokerConfig | None = None):
+                 cfg: BrokerConfig | None = None, *,
+                 clock: Clock | None = None):
         assert len(endpoints) >= plan.n_groups, (
             f"{plan.n_groups} groups need >= that many endpoints, "
             f"got {len(endpoints)}")
         self.plan = plan
         self.cfg = cfg or BrokerConfig()
+        self.clock = ensure_clock(clock)
         self.endpoints = list(endpoints)
         self.planned_groups = plan.n_groups
         self.effective_groups = plan.n_groups
         self.schemas: dict[str, FieldSchema] = {}
         self._senders: dict[int, _GroupSender] = {}
         for g in range(plan.n_groups):
-            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg)
+            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg,
+                             self.clock)
+            self.clock.thread_started(s)
             s.start()
             self._senders[g] = s
 
@@ -377,7 +386,8 @@ class Broker:
               payload: np.ndarray) -> bool:
         g = self.plan.group_of(rank)
         rec = StreamRecord(field_name=field_name, group_id=g, rank=rank,
-                           step=step, payload=np.asarray(payload))
+                           step=step, payload=np.asarray(payload),
+                           t_generated=self.clock.now())
         return self._senders[g].submit(rec)
 
     def write_batch(self, field_name: str, ranks, steps, payloads) -> int:
@@ -386,11 +396,13 @@ class Broker:
         ``steps`` and ``payloads`` are aligned sequences; returns #records
         accepted (backpressure may drop whole per-group batches)."""
         by_group: dict[int, list[StreamRecord]] = {}
+        now = self.clock.now()
         for rank, step, payload in zip(ranks, steps, payloads):
             g = self.plan.group_of(rank)
             by_group.setdefault(g, []).append(
                 StreamRecord(field_name=field_name, group_id=g, rank=rank,
-                             step=step, payload=np.asarray(payload)))
+                             step=step, payload=np.asarray(payload),
+                             t_generated=now))
         return sum(self._senders[g].submit_batch(recs)
                    for g, recs in by_group.items())
 
@@ -404,11 +416,11 @@ class Broker:
         delivered or dropped), so error counts accumulated during a past
         failure episode cannot trigger a return while records written after
         the endpoints recovered are still in flight."""
-        deadline = time.time() + (timeout or self.cfg.flush_timeout_s)
+        deadline = self.clock.now() + (timeout or self.cfg.flush_timeout_s)
         st = self.stats
         err_mark = st.send_errors
         progress_mark = st.sent + st.dropped
-        while time.time() < deadline:
+        while self.clock.now() < deadline:
             st = self.stats
             undelivered = st.written - st.sent - st.dropped
             if undelivered <= 0 and all(s.q.empty() for s in self._senders.values()):
@@ -419,7 +431,7 @@ class Broker:
                 err_mark = st.send_errors
             elif st.send_errors - err_mark >= self.cfg.retry_limit * max(undelivered, 1):
                 return  # endpoints down and this flush's retries exhausted
-            time.sleep(0.01)
+            self.clock.sleep(0.01)
 
     def finalize(self) -> BrokerStats:
         self.flush()

@@ -1,0 +1,353 @@
+"""Injectable time — the seam that makes the control plane testable.
+
+Every temporal behavior in this repo (QoS held through a spike, stragglers
+detected from beat intervals, ordering preserved across steals) used to be
+exercised against ``time.time()``/``time.sleep()``, so validating it meant
+real waiting and real flake.  This module splits "what time is it / wait
+until" into a :class:`Clock` protocol with two implementations:
+
+* :class:`WallClock` — thin veneer over ``time``/native blocking primitives.
+  The default everywhere; production behavior is unchanged.
+* :class:`VirtualClock` — deterministic simulated time.  ``sleep()`` parks
+  the calling thread; when **every** participating thread is parked, the
+  clock advances to the earliest deadline and wakes exactly ONE waiter
+  (ordered wakeups: earliest deadline first, FIFO among equal deadlines,
+  or a seeded tie-breaker when ``seed`` is given so chaos tests can explore
+  different interleavings reproducibly).  Strict one-runnable-thread
+  serialization is what makes whole-Session scenario runs replay
+  byte-for-byte from a seed — and finish in milliseconds, because a
+  "10 second" load spike is just a few thousand heap pops.
+
+Participation rules for ``VirtualClock`` (see ``sim/scenario.py`` for the
+canonical driver):
+
+* A thread joins the clock's schedule the first time it parks, or earlier
+  via ``thread_started(t)`` (call it BEFORE ``t.start()`` so the clock
+  cannot advance while the newborn thread is still racing to its first
+  park — every runtime component that owns threads does this).
+* The driving thread should ``attach()`` itself before building the
+  pipeline, and must block only through the clock (``sleep``/``wait``/
+  ``queue_get``/``join``) while other participants are live; native blocking
+  calls stall virtual time for everyone.
+* Threads leave the schedule by exiting (dead threads are pruned) or via
+  ``detach()``.
+
+Beyond the protocol's ``now``/``sleep``/``wait``, both clocks provide the
+blocking helpers the runtime actually needs — ``queue_get``/``queue_put``/
+``wait_event``/``wait_cv``/``join`` — implemented natively for wall time and
+as deterministic polls for virtual time.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue as _queue
+import random
+import threading
+import time
+from typing import Callable, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """What the runtime requires of a time source.  ``now``/``sleep``/
+    ``wait`` are the conceptual core; the blocking helpers and participation
+    hooks below are equally load-bearing — every consumer (broker senders,
+    engine, controller, Session teardown) calls them, so a custom clock must
+    implement the full surface (subclass :class:`WallClock` to inherit
+    working defaults)."""
+
+    virtual: bool
+
+    def now(self) -> float:
+        ...
+
+    def sleep(self, duration: float) -> None:
+        ...
+
+    def sleep_until(self, t: float) -> None:
+        ...
+
+    def wait(self, condition: Callable[[], bool], timeout: float | None = None,
+             poll: float | None = None) -> bool:
+        ...
+
+    # ---- blocking helpers -------------------------------------------------
+    def queue_get(self, q: _queue.Queue, timeout: float | None = None):
+        ...
+
+    def queue_put(self, q: _queue.Queue, item,
+                  timeout: float | None = None) -> bool:
+        ...
+
+    def wait_event(self, evt: threading.Event,
+                   timeout: float | None = None) -> bool:
+        ...
+
+    def wait_cv(self, cv: threading.Condition, predicate,
+                timeout: float | None = None) -> bool:
+        ...
+
+    def join(self, thread: threading.Thread,
+             timeout: float | None = None) -> bool:
+        ...
+
+    # ---- participation hooks (no-ops for wall time) -----------------------
+    def thread_started(self, thread: threading.Thread) -> None:
+        ...
+
+    def attach(self, thread: threading.Thread | None = None) -> None:
+        ...
+
+    def detach(self, thread: threading.Thread | None = None) -> None:
+        ...
+
+
+class WallClock:
+    """Real time.  Blocking helpers delegate to the native primitives, so a
+    wall-clock pipeline behaves exactly like the pre-clock code did."""
+
+    virtual = False
+
+    def now(self) -> float:
+        return time.time()
+
+    def sleep(self, duration: float) -> None:
+        if duration > 0:
+            time.sleep(duration)
+
+    def sleep_until(self, t: float) -> None:
+        self.sleep(t - self.now())
+
+    def wait(self, condition, timeout=None, poll=None) -> bool:
+        """Poll ``condition`` until it returns True (-> True) or ``timeout``
+        elapses (-> False).  The deflake primitive: use this instead of
+        hand-rolled ``while time.time() < deadline: time.sleep(...)``."""
+        poll = 0.01 if poll is None else poll
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            if condition():
+                return True
+            if deadline is not None:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    return False
+                time.sleep(min(poll, remaining))
+            else:
+                time.sleep(poll)
+
+    # ---- blocking helpers (native) --------------------------------------
+    def queue_get(self, q: _queue.Queue, timeout: float | None = None):
+        """Blocking get; returns the item or None on timeout."""
+        try:
+            return q.get(timeout=timeout) if timeout is not None else q.get()
+        except _queue.Empty:
+            return None
+
+    def queue_put(self, q: _queue.Queue, item, timeout: float | None = None) -> bool:
+        try:
+            if timeout is not None:
+                q.put(item, timeout=timeout)
+            else:
+                q.put(item)
+            return True
+        except _queue.Full:
+            return False
+
+    def wait_event(self, evt: threading.Event, timeout: float | None = None) -> bool:
+        return evt.wait(timeout)
+
+    def wait_cv(self, cv: threading.Condition, predicate, timeout=None) -> bool:
+        """Wait on a condition variable until ``predicate()`` holds (checked
+        with ``cv`` held); relies on notifiers calling ``cv.notify_all()``."""
+        deadline = None if timeout is None else time.time() + timeout
+        with cv:
+            while not predicate():
+                remaining = None if deadline is None else deadline - time.time()
+                if remaining is not None and remaining <= 0:
+                    return False
+                cv.wait(remaining)
+            return True
+
+    def join(self, thread: threading.Thread, timeout: float | None = None) -> bool:
+        thread.join(timeout)
+        return not thread.is_alive()
+
+    # participation hooks are wall-clock no-ops
+    def thread_started(self, thread: threading.Thread) -> None:
+        pass
+
+    def attach(self, thread: threading.Thread | None = None) -> None:
+        pass
+
+    def detach(self, thread: threading.Thread | None = None) -> None:
+        pass
+
+
+class _Waiter:
+    __slots__ = ("thread", "event", "deadline")
+
+    def __init__(self, thread: threading.Thread, deadline: float):
+        self.thread = thread
+        self.event = threading.Event()
+        self.deadline = deadline
+
+
+class VirtualClock:
+    """Deterministic simulated time over real threads.
+
+    The scheduling invariants (property-tested in ``tests/test_clock*.py``):
+
+    * ``now()`` is monotonically non-decreasing,
+    * exactly one participant runs at a time; time advances only when every
+      participant is parked, to the earliest pending deadline,
+    * wakeups at equal deadlines are FIFO in park order — unless ``seed`` is
+      given, in which case equal-deadline order is shuffled by a seeded RNG
+      (deterministic per seed; the chaos suite's interleaving explorer),
+    * no lost wakeups: every ``sleep`` returns once its deadline is reached,
+      regardless of how many threads are sleeping concurrently.
+
+    A real-time watchdog (the 50 ms re-check in :meth:`sleep`) exists only to
+    prune participants that died without detaching; it never changes what the
+    schedule decides, so it cannot perturb determinism.
+    """
+
+    virtual = True
+
+    def __init__(self, seed: int | None = None, *, start: float = 0.0,
+                 poll: float = 0.005):
+        self._lock = threading.Lock()
+        self._now = float(start)
+        self._heap: list = []               # (deadline, tiebreak, seq, waiter)
+        self._seq = itertools.count()
+        self._rng = random.Random(seed) if seed is not None else None
+        self._runnable: set = set()         # participant threads not parked
+        self.poll = poll                    # default condition-poll quantum
+        self.wakeups = 0                    # scheduling events (observability)
+
+    # ---- participation ---------------------------------------------------
+    def attach(self, thread: threading.Thread | None = None) -> None:
+        """Register a participant as runnable.  The driving thread calls this
+        on itself before building the pipeline, so the clock cannot advance
+        behind its back during setup."""
+        t = thread if thread is not None else threading.current_thread()
+        with self._lock:
+            self._runnable.add(t)
+
+    # registering a thread BEFORE .start() closes the race where the clock
+    # advances while the newborn thread is still on its way to its first park
+    thread_started = attach
+
+    def detach(self, thread: threading.Thread | None = None) -> None:
+        t = thread if thread is not None else threading.current_thread()
+        with self._lock:
+            self._runnable.discard(t)
+            self._advance_locked()
+
+    # ---- core ------------------------------------------------------------
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def sleep(self, duration: float) -> None:
+        """Park until virtual time reaches ``now + duration``.  The caller
+        becomes a participant if it wasn't one already."""
+        self._park(None, max(0.0, float(duration)))
+
+    def sleep_until(self, t: float) -> None:
+        """Park until virtual time reaches the absolute instant ``t`` (the
+        exact float, so concurrent sleepers targeting the same ``t`` tie and
+        wake in FIFO/seeded order)."""
+        self._park(float(t), None)
+
+    def _park(self, deadline_abs: float | None, duration: float | None) -> None:
+        me = threading.current_thread()
+        with self._lock:
+            deadline = max(self._now, deadline_abs) if deadline_abs is not None \
+                else self._now + duration
+            w = _Waiter(me, deadline)
+            jitter = self._rng.random() if self._rng is not None else 0.0
+            heapq.heappush(self._heap, (w.deadline, jitter, next(self._seq), w))
+            self._runnable.discard(me)
+            self._advance_locked()
+        # Real park.  The periodic re-check is the dead-participant watchdog:
+        # if a runnable thread exits without detaching, some parked thread
+        # notices within 50 ms real and re-runs the (purely state-driven,
+        # hence still deterministic) advance decision.
+        while not w.event.wait(0.05):
+            with self._lock:
+                self._advance_locked()
+
+    def _advance_locked(self) -> None:
+        """If no participant is runnable, advance to the earliest deadline
+        and wake exactly that one waiter."""
+        if self._runnable:
+            dead = [t for t in self._runnable if not t.is_alive()]
+            for t in dead:
+                self._runnable.discard(t)
+        if self._runnable or not self._heap:
+            return
+        deadline, _, _, w = heapq.heappop(self._heap)
+        if deadline > self._now:
+            self._now = deadline
+        self._runnable.add(w.thread)
+        self.wakeups += 1
+        w.event.set()
+
+    def wait(self, condition, timeout=None, poll=None) -> bool:
+        poll = self.poll if poll is None else poll
+        deadline = None if timeout is None else self.now() + timeout
+        while True:
+            if condition():
+                return True
+            now = self.now()
+            if deadline is not None and now >= deadline:
+                return False
+            step = poll if deadline is None else min(poll, deadline - now)
+            self.sleep(step)
+
+    # ---- blocking helpers (deterministic polls) --------------------------
+    def queue_get(self, q: _queue.Queue, timeout: float | None = None):
+        out: list = []
+
+        def _try() -> bool:
+            try:
+                out.append(q.get_nowait())
+                return True
+            except _queue.Empty:
+                return False
+
+        return out[0] if self.wait(_try, timeout=timeout) else None
+
+    def queue_put(self, q: _queue.Queue, item, timeout: float | None = None) -> bool:
+        def _try() -> bool:
+            try:
+                q.put_nowait(item)
+                return True
+            except _queue.Full:
+                return False
+
+        return self.wait(_try, timeout=timeout)
+
+    def wait_event(self, evt: threading.Event, timeout: float | None = None) -> bool:
+        return self.wait(evt.is_set, timeout=timeout)
+
+    def wait_cv(self, cv: threading.Condition, predicate, timeout=None) -> bool:
+        # never hold the cv while parked — another participant needs it to
+        # make the predicate true
+        def _check() -> bool:
+            with cv:
+                return predicate()
+
+        return self.wait(_check, timeout=timeout)
+
+    def join(self, thread: threading.Thread, timeout: float | None = None) -> bool:
+        return self.wait(lambda: not thread.is_alive(), timeout=timeout)
+
+
+#: process-wide default; ``clock or WALL`` is the injection idiom everywhere
+WALL = WallClock()
+
+
+def ensure_clock(clock: Clock | None) -> Clock:
+    return clock if clock is not None else WALL

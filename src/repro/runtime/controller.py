@@ -25,9 +25,9 @@ their own scaling logic without touching the loop.
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass
 
+from repro.runtime.clock import Clock, ensure_clock
 from repro.runtime.fault import FailureDetector, NodeState
 from repro.runtime.telemetry import TelemetryBus, TelemetrySnapshot
 
@@ -98,7 +98,10 @@ class LatencyScalePolicy:
 
     def __init__(self, cfg: ElasticityConfig):
         self.cfg = cfg
-        self._last_scale = 0.0
+        # -inf: the first breach must scale regardless of cooldown — a 0.0
+        # origin would silently absorb the first cooldown_s of a clock that
+        # starts near zero (VirtualClock does)
+        self._last_scale = float("-inf")
         self._quiet_since: float | None = None
 
     def decide(self, snap: TelemetrySnapshot, history) -> list[Action]:
@@ -171,15 +174,20 @@ class ElasticController(threading.Thread):
 
     def __init__(self, bus: TelemetryBus, cfg: ElasticityConfig | None = None,
                  *, engine=None, broker=None,
-                 detector: FailureDetector | None = None, policies=None):
+                 detector: FailureDetector | None = None, policies=None,
+                 clock: Clock | None = None):
         super().__init__(daemon=True, name="elastic-controller")
         self.bus = bus
         self.cfg = (cfg or ElasticityConfig(enabled=True)).validate()
+        # one schedule for the whole loop: default to the bus's clock so a
+        # virtual-time bus implies a virtual-time controller
+        self.clock = ensure_clock(clock if clock is not None else bus.clock)
         self.engine = engine if engine is not None else bus.engine
         self.broker = broker if broker is not None else bus.broker
         self.detector = detector or FailureDetector(
             timeout_s=self.cfg.heartbeat_timeout_s,
-            straggler_factor=self.cfg.straggler_factor)
+            straggler_factor=self.cfg.straggler_factor,
+            clock=self.clock)
         if policies is None:
             baseline = getattr(getattr(self.broker, "cfg", None),
                                "max_batch_records", 32)
@@ -245,7 +253,7 @@ class ElasticController(threading.Thread):
             # design; revive it unless this one analysis has overrun the
             # wedge threshold
             if (ex.current_key is not None
-                    and time.time() - ex.t_busy_since
+                    and self.clock.now() - ex.t_busy_since
                     < self.cfg.stuck_analysis_s):
                 node.alive = True
                 self.detector.beat(node.name)
@@ -276,7 +284,7 @@ class ElasticController(threading.Thread):
                 self.engine.replace_executor(action.value)
             elif action.kind == "reroute_endpoint" and self.broker is not None:
                 self.broker.reroute_from_endpoint(action.value)
-            self.actions_log.append((time.time(), action))
+            self.actions_log.append((self.clock.now(), action))
         except Exception:
             self.apply_errors += 1
 
@@ -297,18 +305,24 @@ class ElasticController(threading.Thread):
 
     def run(self):
         while not self._stop_evt.is_set():
-            t0 = time.time()
+            t0 = self.clock.now()
             try:
                 self.tick()
             except Exception:
                 self.apply_errors += 1
-            dt = time.time() - t0
-            self._stop_evt.wait(max(0.0, self.cfg.interval_s - dt))
+            dt = self.clock.now() - t0
+            self.clock.wait_event(self._stop_evt,
+                                  timeout=max(0.0, self.cfg.interval_s - dt))
+        self.clock.detach()    # exit the schedule without a watchdog stall
+
+    def start(self) -> None:
+        self.clock.thread_started(self)
+        super().start()
 
     def stop(self, timeout: float = 5.0) -> None:
         self._stop_evt.set()
         if self.is_alive():
-            self.join(timeout=timeout)
+            self.clock.join(self, timeout=timeout)
 
     # ---- reporting -------------------------------------------------------
     def summary(self) -> dict:

@@ -17,16 +17,19 @@ heartbeat source would be the pod controller on a real cluster).
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Callable
+
+from repro.runtime.clock import Clock, ensure_clock
 
 
 @dataclass
 class NodeState:
     name: str
     kind: str                     # producer | endpoint | executor
-    last_beat: float = field(default_factory=time.time)
+    # 0.0, not wall time: FailureDetector.register stamps this from its
+    # clock; a wall-epoch default would mix time bases under VirtualClock
+    last_beat: float = 0.0
     alive: bool = True
     marked_straggler: bool = False
     beat_intervals: list = field(default_factory=list)
@@ -34,9 +37,11 @@ class NodeState:
 
 class FailureDetector:
     def __init__(self, timeout_s: float = 1.0,
-                 straggler_factor: float = 3.0):
+                 straggler_factor: float = 3.0, *,
+                 clock: Clock | None = None):
         self.timeout_s = timeout_s
         self.straggler_factor = straggler_factor
+        self.clock = ensure_clock(clock)
         self.nodes: dict[str, NodeState] = {}
         self._lock = threading.Lock()
         self.on_failure: list[Callable[[NodeState], None]] = []
@@ -44,10 +49,11 @@ class FailureDetector:
 
     def register(self, name: str, kind: str):
         with self._lock:
-            self.nodes[name] = NodeState(name=name, kind=kind)
+            self.nodes[name] = NodeState(name=name, kind=kind,
+                                         last_beat=self.clock.now())
 
     def beat(self, name: str):
-        now = time.time()
+        now = self.clock.now()
         with self._lock:
             st = self.nodes[name]
             st.beat_intervals.append(now - st.last_beat)
@@ -57,7 +63,7 @@ class FailureDetector:
 
     def scan(self) -> list[NodeState]:
         """One detection pass; returns newly failed nodes."""
-        now = time.time()
+        now = self.clock.now()
         failed = []
         with self._lock:
             for st in self.nodes.values():

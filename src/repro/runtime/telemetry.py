@@ -23,9 +23,10 @@ from __future__ import annotations
 
 import math
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass
+
+from repro.runtime.clock import Clock, ensure_clock
 
 
 @dataclass(frozen=True)
@@ -113,10 +114,11 @@ class TelemetryBus:
     """
 
     def __init__(self, *, broker=None, endpoints=(), engine=None,
-                 history: int = 256):
+                 history: int = 256, clock: Clock | None = None):
         self.broker = broker
         self.endpoints = list(endpoints)
         self.engine = engine
+        self.clock = ensure_clock(clock)
         self.history: deque[TelemetrySnapshot] = deque(maxlen=history)
         self._subs: list = []
         self._prev: dict[int, _GroupPrev] = {}
@@ -172,7 +174,7 @@ class TelemetryBus:
         return tuple(out)
 
     def sample(self) -> TelemetrySnapshot:
-        now = time.time()
+        now = self.clock.now()
         with self._lock:
             groups = self._sample_groups(now)
         endpoints = self._sample_endpoints()

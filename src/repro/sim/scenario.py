@@ -1,0 +1,305 @@
+"""Deterministic scenario runner — chaos and load studies on virtual time.
+
+SIM-SITU-style faithful simulation of the in-situ pipeline: a
+:class:`Scenario` composes a synthetic load profile (:class:`LoadPhase`
+rates and spike schedules, per-record analysis cost) with a seeded fault
+plan (:class:`Fault`: kill/revive executors and endpoints, inject
+stragglers, silently drop transport frames at time T) and drives a real
+:class:`repro.workflow.Session` — broker, endpoints, engine, telemetry,
+controller, all of it — under a :class:`repro.runtime.clock.VirtualClock`.
+
+Because the virtual clock serializes participants and advances only on
+quiescence, a run is **deterministic**: same seed ⇒ byte-identical
+:class:`ScenarioTrace` (verify with :meth:`ScenarioTrace.digest`), and a
+"20 second" load-spike study finishes in well under a second of wall time.
+That makes the PR-3 elasticity loop, the straggler scan, and the
+steal/ordering machinery assertable in milliseconds and replayable from a
+seed — see ``tests/test_scenario_chaos.py`` and
+``benchmarks/elasticity.py`` (virtual mode).
+
+The trace records every load step, fault injection, analysis call (with the
+exact step sequence per stream — the ordering oracle), controller action,
+and engine result, each stamped with virtual time, plus a summary of the
+delivery/loss accounting across all layers.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.runtime.clock import VirtualClock
+from repro.streaming.engine import percentile_sorted
+from repro.workflow.config import WorkflowConfig
+from repro.workflow.session import Session
+
+
+@dataclass(frozen=True)
+class LoadPhase:
+    """One segment of the load profile.  ``rate_hz`` is producer steps/s;
+    each step writes one record per producer rank, so records/s =
+    ``rate_hz * n_producers``.  ``rate_hz=0`` is an idle (drain) window."""
+
+    name: str
+    duration_s: float
+    rate_hz: float
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault, applied when virtual time reaches ``t``.
+
+    kinds:
+      ``kill_executor``      hard-kill executor ``target`` (queue reassigned)
+      ``add_executor``       bring up a fresh executor
+      ``inject_straggler``   slow executor ``target`` by ``value`` s/batch
+      ``clear_straggler``    remove the slowdown from executor ``target``
+      ``fail_endpoint``      endpoint ``target`` refuses pushes (retry path)
+      ``recover_endpoint``   endpoint ``target`` accepts again
+      ``drop_frames``        endpoint ``target`` silently discards the next
+                             ``value`` accepted frames (acked, then lost —
+                             invisible to the broker's retry logic)
+    """
+
+    t: float
+    kind: str
+    target: int = 0
+    value: float = 0.0
+
+
+_FAULT_KINDS = ("kill_executor", "add_executor", "inject_straggler",
+                "clear_straggler", "fail_endpoint", "recover_endpoint",
+                "drop_frames")
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A reproducible experiment: workflow wiring + load profile + fault
+    plan + one seed controlling every source of scheduling randomness."""
+
+    workflow: WorkflowConfig
+    phases: tuple = ()
+    faults: tuple = ()
+    seed: int = 0
+    analysis_cost_s: float = 0.0       # simulated work per record
+    payload_elems: int = 64
+    field_name: str = "load"
+    flush_timeout_s: float = 120.0     # virtual seconds, costs nothing real
+
+    def validate(self) -> "Scenario":
+        self.workflow.validate()
+        for ph in self.phases:
+            if ph.duration_s <= 0 or ph.rate_hz < 0:
+                raise ValueError(f"bad phase {ph}")
+        for f in self.faults:
+            if f.kind not in _FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {f.kind!r} "
+                                 f"(expected one of {_FAULT_KINDS})")
+            if f.t < 0:
+                raise ValueError(f"fault time must be >= 0, got {f.t}")
+        return self
+
+
+@dataclass
+class ScenarioTrace:
+    """The deterministic record of one run: events sorted by
+    ``(t, kind, payload)`` so two same-seed runs serialize byte-for-byte."""
+
+    seed: int
+    events: list = field(default_factory=list)   # (t, kind, detail dict)
+    summary: dict = field(default_factory=dict)
+    phase_windows: list = field(default_factory=list)  # (name, t0, t1)
+
+    def events_of(self, kind: str) -> list:
+        return [(t, d) for t, k, d in self.events if k == kind]
+
+    def per_stream_steps(self) -> dict[str, list[int]]:
+        """Steps in ANALYSIS order per stream — the ordering oracle: any
+        deviation from sorted order means a steal/reassign broke the
+        per-stream sequence guarantee."""
+        out: dict[str, list[int]] = {}
+        for _, d in self.events_of("analyze"):
+            out.setdefault(d["stream"], []).extend(d["steps"])
+        return out
+
+    def phase_p99(self, name: str) -> float:
+        """p99 generation→analysis latency over results whose records were
+        *generated* inside the named phase's window (paper §4.3 framing)."""
+        lats = sorted(d["latency"] for _, d in self.events_of("result")
+                      for (pn, a, b) in self.phase_windows
+                      if pn == name and a <= d["t_generated"] < b)
+        return percentile_sorted(lats, 0.99)
+
+    def to_jsonl(self) -> str:
+        """Canonical serialization: one sorted-key JSON object per line.
+        Byte-identical across same-seed runs (the CI determinism gate
+        compares exactly this)."""
+        lines = [json.dumps({"seed": self.seed, "summary": self.summary,
+                             "phases": self.phase_windows}, sort_keys=True)]
+        lines += [json.dumps({"t": t, "kind": k, **d}, sort_keys=True)
+                  for t, k, d in self.events]
+        return "\n".join(lines) + "\n"
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.to_jsonl().encode()).hexdigest()
+
+
+class ScenarioRunner:
+    """Drives one :class:`Scenario` to completion under a seeded
+    ``VirtualClock`` and returns its :class:`ScenarioTrace`."""
+
+    def __init__(self, scenario: Scenario):
+        self.scenario = scenario.validate()
+
+    # ---- fault application ----------------------------------------------
+    @staticmethod
+    def _apply_fault(sess: Session, f: Fault) -> None:
+        eng = sess.engine
+        if f.kind == "kill_executor":
+            eng.kill_executor(f.target % len(eng.executors))
+        elif f.kind == "add_executor":
+            eng.add_executor()
+        elif f.kind == "inject_straggler":
+            eng.executors[f.target % len(eng.executors)].slowdown = float(f.value)
+        elif f.kind == "clear_straggler":
+            eng.executors[f.target % len(eng.executors)].slowdown = 0.0
+        elif f.kind == "fail_endpoint":
+            sess.endpoints[f.target % len(sess.endpoints)].handle.fail()
+        elif f.kind == "recover_endpoint":
+            sess.endpoints[f.target % len(sess.endpoints)].handle.recover()
+        elif f.kind == "drop_frames":
+            sess.endpoints[f.target % len(sess.endpoints)].handle \
+                .drop_next_frames(int(f.value))
+
+    # ---- the run ---------------------------------------------------------
+    def run(self) -> ScenarioTrace:
+        sc = self.scenario
+        clock = VirtualClock(seed=sc.seed)
+        clock.attach()                 # this thread drives the schedule
+        trace = ScenarioTrace(seed=sc.seed)
+        elock = threading.Lock()
+
+        def emit(kind: str, **detail) -> None:
+            with elock:
+                trace.events.append((round(clock.now(), 9), kind, detail))
+
+        def analyze(key, records):
+            # simulated per-record cost on VIRTUAL time, plus the ordering
+            # oracle: the exact step sequence each stream is analyzed in
+            if sc.analysis_cost_s:
+                clock.sleep(sc.analysis_cost_s * len(records))
+            emit("analyze", stream=key, steps=[r.step for r in records])
+            return len(records)
+
+        sess = Session(sc.workflow, analyze=analyze, clock=clock)
+        try:
+            handle = sess.open_field(sc.field_name,
+                                     shape=(sc.payload_elems,))
+            n_ranks = sc.workflow.n_producers
+            rng = np.random.RandomState(sc.seed)
+            payloads = [rng.randn(sc.payload_elems).astype(np.float32)
+                        for _ in range(n_ranks)]
+
+            # fault plan runs on its own participant thread so injections
+            # land at their exact virtual instants, independent of the
+            # load loop's cadence
+            faults = sorted(sc.faults, key=lambda f: (f.t, f.kind, f.target))
+
+            def inject():
+                for f in faults:
+                    # sleep_until: the exact float deadline, so a fault at
+                    # f.t ties (and tie-breaks deterministically) with any
+                    # other waiter targeting the same instant
+                    clock.sleep_until(f.t)
+                    try:
+                        self._apply_fault(sess, f)
+                        emit("fault", fault=f.kind, target=f.target,
+                             value=f.value, ok=True)
+                    except Exception as e:   # a mistargeted fault is a trace
+                        emit("fault", fault=f.kind, target=f.target,
+                             value=f.value, ok=False,
+                             error=type(e).__name__)
+                clock.detach()   # leave the schedule with no watchdog stall
+
+            injector = threading.Thread(target=inject, daemon=True,
+                                        name="fault-injector")
+            clock.thread_started(injector)
+            injector.start()
+
+            step = 0
+            for ph in sc.phases:
+                t0 = round(clock.now(), 9)
+                emit("phase", name=ph.name, rate_hz=ph.rate_hz,
+                     duration_s=ph.duration_s)
+                n_steps = int(round(ph.duration_s * ph.rate_hz))
+                if n_steps == 0:
+                    clock.sleep(ph.duration_s)
+                else:
+                    period = ph.duration_s / n_steps
+                    for _ in range(n_steps):
+                        accepted = handle.write_batch(
+                            step, payloads, ranks=list(range(n_ranks)))
+                        emit("write", step=step, accepted=accepted)
+                        step += 1
+                        clock.sleep(period)
+                trace.phase_windows.append((ph.name, t0,
+                                            round(clock.now(), 9)))
+
+            clock.join(injector)       # let trailing faults land
+            sess.flush(timeout=sc.flush_timeout_s)
+        finally:
+            sess.close()
+
+        # post-run, single-threaded: merge the controller's action log and
+        # the engine's results into the trace at their virtual timestamps
+        if sess.controller is not None:
+            for t, a in sess.controller.actions_log:
+                trace.events.append((round(t, 9), "action",
+                                     {"kind": a.kind, "value": a.value,
+                                      "group": a.group, "reason": a.reason}))
+        for r in sess.results():
+            trace.events.append((round(r.t_analyzed, 9), "result",
+                                 {"stream": r.stream_key,
+                                  "executor": r.executor,
+                                  "n_records": r.n_records,
+                                  "t_generated": round(r.t_generated_min, 9),
+                                  "latency": round(r.latency, 9)}))
+        trace.events.sort(key=lambda e: (e[0], e[1],
+                                         json.dumps(e[2], sort_keys=True)))
+
+        st = sess.stats
+        eps = [e.handle.telemetry() for e in sess.endpoints]
+        peak = max((s.alive_executors for s in sess.telemetry.history),
+                   default=0) if sess.telemetry is not None else 0
+        m = sess.engine.metrics() if sess.engine is not None else {}
+        trace.summary = {
+            "written": st.written, "sent": st.sent,
+            "dropped_by_policy": st.dropped,
+            "send_errors": st.send_errors, "rerouted": st.rerouted,
+            "frames_sent": st.frames_sent,
+            "endpoint_records_in": sum(e["records_in"] for e in eps),
+            "frames_dropped_injected": sum(e["frames_dropped"] for e in eps),
+            "records_dropped_injected": sum(e["records_dropped"] for e in eps),
+            "analyzed": sum(d["n_records"]
+                            for _, d in trace.events_of("result")),
+            "executor_seconds": round(
+                sess.engine.executor_seconds(), 9) if sess.engine else 0.0,
+            "executors_peak": peak,
+            "order_timeouts": m.get("order_timeouts", 0),
+            "latency_p99": round(percentile_sorted(
+                sorted(d["latency"]
+                       for _, d in trace.events_of("result")), 0.99), 9),
+            "virtual_duration_s": round(clock.now(), 9),
+            "clock_wakeups": clock.wakeups,
+        }
+        if sess.controller is not None:
+            trace.summary["controller_actions"] = \
+                sess.controller.summary()["actions"]
+        return trace
+
+
+def run_scenario(scenario: Scenario) -> ScenarioTrace:
+    return ScenarioRunner(scenario).run()

@@ -8,12 +8,12 @@ paper's "synthetic data generator processes in HPC" stressing the
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.broker import Broker
+from repro.runtime.clock import Clock, ensure_clock
 from repro.workflow.session import FieldHandle, Session
 
 
@@ -30,10 +30,15 @@ class SyntheticGenerator:
     """Runs n_producers threads; payloads follow a low-rank linear dynamical
     system (so downstream DMD finds real eigenstructure, not noise)."""
 
-    def __init__(self, cfg: GeneratorConfig, session: Session | Broker):
+    def __init__(self, cfg: GeneratorConfig, session: Session | Broker, *,
+                 clock: Clock | None = None):
         self.cfg = cfg
         broker = session.broker if isinstance(session, Session) else session
         self.broker = broker
+        # inherit the session/broker clock so the generator's pacing runs on
+        # the same (possibly virtual) schedule as the pipeline it feeds
+        self.clock = ensure_clock(clock if clock is not None
+                                  else getattr(broker, "clock", None))
         self._field = FieldHandle(broker, "synthetic",
                                   shape=(cfg.field_elems,))
         rng = np.random.RandomState(0)
@@ -59,23 +64,25 @@ class SyntheticGenerator:
     def _produce(self, rank: int):
         period = 1.0 / self.cfg.rate_hz
         for step in range(self.cfg.n_steps):
-            t0 = time.time()
+            t0 = self.clock.now()
             self._field.write(step, self._payload(rank, step), rank=rank)
             with self._lock:
                 self.produced += 1
-            dt = time.time() - t0
+            dt = self.clock.now() - t0
             if dt < period:
-                time.sleep(period - dt)
+                self.clock.sleep(period - dt)
+        self.clock.detach()    # exit the schedule without a watchdog stall
 
     def run(self, wait: bool = True):
         self._threads = [
             threading.Thread(target=self._produce, args=(r,), daemon=True)
             for r in range(self.cfg.n_producers)
         ]
-        t0 = time.time()
+        t0 = self.clock.now()
         for t in self._threads:
+            self.clock.thread_started(t)
             t.start()
         if wait:
             for t in self._threads:
-                t.join()
-        return time.time() - t0
+                self.clock.join(t)
+        return self.clock.now() - t0

@@ -9,26 +9,34 @@ injection (for failover tests), and drain APIs for the micro-batcher.
 from __future__ import annotations
 
 import threading
-import time
 from collections import defaultdict, deque
 
 from repro.core.records import StreamRecord, decode_any
+from repro.runtime.clock import Clock, ensure_clock
 
 
 class Endpoint:
     def __init__(self, name: str = "ep0", *, inbound_bw: float | None = None,
-                 port: int = 6379):
+                 port: int = 6379, clock: Clock | None = None):
         self.name = name
         self.port = port
         self.inbound_bw = inbound_bw          # bytes/s, None = unmetered
+        self.clock = ensure_clock(clock)
         self._streams: dict[str, deque] = defaultdict(deque)
         self._lock = threading.Lock()
         self._healthy = True
         self.bytes_in = 0
         self.records_in = 0
         self.frames_in = 0            # wire frames (batched: frames < records)
+        # fault injection: silently discard the next N accepted frames (the
+        # scenario runner's lossy-transport model); counters make the loss
+        # auditable so chaos tests can assert "no loss beyond what was
+        # injected + what the drop policy allows"
+        self._drop_frames = 0
+        self.frames_dropped = 0
+        self.records_dropped = 0
         self._bw_debt = 0.0
-        self._bw_t = time.time()
+        self._bw_t = self.clock.now()
         # rolling ingest window for the telemetry bus: (t, n_records) per
         # push, trimmed to the rate window on read
         self._ingest_win: deque = deque(maxlen=4096)
@@ -43,26 +51,38 @@ class Endpoint:
     def recover(self):
         self._healthy = True
 
+    def drop_next_frames(self, n: int) -> None:
+        """Fault injection: the next ``n`` accepted frames vanish after the
+        ack — the sender believes they were delivered (this is silent loss,
+        unlike ``fail()`` which the broker's retry path observes)."""
+        with self._lock:
+            self._drop_frames += int(n)
+
     def push(self, group_id: int, blob: bytes) -> None:
         if not self._healthy:
             raise ConnectionError(f"endpoint {self.name} down")
         if self.inbound_bw:
             # token-bucket style pacing: model the shared inbound link
-            now = time.time()
+            now = self.clock.now()
             self._bw_debt = max(0.0, self._bw_debt - (now - self._bw_t) * self.inbound_bw)
             self._bw_t = now
             self._bw_debt += len(blob)
             lag = self._bw_debt / self.inbound_bw
             if lag > 1e-4:
-                time.sleep(min(lag, 0.05))
+                self.clock.sleep(min(lag, 0.05))
         recs = decode_any(blob)       # single-record or aggregated frame
         with self._lock:
+            if self._drop_frames > 0:
+                self._drop_frames -= 1
+                self.frames_dropped += 1
+                self.records_dropped += len(recs)
+                return
             for rec in recs:
                 self._streams[rec.key()].append(rec)
             self.bytes_in += len(blob)
             self.records_in += len(recs)
             self.frames_in += 1
-            self._ingest_win.append((time.time(), len(recs)))
+            self._ingest_win.append((self.clock.now(), len(recs)))
 
     # ---- consumer side (micro-batcher) -----------------------------------
     def stream_keys(self) -> list[str]:
@@ -84,7 +104,7 @@ class Endpoint:
     # ---- telemetry -------------------------------------------------------
     def ingest_rate(self, window_s: float = 2.0) -> float:
         """Records/s over the trailing window (telemetry-bus feed)."""
-        now = time.time()
+        now = self.clock.now()
         with self._lock:
             while self._ingest_win and now - self._ingest_win[0][0] > window_s:
                 self._ingest_win.popleft()
@@ -95,20 +115,31 @@ class Endpoint:
         return {"name": self.name, "healthy": self._healthy,
                 "pending": self.pending(), "records_in": self.records_in,
                 "bytes_in": self.bytes_in, "frames_in": self.frames_in,
+                "frames_dropped": self.frames_dropped,
+                "records_dropped": self.records_dropped,
                 "ingest_rate_rps": self.ingest_rate()}
 
 
 def make_endpoints(n: int, *, inbound_bw: float | None = None,
-                   base_port: int = 6379, transport: str = "inprocess") -> list:
+                   base_port: int = 6379, transport: str = "inprocess",
+                   clock: Clock | None = None) -> list:
     """The paper's `struct CloudEndpoint endpoints[NUM_GROUPS]`.
 
     ``transport="inprocess"`` binds each CloudEndpoint straight to its
     Endpoint handle; ``"loopback"`` routes frames through a real localhost
-    TCP socket (same semantics, proves the Transport seam)."""
+    TCP socket (same semantics, proves the Transport seam).  A virtual
+    ``clock`` requires the in-process transport — loopback's socket I/O
+    blocks outside any clock's schedule."""
     from repro.core.transport import CloudEndpoint, LoopbackTransport
+    clock = ensure_clock(clock)
+    if clock.virtual and transport != "inprocess":
+        raise ValueError("VirtualClock requires transport='inprocess' "
+                         f"(got {transport!r}): socket I/O cannot be "
+                         "scheduled on simulated time")
     eps = []
     for i in range(n):
-        h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port)
+        h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port,
+                     clock=clock)
         if transport == "inprocess":
             eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
                                      service_port=base_port, handle=h))

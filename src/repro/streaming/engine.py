@@ -27,12 +27,12 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 from repro.core.records import StreamRecord
+from repro.runtime.clock import Clock, ensure_clock
 
 # A waiting executor proceeds out-of-order after this long rather than stall
 # the pipeline if its stream's ticket chain broke (a dropped partition with
@@ -59,7 +59,10 @@ def percentile_sorted(sorted_vals: list, p: float) -> float:
 class MicroBatch:
     stream_key: str
     records: list[StreamRecord]
-    t_created: float = field(default_factory=time.time)
+    # 0.0, not wall time: the engine stamps this explicitly from its clock
+    # at dispatch (trigger_once); a wall-epoch default would leak ~1.7e9s
+    # timestamps into virtual-time runs from directly-constructed batches
+    t_created: float = 0.0
     seq: int = 0                 # per-stream dispatch sequence (ordering)
 
     @property
@@ -98,10 +101,10 @@ class _Executor(threading.Thread):
 
     def run(self):
         eng = self.engine
+        clock = eng.clock
         while self.alive:
-            try:
-                mb = self.q.get(timeout=0.02)
-            except queue.Empty:
+            mb = clock.queue_get(self.q, timeout=0.02)
+            if mb is None:
                 mb = eng._steal(self.idx)
                 if mb is None:
                     continue
@@ -112,9 +115,9 @@ class _Executor(threading.Thread):
             self.waiting = True
             eng._await_turn(mb)        # per-stream order even across steals
             self.waiting = False
-            self.t_busy_since = time.time()
+            self.t_busy_since = clock.now()
             if self.slowdown:
-                time.sleep(self.slowdown)
+                clock.sleep(self.slowdown)
             try:
                 value = eng.analyze_fn(mb.stream_key, mb.records)
             except Exception as e:  # analysis failure != engine failure
@@ -123,7 +126,7 @@ class _Executor(threading.Thread):
             eng._collect(Result(stream_key=mb.stream_key, value=value,
                                 n_records=len(mb.records),
                                 t_generated_min=tmin,
-                                t_analyzed=time.time(), executor=self.idx))
+                                t_analyzed=clock.now(), executor=self.idx))
             self.processed += 1
             self.current_key = None
             eng._release_turn(mb)
@@ -131,6 +134,7 @@ class _Executor(threading.Thread):
         # _reassign drained this queue (e.g. this thread was mid-_steal when
         # it was replaced and put the stolen run into its own dead queue)
         eng._reassign(self)
+        clock.detach()     # exit the schedule without a watchdog stall
 
     def kill(self):
         """Simulated hard failure: drop the thread, orphan its queue."""
@@ -143,18 +147,24 @@ _POISON = MicroBatch(stream_key="__poison__", records=[])
 class StreamEngine:
     def __init__(self, endpoints: list, analyze_fn: Callable,
                  n_executors: int, *, trigger_interval: float = 3.0,
-                 min_batch: int = 2):
+                 min_batch: int = 2, clock: Clock | None = None):
         """endpoints: Endpoint handles (drain API).  analyze_fn(key, records).
 
         ``min_batch``: a stream's drained records are held until at least
         this many accumulate (so the analyze path sees real micro-batches —
         one device call per batch, not per record) or until a trigger
         interval has passed since the first held record, whichever first;
-        ``drain_and_stop`` force-flushes the remainder."""
+        ``drain_and_stop`` force-flushes the remainder.
+
+        ``clock``: every timestamp, sleep, and blocking wait goes through it
+        (default wall time); a ``VirtualClock`` makes the whole engine —
+        driver, executors, ordering waits, latency accounting — run on
+        deterministic simulated time."""
         self.endpoints = endpoints
         self.analyze_fn = analyze_fn
         self.trigger_interval = trigger_interval
         self.min_batch = min_batch
+        self.clock = ensure_clock(clock)
         self.results: list[Result] = []
         self._recent_lat: deque = deque(maxlen=512)  # rolling latency window
         self._rlock = threading.Lock()
@@ -174,16 +184,17 @@ class StreamEngine:
         self.rebalances = 0
         # executor-seconds integral (elasticity cost accounting)
         self._exec_secs = 0.0
-        self._exec_t = time.time()
+        self._exec_t = self.clock.now()
         for _ in range(n_executors):
             self._add_executor_locked()
         self._driver = threading.Thread(target=self._drive, daemon=True,
                                         name="stream-driver")
+        self.clock.thread_started(self._driver)
         self._driver.start()
 
     @classmethod
     def from_config(cls, cfg, endpoints: list, analyze_fn: Callable, *,
-                    plan=None) -> "StreamEngine":
+                    plan=None, clock: Clock | None = None) -> "StreamEngine":
         """Build from a ``repro.workflow.WorkflowConfig`` (duck-typed here to
         keep streaming← workflow import-free).  ``n_executors=None`` falls
         back to the plan's groups × executors_per_group — the paper's
@@ -194,7 +205,7 @@ class StreamEngine:
                 else max(1, len(endpoints)) * cfg.executors_per_group
         return cls(endpoints, analyze_fn, n_executors=n_exec,
                    trigger_interval=cfg.trigger_interval,
-                   min_batch=cfg.min_batch)
+                   min_batch=cfg.min_batch, clock=clock)
 
     def attach_dag(self, dag: Callable) -> None:
         """Session-driven rewiring: route every micro-batch through an
@@ -209,14 +220,13 @@ class StreamEngine:
         analyzed.  Sequence tickets are issued at dispatch, so order holds
         across steals, reassignment, and rebalance.  Returns False on the
         (pathological) broken-chain timeout."""
-        deadline = time.time() + _ORDER_WAIT_S
-        with self._done_cv:
-            while self._done_seq.get(mb.stream_key, 0) < mb.seq:
-                if time.time() >= deadline:
-                    self.order_timeouts += 1
-                    return False
-                self._done_cv.wait(0.05)
-        return True
+        if self.clock.wait_cv(
+                self._done_cv,
+                lambda: self._done_seq.get(mb.stream_key, 0) >= mb.seq,
+                timeout=_ORDER_WAIT_S):
+            return True
+        self.order_timeouts += 1
+        return False
 
     def _release_turn(self, mb: MicroBatch) -> None:
         with self._done_cv:
@@ -227,7 +237,7 @@ class StreamEngine:
     # ---- executor lifecycle (elasticity + failure) ----------------------
     def _account_locked(self, now: float | None = None) -> None:
         """Advance the executor-seconds integral (call under _elock)."""
-        now = time.time() if now is None else now
+        now = self.clock.now() if now is None else now
         alive = sum(1 for e in self.executors if e.alive)
         self._exec_secs += alive * (now - self._exec_t)
         self._exec_t = now
@@ -243,6 +253,7 @@ class StreamEngine:
         self._account_locked()
         ex = _Executor(len(self.executors), self)
         self.executors.append(ex)
+        self.clock.thread_started(ex)
         ex.start()
         return ex
 
@@ -423,17 +434,19 @@ class StreamEngine:
     # ---- driver: trigger-interval micro-batching -------------------------
     def _drive(self):
         while not self._stop.is_set():
-            t0 = time.time()
+            t0 = self.clock.now()
             self.trigger_once()
-            dt = time.time() - t0
-            self._stop.wait(max(0.0, self.trigger_interval - dt))
+            dt = self.clock.now() - t0
+            self.clock.wait_event(self._stop,
+                                  timeout=max(0.0, self.trigger_interval - dt))
+        self.clock.detach()    # exit the schedule without a watchdog stall
 
     def trigger_once(self, force: bool = False) -> int:
         """Drain endpoints into per-stream hold buffers and dispatch every
         stream that is ripe: >= min_batch records held, the first held
         record is older than one trigger interval, or ``force``."""
         n = 0
-        now = time.time()
+        now = self.clock.now()
         with self._tlock:
             for ep in self.endpoints:
                 for key in ep.stream_keys():
@@ -452,7 +465,8 @@ class StreamEngine:
                     continue
                 seq = self._next_seq.get(key, 0)
                 self._next_seq[key] = seq + 1
-                ex.q.put(MicroBatch(stream_key=key, records=held, seq=seq))
+                ex.q.put(MicroBatch(stream_key=key, records=held, seq=seq,
+                                    t_created=now))
                 del self._hold[key], self._hold_t[key]
                 n += 1
         return n
@@ -507,7 +521,7 @@ class StreamEngine:
         with self._tlock:
             held = sum(len(v) for v in self._hold.values())
             n_streams = len(self._next_seq)
-        cut = time.time() - _LATENCY_WINDOW_S
+        cut = self.clock.now() - _LATENCY_WINDOW_S
         with self._rlock:
             lats = sorted(lat for t, lat in self._recent_lat if t >= cut)
             n_results = len(self.results)
@@ -526,8 +540,8 @@ class StreamEngine:
                 "rebalances": self.rebalances}
 
     def drain_and_stop(self, timeout: float = 30.0):
-        deadline = time.time() + timeout
-        while time.time() < deadline:
+        deadline = self.clock.now() + timeout
+        while self.clock.now() < deadline:
             # partitions stranded on dead executors (dispatch/steal raced a
             # kill) go back to survivors before we test for emptiness
             for e in self.executors:
@@ -540,7 +554,7 @@ class StreamEngine:
                     and (stranded == 0 or not self._alive()):
                 break
             self.trigger_once(force=True)
-            time.sleep(0.05)
+            self.clock.sleep(0.05)
         self._stop.set()
         with self._elock:
             self._account_locked()
@@ -549,4 +563,4 @@ class StreamEngine:
             e.alive = False
             e.q.put(_POISON)
         for e in survivors:          # results must be collected before return
-            e.join(timeout=5.0)
+            self.clock.join(e, timeout=5.0)

@@ -20,6 +20,7 @@ from repro.runtime.controller import ElasticityConfig
 _BACKPRESSURE = ("block", "drop_oldest", "sample")
 _COMPRESS = ("none", "zstd", "int8", "int8+zstd")
 _TRANSPORT = ("inprocess", "loopback")
+_CLOCK = ("wall", "virtual")
 
 
 @dataclass(frozen=True)
@@ -50,6 +51,15 @@ class WorkflowConfig:
     # ``elasticity.enabled=True`` makes the Session own a TelemetryBus, a
     # FailureDetector, and an ElasticController for the engine's lifetime.
     elasticity: ElasticityConfig = ElasticityConfig()
+    # -- time source -------------------------------------------------------
+    # ``clock="virtual"`` runs the whole Session — broker senders, engine
+    # driver/executors, telemetry, controller, failure detector — on
+    # deterministic simulated time (repro.runtime.clock.VirtualClock seeded
+    # with ``clock_seed``): sleeps cost nothing real and same-seed runs
+    # replay identically.  Requires transport="inprocess".  The default
+    # "wall" keeps production behavior byte-identical to the pre-clock code.
+    clock: str = "wall"                # wall | virtual
+    clock_seed: int = 0                # VirtualClock wakeup tie-break seed
 
     # ---- validation -----------------------------------------------------
     def validate(self) -> "WorkflowConfig":
@@ -88,6 +98,12 @@ class WorkflowConfig:
             raise ValueError("min_batch must be >= 1")
         if self.n_executors is not None and self.n_executors < 1:
             raise ValueError("n_executors must be >= 1")
+        if self.clock not in _CLOCK:
+            raise ValueError(f"clock must be one of {_CLOCK}, "
+                             f"got {self.clock!r}")
+        if self.clock == "virtual" and self.transport != "inprocess":
+            raise ValueError("clock='virtual' requires transport='inprocess' "
+                             "(socket I/O cannot run on simulated time)")
         self.elasticity.validate()
         return self
 
@@ -116,6 +132,12 @@ class WorkflowConfig:
     def endpoint_count(self) -> int:
         return self.n_endpoints if self.n_endpoints is not None \
             else self.group_plan().n_groups
+
+    def make_clock(self):
+        """Instantiate the configured time source (one per Session)."""
+        from repro.runtime.clock import VirtualClock, WallClock
+        return WallClock() if self.clock == "wall" \
+            else VirtualClock(seed=self.clock_seed)
 
     # ---- (de)serialization ---------------------------------------------
     def to_dict(self) -> dict:

@@ -21,10 +21,13 @@ field as one aggregated queue item per group ⇒ ≤ one wire frame per
 """
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.core.broker import Broker, BrokerStats
 from repro.core.records import FieldSchema
+from repro.runtime.clock import Clock, ensure_clock
 from repro.runtime.controller import ElasticController
 from repro.runtime.fault import FailureDetector
 from repro.runtime.telemetry import TelemetryBus
@@ -105,9 +108,24 @@ class Session:
     """Context manager owning broker → endpoint → engine → DAG wiring."""
 
     def __init__(self, config: WorkflowConfig | None = None, *,
-                 endpoints: list | None = None, analyze=None, pipeline=None):
+                 endpoints: list | None = None, analyze=None, pipeline=None,
+                 clock: Clock | None = None):
         self.config = (config or WorkflowConfig()).validate()
         self.plan = self.config.group_plan()
+        # one time source for every layer: an explicit ``clock`` wins,
+        # otherwise the config's clock knob ("wall" | "virtual") decides
+        self.clock = ensure_clock(clock) if clock is not None \
+            else self.config.make_clock()
+        self._attached_thread = None
+        if self.clock.virtual:
+            # the building thread is the schedule's driver: register it
+            # before any component thread starts, so virtual time cannot
+            # advance while construction is still in flight.  Remembered so
+            # close() detaches THIS thread even when called from another —
+            # detaching the closer would strand the builder in the
+            # runnable set and freeze the schedule.
+            self._attached_thread = threading.current_thread()
+            self.clock.attach(self._attached_thread)
         if endpoints is not None:
             self.endpoints = list(endpoints)
             self._owns_endpoints = False
@@ -117,10 +135,11 @@ class Session:
                 self.config.endpoint_count,
                 inbound_bw=self.config.inbound_bw,
                 base_port=self.config.base_port,
-                transport=self.config.transport)
+                transport=self.config.transport,
+                clock=self.clock)
             self._owns_endpoints = True
         self.broker = Broker(self.plan, self.endpoints,
-                             self.config.broker_config())
+                             self.config.broker_config(), clock=self.clock)
         self.engine: StreamEngine | None = None
         self.dag: AnalysisDAG | None = None
         # control plane (built lazily with the engine when elasticity is on)
@@ -147,7 +166,8 @@ class Session:
         on first attach; swapped in place afterwards)."""
         if self.engine is None:
             self.engine = StreamEngine.from_config(
-                self.config, self._handles(), fn, plan=self.plan)
+                self.config, self._handles(), fn, plan=self.plan,
+                clock=self.clock)
             self._start_control_plane()
         else:
             self.engine.analyze_fn = fn
@@ -159,7 +179,8 @@ class Session:
         dag = pipeline.compile() if isinstance(pipeline, Pipeline) else pipeline
         if self.engine is None:
             self.engine = StreamEngine.from_config(
-                self.config, self._handles(), dag, plan=self.plan)
+                self.config, self._handles(), dag, plan=self.plan,
+                clock=self.clock)
             self._start_control_plane()
         else:
             self.engine.attach_dag(dag)
@@ -177,13 +198,13 @@ class Session:
             return
         self.telemetry = TelemetryBus(broker=self.broker,
                                       endpoints=self._handles(),
-                                      engine=self.engine)
+                                      engine=self.engine, clock=self.clock)
         self.detector = FailureDetector(
             timeout_s=el.heartbeat_timeout_s,
-            straggler_factor=el.straggler_factor)
+            straggler_factor=el.straggler_factor, clock=self.clock)
         self.controller = ElasticController(
             self.telemetry, el, engine=self.engine, broker=self.broker,
-            detector=self.detector)
+            detector=self.detector, clock=self.clock)
         self.controller.start()
 
     # ---- producer-side API ----------------------------------------------
@@ -234,6 +255,11 @@ class Session:
                 close = getattr(ep, "close", None)
                 if close is not None:
                     close()
+        # leave the virtual schedule: every component thread is joined by
+        # now.  Detach the thread __init__ attached (not necessarily the
+        # closer) so a cross-thread close can't strand the builder as a
+        # permanently-runnable participant.
+        self.clock.detach(self._attached_thread)
         return stats
 
     def __enter__(self) -> "Session":

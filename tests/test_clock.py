@@ -1,0 +1,216 @@
+"""VirtualClock scheduling invariants and WallClock helper semantics.
+
+Deterministic (non-hypothesis) coverage of the clock seam; the
+hypothesis-driven property versions live in ``tests/test_clock_prop.py``
+and deepen the same invariants when hypothesis is installed.
+"""
+import queue
+import threading
+import time
+
+import pytest
+
+from repro.runtime.clock import VirtualClock, WallClock, ensure_clock
+
+
+# --------------------------------------------------------------- VirtualClock
+def test_virtual_now_monotonic_and_sleep_advances():
+    clk = VirtualClock()
+    assert clk.now() == 0.0
+    clk.sleep(1.5)            # sole participant: time jumps, no real wait
+    assert clk.now() == pytest.approx(1.5)
+    clk.sleep(0.25)
+    assert clk.now() == pytest.approx(1.75)
+    clk.sleep(0.0)            # zero sleep may not move time backwards
+    assert clk.now() == pytest.approx(1.75)
+
+
+def test_virtual_sleep_costs_no_wall_time():
+    clk = VirtualClock()
+    t0 = time.time()
+    clk.sleep(3600.0)         # "an hour"
+    assert time.time() - t0 < 1.0
+    assert clk.now() == pytest.approx(3600.0)
+
+
+def test_virtual_fifo_wakeup_among_equal_deadlines():
+    """Unseeded clock: sleepers sharing the EXACT same deadline wake in park
+    order.  Park order is forced by a first round of distinct sleeps (strict
+    serialization: thread i parks its second sleep while i+1.. are still
+    parked), then every thread targets the identical absolute instant."""
+    clk = VirtualClock()
+    clk.attach()
+    order, lock = [], threading.Lock()
+
+    def sleeper(i):
+        clk.sleep(0.1 * i)      # serialized wakeups fix the park order...
+        clk.sleep_until(10.0)   # ...then all tie on the same exact deadline
+        with lock:
+            order.append(i)
+
+    threads = [threading.Thread(target=sleeper, args=(i,), daemon=True)
+               for i in range(5)]
+    for t in threads:
+        clk.thread_started(t)
+        t.start()
+    clk.detach()              # driver leaves: the sleepers own the schedule
+    for t in threads:
+        assert clk.join(t, timeout=None)
+    assert order == [0, 1, 2, 3, 4]
+    assert clk.now() == pytest.approx(10.0)
+
+
+def test_virtual_seeded_tiebreak_is_deterministic_per_seed():
+    """With deterministic park order (serialized, as in a scenario run), a
+    seeded clock resolves equal-deadline ties by a reproducible shuffle:
+    same seed ⇒ same wake order; the tie-break is what lets chaos tests
+    explore different interleavings by changing only the seed."""
+    def wake_order(seed):
+        clk = VirtualClock(seed=seed)
+        clk.attach()
+        order, lock = [], threading.Lock()
+
+        def sleeper(i):
+            clk.sleep(0.1 * i)     # deterministic park order (serialized)
+            clk.sleep_until(10.0)  # identical deadlines: seeded tie-break
+            with lock:
+                order.append(i)
+
+        threads = [threading.Thread(target=sleeper, args=(i,), daemon=True)
+                   for i in range(6)]
+        for t in threads:
+            clk.thread_started(t)
+            t.start()
+        clk.detach()
+        for t in threads:
+            clk.join(t, timeout=None)
+        return order
+
+    a, b = wake_order(7), wake_order(7)
+    assert a == b, "same seed must give the same interleaving"
+    assert sorted(a) == list(range(6))     # no lost wakeups
+    assert wake_order(3) != wake_order(11) or wake_order(5) != a, \
+        "different seeds should explore different interleavings"
+
+
+def test_virtual_no_lost_wakeups_many_concurrent_sleepers():
+    clk = VirtualClock()
+    clk.attach()
+    done = []
+    lock = threading.Lock()
+
+    def sleeper(i):
+        for k in range(5):
+            clk.sleep(0.01 + (i % 3) * 0.007)
+        with lock:
+            done.append(i)
+
+    threads = [threading.Thread(target=sleeper, args=(i,), daemon=True)
+               for i in range(8)]
+    for t in threads:
+        clk.thread_started(t)
+        t.start()
+    clk.detach()
+    for t in threads:
+        assert clk.join(t, timeout=None)
+    assert sorted(done) == list(range(8))
+
+
+def test_virtual_wait_condition_and_timeout():
+    clk = VirtualClock()
+    # unmet condition: returns False after exactly the virtual timeout
+    t0 = clk.now()
+    assert clk.wait(lambda: False, timeout=2.0) is False
+    assert clk.now() - t0 == pytest.approx(2.0)
+    # condition already true: no time passes
+    t1 = clk.now()
+    assert clk.wait(lambda: True, timeout=5.0) is True
+    assert clk.now() == pytest.approx(t1)
+
+
+def test_virtual_wait_sees_condition_flipped_by_peer():
+    clk = VirtualClock()
+    clk.attach()
+    flag = threading.Event()
+
+    def flipper():
+        clk.sleep(0.5)
+        flag.set()
+
+    t = threading.Thread(target=flipper, daemon=True)
+    clk.thread_started(t)
+    t.start()
+    assert clk.wait_event(flag, timeout=10.0) is True
+    assert clk.now() == pytest.approx(0.5, abs=0.05)   # not 10.0
+    clk.join(t)
+    clk.detach()
+
+
+def test_virtual_queue_get_put_roundtrip():
+    clk = VirtualClock()
+    clk.attach()
+    q = queue.Queue(maxsize=1)
+    got = []
+
+    def consumer():
+        got.append(clk.queue_get(q, timeout=5.0))
+        got.append(clk.queue_get(q, timeout=5.0))
+
+    t = threading.Thread(target=consumer, daemon=True)
+    clk.thread_started(t)
+    t.start()
+    assert clk.queue_put(q, "a")
+    assert clk.queue_put(q, "b")    # capacity 1: parks until consumer drains
+    clk.join(t)
+    clk.detach()
+    assert got == ["a", "b"]
+    # empty queue: timeout returns None at the virtual deadline
+    t0 = clk.now()
+    assert clk.queue_get(q, timeout=1.0) is None
+    assert clk.now() - t0 == pytest.approx(1.0)
+
+
+def test_virtual_dead_thread_is_pruned_not_deadlocked():
+    """A participant that exits without detaching must not freeze the
+    schedule: the watchdog prunes it and the remaining sleeper wakes."""
+    clk = VirtualClock()
+    clk.attach()
+
+    def dies_without_detach():
+        clk.sleep(0.1)
+        # exits while still registered as runnable
+
+    t = threading.Thread(target=dies_without_detach, daemon=True)
+    clk.thread_started(t)
+    t.start()
+    t0 = time.time()
+    clk.sleep(5.0)                  # virtual; must complete despite the death
+    assert time.time() - t0 < 2.0   # bounded by the 50ms watchdog, not 5s
+    assert clk.now() == pytest.approx(5.0)
+    clk.detach()
+
+
+# ------------------------------------------------------------------ WallClock
+def test_wall_clock_wait_polls_condition():
+    clk = WallClock()
+    hits = []
+    assert clk.wait(lambda: hits.append(1) or len(hits) >= 3,
+                    timeout=5.0, poll=0.001) is True
+    assert len(hits) == 3
+    t0 = time.time()
+    assert clk.wait(lambda: False, timeout=0.05, poll=0.01) is False
+    assert time.time() - t0 < 1.0
+
+
+def test_wall_clock_queue_helpers_native_blocking():
+    clk = WallClock()
+    q = queue.Queue()
+    assert clk.queue_get(q, timeout=0.01) is None
+    assert clk.queue_put(q, 42)
+    assert clk.queue_get(q, timeout=0.5) == 42
+
+
+def test_ensure_clock_defaults_to_wall():
+    assert ensure_clock(None).virtual is False
+    v = VirtualClock()
+    assert ensure_clock(v) is v and v.virtual is True

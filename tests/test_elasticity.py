@@ -1,15 +1,20 @@
 """The closed elasticity loop: telemetry bus snapshots, race-free per-sender
 broker stats, ElasticController policies (scale up/down, batch-cap
 adaptation), Session-owned control-plane lifecycle, and detector-driven
-endpoint failover."""
+endpoint failover.
+
+Timing-sensitive tests run on a ``VirtualClock``: waits are condition polls
+on simulated time (no real sleeping, no flake); where a real wall-clock
+pipeline is the point, waits go through ``Clock.wait`` condition polling
+instead of hand-rolled deadline/sleep loops."""
 import threading
-import time
 
 import numpy as np
 import pytest
 
 from repro.core.broker import Broker, BrokerConfig
 from repro.core.grouping import GroupPlan
+from repro.runtime.clock import VirtualClock, ensure_clock
 from repro.runtime.controller import (Action, BatchCapPolicy,
                                       ElasticController, ElasticityConfig,
                                       LatencyScalePolicy)
@@ -80,27 +85,31 @@ def test_broker_set_batch_cap_and_reroute():
 
 
 # ------------------------------------------------------------- telemetry bus
-def _slow_analyzer(cost=0.005):
+def _slow_analyzer(cost=0.005, clock=None):
+    clk = ensure_clock(clock)
+
     def analyze(key, recs):
-        time.sleep(cost * len(recs))
+        if cost:
+            clk.sleep(cost * len(recs))
         return len(recs)
     return analyze
 
 
 def test_telemetry_snapshot_covers_all_layers():
+    clk = VirtualClock()
+    clk.attach()
     cfg = WorkflowConfig(n_producers=2, n_groups=1, executors_per_group=2,
                          compress="none", trigger_interval=0.05, min_batch=1)
-    with Session(cfg, analyze=_slow_analyzer(0.0)) as sess:
+    with Session(cfg, analyze=_slow_analyzer(0.0), clock=clk) as sess:
         h = sess.open_field("f", shape=(8,))
         bus = TelemetryBus(broker=sess.broker,
                            endpoints=[e.handle for e in sess.endpoints],
-                           engine=sess.engine)
+                           engine=sess.engine, clock=clk)
         for s in range(6):
             h.write_batch(s, [np.zeros(8, np.float32)] * 2, ranks=[0, 1])
         sess.flush()
-        deadline = time.time() + 5.0
-        while time.time() < deadline and sess.engine.metrics()["n_results"] == 0:
-            time.sleep(0.02)
+        assert clk.wait(lambda: sess.engine.metrics()["n_results"] > 0,
+                        timeout=5.0)
         snap = bus.sample()
     assert isinstance(snap, TelemetrySnapshot)
     assert len(snap.groups) == 1 and snap.groups[0].written == 12
@@ -111,21 +120,25 @@ def test_telemetry_snapshot_covers_all_layers():
 
 
 def test_telemetry_rates_from_sample_deltas():
-    eps = make_endpoints(1)
+    clk = VirtualClock()
+    clk.attach()
+    eps = make_endpoints(1, clock=clk)
     broker = Broker(GroupPlan(1, 1, 1), eps,
                     BrokerConfig(compress="none", queue_capacity=4,
-                                 backpressure="drop_oldest"))
-    bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps])
+                                 backpressure="drop_oldest"), clock=clk)
+    bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps],
+                       clock=clk)
     bus.sample()
     eps[0].handle.fail()                    # queue fills -> drops accumulate
     for s in range(64):
         broker.write("f", 0, s, np.zeros(4, np.float32))
-    time.sleep(0.1)
+    clk.sleep(0.1)                          # a dt>0 between rate samples
     snap = bus.sample()
     assert snap.groups[0].dropped > 0
     assert snap.groups[0].drop_rate > 0
     eps[0].handle.recover()
     broker.finalize()
+    clk.detach()
 
 
 def test_endpoint_ingest_rate_counter():
@@ -168,52 +181,76 @@ def test_workflow_config_roundtrip_with_elasticity():
             {"n_producers": 2, "elasticity": {"wat": 1}})
 
 
+def test_workflow_config_clock_knob():
+    cfg = WorkflowConfig(clock="virtual", clock_seed=7).validate()
+    assert cfg.make_clock().virtual
+    d = cfg.to_dict()
+    assert d["clock"] == "virtual" and d["clock_seed"] == 7
+    assert WorkflowConfig.from_dict(d) == cfg
+    with pytest.raises(ValueError, match="clock"):
+        WorkflowConfig(clock="sundial").validate()
+    with pytest.raises(ValueError, match="inprocess"):
+        WorkflowConfig(clock="virtual", transport="loopback").validate()
+    assert not WorkflowConfig().make_clock().virtual
+
+
 # ------------------------------------------------------- controller policies
-def _mk_loop(n_exec=1, cost=0.02, el=None, n_eps=1):
-    eps = make_endpoints(n_eps)
+def _mk_loop(n_exec=1, cost=0.02, el=None, n_eps=1, clock=None):
+    clk = ensure_clock(clock)
+    eps = make_endpoints(n_eps, clock=clk)
     plan = GroupPlan(n_producers=2, n_groups=n_eps, executors_per_group=2)
     broker = Broker(plan, eps, BrokerConfig(compress="none",
                                             backpressure="block",
-                                            queue_capacity=4096))
-    eng = StreamEngine([e.handle for e in eps], _slow_analyzer(cost),
-                       n_exec, trigger_interval=0.02, min_batch=1)
+                                            queue_capacity=4096), clock=clk)
+    eng = StreamEngine([e.handle for e in eps],
+                       _slow_analyzer(cost, clock=clk),
+                       n_exec, trigger_interval=0.02, min_batch=1, clock=clk)
     bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps],
-                       engine=eng)
+                       engine=eng, clock=clk)
     el = el or ElasticityConfig(enabled=True, interval_s=0.02,
                                 target_p99_s=0.2, backlog_high=8,
                                 min_executors=1, max_executors=4,
                                 cooldown_s=0.0, idle_scale_down_s=0.05)
-    ctl = ElasticController(bus, el, engine=eng, broker=broker)
+    ctl = ElasticController(bus, el, engine=eng, broker=broker, clock=clk)
     return broker, eps, eng, bus, ctl
 
 
 def test_controller_scales_up_on_backlog_breach():
-    broker, eps, eng, bus, ctl = _mk_loop(n_exec=1, cost=0.05)
+    clk = VirtualClock()
+    clk.attach()
+    broker, eps, eng, bus, ctl = _mk_loop(n_exec=1, cost=0.05, clock=clk)
     for s in range(40):
         broker.write("f", 0, s, np.zeros(8, np.float32))
     broker.flush()
-    deadline = time.time() + 5.0
-    while time.time() < deadline and eng.metrics()["alive_executors"] < 2:
+
+    def pump():
         eng.trigger_once()
         ctl.tick()
-        time.sleep(0.02)
-    assert eng.metrics()["alive_executors"] > 1
+        return eng.metrics()["alive_executors"] > 1
+
+    assert clk.wait(pump, timeout=5.0, poll=0.02)
     kinds = [a.kind for _, a in ctl.actions_log]
     assert "scale_up" in kinds
     eng.drain_and_stop()
     broker.finalize()
+    clk.detach()
 
 
 def test_controller_scales_down_when_idle():
-    broker, eps, eng, bus, ctl = _mk_loop(n_exec=3, cost=0.0)
-    deadline = time.time() + 5.0
-    while time.time() < deadline and eng.metrics()["alive_executors"] > 1:
+    clk = VirtualClock()
+    clk.attach()
+    broker, eps, eng, bus, ctl = _mk_loop(n_exec=3, cost=0.0, clock=clk)
+
+    def pump():
         ctl.tick()
-        time.sleep(0.03)
+        return eng.metrics()["alive_executors"] <= 1
+
+    assert clk.wait(pump, timeout=5.0, poll=0.03)
     assert eng.metrics()["alive_executors"] == 1      # min_executors floor
     assert [a.kind for _, a in ctl.actions_log].count("scale_down") == 2
     eng.drain_and_stop()
     broker.finalize()
+    clk.detach()
 
 
 def test_batch_cap_policy_follows_queue_depth():
@@ -244,7 +281,9 @@ def test_latency_policy_cooldown_and_bounds():
     el = ElasticityConfig(enabled=True, target_p99_s=0.1, cooldown_s=3600,
                           max_executors=2)
     pol = LatencyScalePolicy(el)
-    breach = TelemetrySnapshot(t=time.time(), latency_p50=1.0,
+    # small t (a virtual-time origin): the FIRST breach must scale even
+    # though t < cooldown_s — cooldown only gates scale-to-scale gaps
+    breach = TelemetrySnapshot(t=1.0, latency_p50=1.0,
                                latency_p99=1.0, latency_n=10,
                                alive_executors=1)
     acts = pol.decide(breach, [])
@@ -253,7 +292,7 @@ def test_latency_policy_cooldown_and_bounds():
     assert pol.decide(breach, []) == []
     # at max_executors: no scale-up even on breach
     pol2 = LatencyScalePolicy(el)
-    at_max = TelemetrySnapshot(t=time.time(), latency_p99=1.0, latency_n=10,
+    at_max = TelemetrySnapshot(t=1.0, latency_p99=1.0, latency_n=10,
                                alive_executors=2)
     assert pol2.decide(at_max, []) == []
 
@@ -262,28 +301,33 @@ def test_slow_uniform_analysis_is_not_declared_dead():
     """A single analyze call longer than heartbeat_timeout_s must not get a
     healthy executor replaced: busy-mid-analysis is revived by the
     controller (up to stuck_analysis_s), and with uniformly slow peers the
-    straggler median flags nobody."""
-    eps = make_endpoints(1)
+    straggler median flags nobody.  Virtual time: the 4 "seconds" of slow
+    uniform analysis cost milliseconds of wall time."""
+    clk = VirtualClock()
+    clk.attach()
+    eps = make_endpoints(1, clock=clk)
     plan = GroupPlan(n_producers=2, n_groups=1, executors_per_group=1)
     broker = Broker(plan, eps, BrokerConfig(compress="none",
                                             backpressure="block",
-                                            queue_capacity=4096))
-    eng = StreamEngine([e.handle for e in eps], _slow_analyzer(0.4),
-                       n_executors=2, trigger_interval=0.03, min_batch=1)
+                                            queue_capacity=4096), clock=clk)
+    eng = StreamEngine([e.handle for e in eps],
+                       _slow_analyzer(0.4, clock=clk),
+                       n_executors=2, trigger_interval=0.03, min_batch=1,
+                       clock=clk)
     bus = TelemetryBus(broker=broker, endpoints=[e.handle for e in eps],
-                       engine=eng)
+                       engine=eng, clock=clk)
     el = ElasticityConfig(enabled=True, interval_s=0.05,
                           heartbeat_timeout_s=0.15, idle_scale_down_s=3600,
                           target_p99_s=3600, backlog_high=10_000)
-    ctl = ElasticController(bus, el, engine=eng, broker=broker)
-    deadline = time.time() + 4.0
+    ctl = ElasticController(bus, el, engine=eng, broker=broker, clock=clk)
+    deadline = clk.now() + 4.0
     step = 0
-    while time.time() < deadline:
+    while clk.now() < deadline:
         for r in range(2):
             broker.write("f", r, step, np.zeros(4, np.float32))
         step += 1
         ctl.tick()
-        time.sleep(0.05)
+        clk.sleep(0.05)
     assert not any(a.kind == "replace_executor"
                    for _, a in ctl.actions_log), \
         "healthy-but-slow executors must not be churned"
@@ -291,6 +335,7 @@ def test_slow_uniform_analysis_is_not_declared_dead():
     broker.flush()
     eng.drain_and_stop(timeout=30)
     broker.finalize()
+    clk.detach()
 
 
 # ------------------------------------------- Session-owned control plane
@@ -325,11 +370,13 @@ def test_session_without_elasticity_has_no_control_plane():
 def test_endpoint_failure_detected_and_recovered_no_drops():
     """Acceptance: a mid-run endpoint death is detected via missed
     heartbeats (not just send-path retries), the controller proactively
-    re-routes the group, and nothing is dropped under block backpressure."""
+    re-routes the group, and nothing is dropped under block backpressure.
+    Runs on virtual time via the config's clock knob — deterministic and
+    milliseconds of wall clock."""
     cfg = WorkflowConfig(
         n_producers=4, n_groups=2, executors_per_group=1, compress="none",
         backpressure="block", queue_capacity=1024, trigger_interval=0.05,
-        min_batch=1,
+        min_batch=1, clock="virtual",
         elasticity=ElasticityConfig(enabled=True, interval_s=0.05,
                                     heartbeat_timeout_s=0.3,
                                     idle_scale_down_s=3600))
@@ -342,6 +389,7 @@ def test_endpoint_failure_detected_and_recovered_no_drops():
         return len(records)
 
     sess = Session(cfg, analyze=analyze)
+    clk = sess.clock
     h = sess.open_field("f", shape=(8,))
     n_steps = 30
     for s in range(n_steps):
@@ -349,15 +397,14 @@ def test_endpoint_failure_detected_and_recovered_no_drops():
                       ranks=[0, 1, 2, 3])
         if s == n_steps // 2:
             sess.endpoints[0].handle.fail()
-        time.sleep(0.02)
+        clk.sleep(0.02)
+
     # detector flags the dead endpoint; controller reroutes proactively
-    deadline = time.time() + 5.0
-    while time.time() < deadline:
+    def ep0_flagged():
         node = sess.detector.nodes.get("ep0")
-        if node is not None and not node.alive:
-            break
-        time.sleep(0.02)
-    assert not sess.detector.nodes["ep0"].alive
+        return node is not None and not node.alive
+
+    assert clk.wait(ep0_flagged, timeout=5.0, poll=0.02)
     sess.flush()
     stats = sess.close()
     assert any(a.kind == "reroute_endpoint"
