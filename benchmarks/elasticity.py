@@ -26,7 +26,11 @@ executor cost from the engine's executor-seconds integral.  Results land in
 ``BENCH_elasticity.json``.
 
   PYTHONPATH=src python benchmarks/elasticity.py [--smoke] [--wall]
-      [--seed N] [--trace PATH] [--json PATH]
+      [--seed N] [--trace PATH] [--latency-trace PATH] [--json PATH]
+
+``--latency-trace`` additionally dumps a record-level generation→analysis
+latency curve per mode (``PATH-<mode>.jsonl``) — the raw material for
+controller-policy regression sweeps, which virtual time makes ~free.
 """
 from __future__ import annotations
 
@@ -74,7 +78,8 @@ def _workflow(mode: str) -> WorkflowConfig:
 
 
 # --------------------------------------------------------------- virtual mode
-def _run_mode_virtual(mode: str, smoke: bool, seed: int):
+def _run_mode_virtual(mode: str, smoke: bool, seed: int,
+                      record_latency: bool = False):
     """One provisioning strategy on deterministic simulated time; returns
     (result row, full event trace)."""
     sc = Scenario(
@@ -82,7 +87,7 @@ def _run_mode_virtual(mode: str, smoke: bool, seed: int):
         phases=tuple(LoadPhase(name, dur, rate)
                      for name, dur, rate in _profile(smoke)),
         seed=seed, analysis_cost_s=ANALYZE_COST_S,
-        payload_elems=FIELD_ELEMS)
+        payload_elems=FIELD_ELEMS, record_latency=record_latency)
     trace = ScenarioRunner(sc).run()
     s = trace.summary
     row = {
@@ -162,18 +167,32 @@ def _run_mode_wall(mode: str, smoke: bool) -> dict:
 
 
 def main(smoke: bool = False, wall: bool = False, seed: int = 0,
-         trace_path: str | None = None) -> dict:
+         trace_path: str | None = None,
+         latency_trace_path: str | None = None) -> dict:
     rows = []
     for m in ("static_low", "static_peak", "elastic"):
         if wall:
             rows.append(_run_mode_wall(m, smoke))
         else:
-            row, trace = _run_mode_virtual(m, smoke, seed)
+            row, trace = _run_mode_virtual(
+                m, smoke, seed, record_latency=bool(latency_trace_path))
             rows.append(row)
             if m == "elastic" and trace_path:
                 Path(trace_path).write_text(trace.to_jsonl())
                 print(f"# elastic event trace -> {trace_path} "
                       f"(sha256 {trace.digest()[:16]}…)")
+            if latency_trace_path:
+                # one record-level latency curve PER MODE: the raw material
+                # for controller-policy regression sweeps on virtual time
+                curve = trace.latency_curve()
+                out_path = Path(latency_trace_path)
+                path = out_path.with_name(
+                    f"{out_path.stem}-{m}{out_path.suffix or '.jsonl'}")
+                path.write_text("".join(
+                    json.dumps({"t": t, "latency": lat}) + "\n"
+                    for t, lat in curve))
+                print(f"# {m} record-latency curve ({len(curve)} records) "
+                      f"-> {path}")
     by = {r["mode"]: r for r in rows}
     verdict = {
         "target_p99_s": TARGET_P99_S,
@@ -210,12 +229,16 @@ if __name__ == "__main__":
     p.add_argument("--trace", default=None,
                    help="write the elastic run's event trace (jsonl) here "
                         "(virtual mode only)")
+    p.add_argument("--latency-trace", default=None,
+                   help="write per-mode record-level latency curves "
+                        "(PATH-<mode>.jsonl) for controller-policy "
+                        "regression sweeps (virtual mode only)")
     p.add_argument("--json", default=str(Path(__file__).resolve().parents[1]
                                          / "BENCH_elasticity.json"))
     args = p.parse_args()
     t0 = time.time()
     out = main(smoke=args.smoke, wall=args.wall, seed=args.seed,
-               trace_path=args.trace)
+               trace_path=args.trace, latency_trace_path=args.latency_trace)
     out["wall_seconds"] = round(time.time() - t0, 2)
     Path(args.json).write_text(json.dumps(out, indent=2) + "\n")
     print(f"# results -> {args.json} ({out['wall_seconds']}s wall)")

@@ -11,7 +11,7 @@ import numpy as np
 from repro.analysis.dmd import StreamingDMD
 from repro.analysis.metrics import unit_circle_distance
 from repro.sim.cfd import CFDConfig, buildings_mask, init_state, region_fields, step
-from repro.workflow import Pipeline, Session, WorkflowConfig
+from repro.workflow import OperatorPipeline, Session, WorkflowConfig
 
 cfg = CFDConfig(nx=128, nz=64, n_regions=8, pressure_iters=50)
 N_FEAT = 256
@@ -32,12 +32,14 @@ def dmd_stage(key, records):
     sd.update_batch([r.payload for r in sorted(records, key=lambda r: r.step)])
     return sd.eigenvalues()
 
-def stability_stage(key, eigs):
-    return unit_circle_distance(eigs)
-
-pipeline = (Pipeline()
-            .stage("dmd", dmd_stage)
-            .then("stability", stability_stage))
+# operator pipeline over whole micro-batches (granularity="batch"): the
+# DMD stage is stateful per stream, so its contract is "ordered" — the
+# engine keeps each stream's updates exactly sequenced
+pipeline = (OperatorPipeline(granularity="batch")
+            .map("dmd", dmd_stage, ordering="ordered")
+            .map("stability", lambda k, eigs: unit_circle_distance(eigs),
+                 ordering="unordered")
+            .sink("stability_panel"))
 
 session = Session(workflow, pipeline=pipeline)
 velocity = session.open_field("velocity", shape=(N_FEAT,))
@@ -68,7 +70,7 @@ print(f"broker: {stats.sent} records sent in {stats.frames_sent} frames, "
       f"{stats.bytes_sent/1e6:.2f} MB on the wire")
 
 print("\nper-region flow stability (paper Fig 5; 0 = neutrally stable):")
-latest = session.dag.latest("stability")
+latest = session.exec_plan.latest("stability_panel")
 for key in sorted(latest, key=lambda k: int(k.split("/r")[-1])):
     region = int(key.split("/r")[-1])
     v = latest[key]

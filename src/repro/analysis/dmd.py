@@ -88,6 +88,25 @@ def gram_eigs(G: jax.Array, A: jax.Array, rank: int = 8,
     return jnp.where(good, eigs, jnp.nan + 0.0j)
 
 
+def window_dmd(snapshots, rank: int = 8,
+               n_features: int | None = None) -> np.ndarray:
+    """Batch DMD over one window pane — the stream-operator entry point.
+
+    ``snapshots``: iterable of 1-D arrays (a fired window's values, e.g.
+    record payloads in step order).  Each is flattened and trimmed /
+    zero-padded to ``n_features`` (default: the longest snapshot), stacked
+    to the ``(d, n)`` matrix ``exact_dmd`` expects.  Windows shorter than 3
+    snapshots can't form a snapshot pair worth solving — returns the same
+    zero sentinel ``StreamingDMD.eigenvalues`` uses."""
+    rows = [np.asarray(s, np.float32).reshape(-1) for s in snapshots]
+    if len(rows) < 3:
+        return np.zeros(1, np.complex64)
+    d = max(r.size for r in rows) if n_features is None else int(n_features)
+    rows = [np.pad(r[:d], (0, max(0, d - r[:d].size))) for r in rows]
+    eigs, _energy = exact_dmd(jnp.asarray(np.stack(rows, axis=1)), rank=rank)
+    return np.asarray(eigs)
+
+
 def _pad_rows(n: int) -> int:
     """Round a batch size up to the next power of two so the jitted update
     compiles O(log n) variants instead of one per micro-batch size."""

@@ -20,13 +20,14 @@ from repro.data.pipeline import TokenPipeline
 from repro.models import transformer as T
 from repro.models.modules import materialize
 from repro.models.steps import make_decode_step, make_prefill_step
-from repro.workflow import Pipeline, Session, WorkflowConfig
+from repro.workflow import OperatorPipeline, Session, WorkflowConfig
 
 
 def _telemetry_pipeline():
     """norms (mean per micro-batch) -> drift (|latest-first| across the whole
     decode: the stage keeps the first-seen mean per stream, so each sink
-    value is cumulative, and latest() reports drift over the full loop)."""
+    value is cumulative, and latest() reports drift over the full loop).
+    Both stages are stateful per stream, hence the ordered contract."""
     first_seen = {}
 
     def norms_stage(key, records):
@@ -37,9 +38,10 @@ def _telemetry_pipeline():
         first = first_seen.setdefault(key, means[0])
         return abs(means[-1] - first)
 
-    return (Pipeline()
-            .stage("norms", norms_stage)
-            .then("drift", drift_stage))
+    return (OperatorPipeline(granularity="batch")
+            .map("norms", norms_stage, ordering="ordered")
+            .map("drift", drift_stage, ordering="ordered")
+            .sink("drift_panel"))
 
 
 def main(argv=None):
@@ -106,7 +108,7 @@ def main(argv=None):
           f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.1f} tok/s)")
     if session is not None:
         stats = session.close()
-        drift = session.dag.latest("drift")
+        drift = session.exec_plan.latest("drift_panel")
         print(f"[serve] telemetry: mean residual norm per step = "
               f"{np.mean(norms):.3f}; residual drift over decode = "
               f"{max(drift.values(), default=0.0):.4f} "

@@ -49,6 +49,13 @@ class ElasticityConfig:
     batch_cap_min: int = 1
     batch_cap_max: int = 256
     heartbeat_timeout_s: float = 1.0  # FailureDetector miss window
+    # -- predictive scale-up (TrendScalePolicy) ---------------------------
+    # fit a least-squares slope over the last ``trend_window`` telemetry
+    # snapshots and scale out when the projection ``trend_horizon_s`` ahead
+    # breaches the p99 target or backlog threshold — BEFORE the breach lands
+    predictive: bool = False
+    trend_window: int = 8             # snapshots in the slope fit (>= 3)
+    trend_horizon_s: float = 1.0      # how far ahead to project
     # 4x margin: a merely-loaded executor working through big batches beats
     # ~2-3x slower than idle peers and must not read as a straggler
     straggler_factor: float = 4.0
@@ -76,6 +83,11 @@ class ElasticityConfig:
             raise ValueError("idle_scale_down_s and cooldown_s must be >= 0")
         if self.heartbeat_timeout_s <= 0:
             raise ValueError("heartbeat_timeout_s must be > 0")
+        if self.trend_window < 3:
+            raise ValueError("trend_window must be >= 3 (a slope needs "
+                             "history)")
+        if self.trend_horizon_s <= 0:
+            raise ValueError("trend_horizon_s must be > 0")
         if self.stuck_analysis_s <= 0:
             raise ValueError("stuck_analysis_s must be > 0")
         return self
@@ -136,6 +148,64 @@ class LatencyScalePolicy:
         return []
 
 
+class TrendScalePolicy:
+    """Predictive scale-out (ROADMAP follow-up): instead of waiting for the
+    p99 breach, fit a least-squares slope over the last ``trend_window``
+    TelemetrySnapshots and act when the projection ``trend_horizon_s`` ahead
+    crosses the target.  Backlog is the leading indicator (it rises a full
+    queue-drain ahead of the latency percentile), so both series are
+    projected and either can trigger.  Scale-in is deliberately NOT done
+    here — the reactive :class:`LatencyScalePolicy` owns it, so the two
+    compose (Session wires Trend *before* Latency when
+    ``cfg.predictive``)."""
+
+    def __init__(self, cfg: ElasticityConfig):
+        self.cfg = cfg
+        self._last_scale = float("-inf")     # see LatencyScalePolicy note
+
+    @staticmethod
+    def _slope(points: list[tuple[float, float]]) -> float:
+        """Least-squares d(value)/dt; 0 for degenerate spans."""
+        n = len(points)
+        if n < 2:
+            return 0.0
+        mt = sum(t for t, _ in points) / n
+        mv = sum(v for _, v in points) / n
+        den = sum((t - mt) ** 2 for t, _ in points)
+        if den <= 1e-12:
+            return 0.0
+        return sum((t - mt) * (v - mv) for t, v in points) / den
+
+    def decide(self, snap: TelemetrySnapshot, history) -> list[Action]:
+        cfg = self.cfg
+        window = list(history)[-cfg.trend_window:]
+        if len(window) < 3:
+            return []
+        now = snap.t
+        h = cfg.trend_horizon_s
+        lat_pts = [(s.t, s.latency_p99) for s in window if s.latency_n > 0]
+        back_pts = [(s.t, float(s.backlog)) for s in window]
+        proj_p99 = (snap.latency_p99 + self._slope(lat_pts) * h
+                    if len(lat_pts) >= 3 and snap.latency_n > 0
+                    else float("-inf"))
+        proj_backlog = snap.backlog + self._slope(back_pts) * h
+        p99_rising = proj_p99 > cfg.target_p99_s
+        backlog_rising = proj_backlog > cfg.backlog_high
+        if not (p99_rising or backlog_rising):
+            return []
+        if (now - self._last_scale < cfg.cooldown_s
+                or snap.alive_executors >= cfg.max_executors):
+            return []
+        step = min(cfg.scale_up_step,
+                   cfg.max_executors - snap.alive_executors)
+        self._last_scale = now
+        why = (f"projected p99={proj_p99:.3f}s>target in {h:.1f}s"
+               if p99_rising else
+               f"projected backlog={proj_backlog:.0f}>{cfg.backlog_high} "
+               f"in {h:.1f}s")
+        return [Action("scale_up", value=step, reason=why)]
+
+
 class BatchCapPolicy:
     """Adapt each sender's wire batch cap to its queue depth with hysteresis:
     a queue ≥2× the cap doubles aggregation (amortize framing under load); a
@@ -191,7 +261,10 @@ class ElasticController(threading.Thread):
         if policies is None:
             baseline = getattr(getattr(self.broker, "cfg", None),
                                "max_batch_records", 32)
-            policies = [LatencyScalePolicy(self.cfg)]
+            policies = []
+            if self.cfg.predictive:
+                policies.append(TrendScalePolicy(self.cfg))
+            policies.append(LatencyScalePolicy(self.cfg))
             if self.cfg.adapt_batch:
                 policies.append(BatchCapPolicy(self.cfg, baseline=baseline))
         self.policies = list(policies)
@@ -273,7 +346,17 @@ class ElasticController(threading.Thread):
     def _apply(self, action: Action) -> None:
         try:
             if action.kind == "scale_up" and self.engine is not None:
-                for _ in range(action.value or 1):
+                # hard cap regardless of which policy asked: two policies
+                # deciding from the same (stale) snapshot must not push the
+                # fleet past max_executors
+                alive = self.engine.metrics()["alive_executors"]
+                step = min(action.value or 1,
+                           max(0, self.cfg.max_executors - alive))
+                if step == 0:
+                    return
+                action = Action("scale_up", value=step, group=action.group,
+                                reason=action.reason)
+                for _ in range(step):
                     self.engine.add_executor()
             elif action.kind == "scale_down" and self.engine is not None:
                 for _ in range(action.value or 1):
@@ -298,8 +381,16 @@ class ElasticController(threading.Thread):
         self._pump_heartbeats()
         self.detector.scan()
         snap = self.bus.sample()
+        scaled_up = False
         for policy in self.policies:
             for action in policy.decide(snap, self.bus.history):
+                if action.kind == "scale_up":
+                    # one scale-up per tick: with predictive+reactive both
+                    # armed, the first policy to ask wins — otherwise two
+                    # decisions off the same snapshot double the step rate
+                    if scaled_up:
+                        continue
+                    scaled_up = True
                 self._apply(action)
         return snap
 

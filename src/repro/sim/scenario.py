@@ -78,7 +78,22 @@ _FAULT_KINDS = ("kill_executor", "add_executor", "inject_straggler",
 @dataclass(frozen=True)
 class Scenario:
     """A reproducible experiment: workflow wiring + load profile + fault
-    plan + one seed controlling every source of scheduling randomness."""
+    plan + one seed controlling every source of scheduling randomness.
+
+    ``operators``: optional factory returning a fresh
+    :class:`repro.streaming.operators.OperatorPipeline` — the run then
+    attaches it instead of the per-record analyze callback, and every
+    operator-level event (window fires, late drops, sink emits) lands in
+    the trace as an ``op`` event, with the plan's window loss ledger in
+    ``summary["windows"]``.  A factory (not a prebuilt pipeline) so each
+    run starts from empty keyed state.  Mutually exclusive with
+    ``analysis_cost_s``/``record_latency`` (callback-path knobs — model
+    cost inside the operator fns instead).
+
+    ``record_latency``: emit one ``latency`` trace event PER RECORD at
+    analysis time (callback scenarios) — the raw material for
+    controller-policy regression curves, sweepable for free on virtual
+    time."""
 
     workflow: WorkflowConfig
     phases: tuple = ()
@@ -88,6 +103,8 @@ class Scenario:
     payload_elems: int = 64
     field_name: str = "load"
     flush_timeout_s: float = 120.0     # virtual seconds, costs nothing real
+    operators: object = None           # () -> OperatorPipeline factory
+    record_latency: bool = False
 
     def validate(self) -> "Scenario":
         self.workflow.validate()
@@ -100,6 +117,21 @@ class Scenario:
                                  f"(expected one of {_FAULT_KINDS})")
             if f.t < 0:
                 raise ValueError(f"fault time must be >= 0, got {f.t}")
+        if self.operators is not None:
+            if not callable(self.operators):
+                raise ValueError("operators must be a zero-arg factory "
+                                 "returning an OperatorPipeline (fresh state "
+                                 "per run)")
+            # these two live in the callback analyze path only; silently
+            # ignoring them would skew any operator-vs-callback comparison
+            if self.analysis_cost_s:
+                raise ValueError(
+                    "analysis_cost_s only applies to callback scenarios; "
+                    "model cost inside the operator fns (clock.sleep)")
+            if self.record_latency:
+                raise ValueError(
+                    "record_latency only applies to callback scenarios; "
+                    "operator runs trace per-event 'op' records instead")
         return self
 
 
@@ -124,6 +156,12 @@ class ScenarioTrace:
         for _, d in self.events_of("analyze"):
             out.setdefault(d["stream"], []).extend(d["steps"])
         return out
+
+    def latency_curve(self) -> list[tuple[float, float]]:
+        """Per-record ``(t_analyzed, latency)`` pairs in time order — the
+        regression curve controller-policy sweeps compare (requires the
+        scenario to have run with ``record_latency=True``)."""
+        return sorted((t, d["latency"]) for t, d in self.events_of("latency"))
 
     def phase_p99(self, name: str) -> float:
         """p99 generation→analysis latency over results whose records were
@@ -191,10 +229,21 @@ class ScenarioRunner:
             # oracle: the exact step sequence each stream is analyzed in
             if sc.analysis_cost_s:
                 clock.sleep(sc.analysis_cost_s * len(records))
+            if sc.record_latency:
+                now = clock.now()
+                for r in records:
+                    emit("latency", stream=key, step=r.step,
+                         latency=round(now - r.t_generated, 9))
             emit("analyze", stream=key, steps=[r.step for r in records])
             return len(records)
 
-        sess = Session(sc.workflow, analyze=analyze, clock=clock)
+        if sc.operators is not None:
+            sess = Session(sc.workflow, pipeline=sc.operators(), clock=clock)
+            # operator-level trace events: window fires / late drops / sinks
+            sess.exec_plan.on_event = \
+                lambda kind, **d: emit("op", event=kind, **d)
+        else:
+            sess = Session(sc.workflow, analyze=analyze, clock=clock)
         try:
             handle = sess.open_field(sc.field_name,
                                      shape=(sc.payload_elems,))
@@ -298,6 +347,8 @@ class ScenarioRunner:
         if sess.controller is not None:
             trace.summary["controller_actions"] = \
                 sess.controller.summary()["actions"]
+        if sess.exec_plan is not None:
+            trace.summary["windows"] = sess.exec_plan.accounting()
         return trace
 
 

@@ -17,9 +17,10 @@ Example (tests/test_dag.py):
 from __future__ import annotations
 
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
+
+from repro.runtime.clock import Clock, ensure_clock
 
 
 @dataclass
@@ -30,7 +31,8 @@ class Stage:
 
 
 class AnalysisDAG:
-    def __init__(self, stages: list[Stage], source: str):
+    def __init__(self, stages: list[Stage], source: str, *,
+                 clock: Clock | None = None):
         names = [s.name for s in stages]
         if len(set(names)) != len(names):
             dupes = sorted({n for n in names if names.count(n) > 1})
@@ -42,6 +44,13 @@ class AnalysisDAG:
         self.sinks: dict[str, list[tuple[str, Any, float]]] = {
             s.name: [] for s in stages}
         self._lock = threading.Lock()
+        # sink timestamps come from here, NOT time.time(): under a Session's
+        # VirtualClock a wall-time read would stamp ~1.7e9 s into traces
+        self._clock = ensure_clock(clock)
+
+    def bind_clock(self, clock: Clock | None) -> None:
+        """Adopt the owning Session's clock (attach_pipeline does this)."""
+        self._clock = ensure_clock(clock)
 
     def _validate_acyclic(self):
         state: dict[str, int] = {}
@@ -68,11 +77,17 @@ class AnalysisDAG:
         out = stage.fn(key, value)
         if out is None:
             return None
-        with self._lock:
-            self.sinks[name].append((key, out, time.time()))
+        self.record(name, key, out)
         for d in stage.downstream:
             self._run(d, key, out)
         return out
+
+    def record(self, stage: str, key: str, value) -> None:
+        """Append one sink entry, clock-stamped (shared by the legacy
+        traversal above and the operator-compiled path — see
+        ``repro.streaming.operators.lower_dag``)."""
+        with self._lock:
+            self.sinks[stage].append((key, value, self._clock.now()))
 
     def results(self, stage: str) -> list[tuple[str, Any, float]]:
         with self._lock:

@@ -21,7 +21,15 @@ Beyond the paper (Spark gave these for free; we implement them):
   * observability   — ``metrics()`` returns a thread-safe control-plane
                       snapshot (per-executor queues, rolling latency
                       percentiles, executor-seconds) consumed by
-                      ``repro.runtime.telemetry``.
+                      ``repro.runtime.telemetry``,
+  * plan-aware dispatch — ``attach_plan`` installs a compiled operator
+                      ``ExecutionPlan`` (repro.streaming.operators): its
+                      order-insensitive prefix runs before/without the
+                      per-stream ordering ticket with partitions spread
+                      across executors (intra-stream parallelism), while
+                      the ordered suffix keeps the exact-sequence
+                      guarantee; ``drain_and_stop`` fires still-open
+                      window panes once every partition has completed.
 """
 from __future__ import annotations
 
@@ -112,16 +120,20 @@ class _Executor(threading.Thread):
             if mb is _POISON:
                 break
             self.current_key = mb.stream_key
-            self.waiting = True
-            eng._await_turn(mb)        # per-stream order even across steals
-            self.waiting = False
-            self.t_busy_since = clock.now()
-            if self.slowdown:
-                clock.sleep(self.slowdown)
-            try:
-                value = eng.analyze_fn(mb.stream_key, mb.records)
-            except Exception as e:  # analysis failure != engine failure
-                value = e
+            plan = eng.plan
+            if plan is None:
+                self.waiting = True
+                eng._await_turn(mb)    # per-stream order even across steals
+                self.waiting = False
+                self.t_busy_since = clock.now()
+                if self.slowdown:
+                    clock.sleep(self.slowdown)
+                try:
+                    value = eng.analyze_fn(mb.stream_key, mb.records)
+                except Exception as e:  # analysis failure != engine failure
+                    value = e
+            else:
+                value = self._run_plan(plan, mb, clock)
             tmin = min((r.t_generated for r in mb.records), default=mb.t_created)
             eng._collect(Result(stream_key=mb.stream_key, value=value,
                                 n_records=len(mb.records),
@@ -136,6 +148,44 @@ class _Executor(threading.Thread):
         eng._reassign(self)
         clock.detach()     # exit the schedule without a watchdog stall
 
+    def _run_plan(self, plan, mb: MicroBatch, clock) -> Any:
+        """Plan-aware execution: the order-insensitive prefix runs BEFORE
+        (and without) the stream's ordering ticket — that's what lets
+        micro-batches of ONE stream proceed concurrently on many executors —
+        then the ordered suffix (if any) under the ticket, exactly
+        sequenced.  A plan with no ordered stages never takes the ticket."""
+        eng = self.engine
+        self.t_busy_since = clock.now()
+        if self.slowdown:
+            clock.sleep(self.slowdown)
+        pre_out = None
+        if plan.pre_stages:
+            try:
+                # seq feeds the plan's in-order frontier: window watermarks
+                # advance only over the contiguous per-stream prefix, so
+                # concurrent out-of-order batches can't induce late drops
+                pre_out = plan.run_pre(mb.stream_key, mb.records, seq=mb.seq)
+            except Exception as e:     # analysis failure != engine failure
+                if plan.post_stages:
+                    # the failed batch must still take its ordering turn:
+                    # the caller's _release_turn is a max-jump, so releasing
+                    # out of sequence would unblock every in-flight earlier
+                    # batch at once and break the ordered suffix's contract
+                    self.waiting = True
+                    eng._await_turn(mb)
+                    self.waiting = False
+                return e
+            if not plan.post_stages:
+                return pre_out.primary
+        self.waiting = True
+        eng._await_turn(mb)
+        self.waiting = False
+        self.t_busy_since = clock.now()
+        try:
+            return plan.run_post(mb.stream_key, pre_out, mb.records)
+        except Exception as e:
+            return e
+
     def kill(self):
         """Simulated hard failure: drop the thread, orphan its queue."""
         self.alive = False
@@ -147,7 +197,8 @@ _POISON = MicroBatch(stream_key="__poison__", records=[])
 class StreamEngine:
     def __init__(self, endpoints: list, analyze_fn: Callable,
                  n_executors: int, *, trigger_interval: float = 3.0,
-                 min_batch: int = 2, clock: Clock | None = None):
+                 min_batch: int = 2, clock: Clock | None = None,
+                 order_wait_s: float = _ORDER_WAIT_S):
         """endpoints: Endpoint handles (drain API).  analyze_fn(key, records).
 
         ``min_batch``: a stream's drained records are held until at least
@@ -162,8 +213,10 @@ class StreamEngine:
         deterministic simulated time."""
         self.endpoints = endpoints
         self.analyze_fn = analyze_fn
+        self.plan = None               # compiled operator ExecutionPlan
         self.trigger_interval = trigger_interval
         self.min_batch = min_batch
+        self.order_wait_s = order_wait_s
         self.clock = ensure_clock(clock)
         self.results: list[Result] = []
         self._recent_lat: deque = deque(maxlen=512)  # rolling latency window
@@ -205,14 +258,34 @@ class StreamEngine:
                 else max(1, len(endpoints)) * cfg.executors_per_group
         return cls(endpoints, analyze_fn, n_executors=n_exec,
                    trigger_interval=cfg.trigger_interval,
-                   min_batch=cfg.min_batch, clock=clock)
+                   min_batch=cfg.min_batch, clock=clock,
+                   order_wait_s=getattr(cfg, "order_wait_s", _ORDER_WAIT_S))
 
     def attach_dag(self, dag: Callable) -> None:
         """Session-driven rewiring: route every micro-batch through an
         ``AnalysisDAG`` (or any ``(stream_key, records) -> value`` callable).
         Takes effect for the next dispatched partition — executors look up
         ``analyze_fn`` per call."""
+        self.plan = None
         self.analyze_fn = dag
+
+    def attach_plan(self, plan) -> None:
+        """Route every micro-batch through a compiled operator
+        ``ExecutionPlan`` (see ``repro.streaming.operators``).  Dispatch
+        becomes plan-aware: plans with an order-insensitive prefix get their
+        partitions spread across executors (intra-stream parallelism, capped
+        by the plan's parallelism hint) instead of sticky-assigned, and the
+        ordering ticket is only taken for the plan's ordered suffix.
+
+        Attaching mid-run aligns the plan's watermark frontier with the
+        engine's continuing per-stream seq counters — a fresh frontier
+        expecting seq 0 would park every future batch as pending and stall
+        window firing until drain."""
+        seed = getattr(plan, "seed_frontier", None)
+        if seed is not None:
+            with self._tlock:
+                seed(dict(self._next_seq))
+        self.plan = plan
 
     # ---- per-stream ordering tickets ------------------------------------
     def _await_turn(self, mb: MicroBatch) -> bool:
@@ -223,7 +296,7 @@ class StreamEngine:
         if self.clock.wait_cv(
                 self._done_cv,
                 lambda: self._done_seq.get(mb.stream_key, 0) >= mb.seq,
-                timeout=_ORDER_WAIT_S):
+                timeout=self.order_wait_s):
             return True
         self.order_timeouts += 1
         return False
@@ -382,6 +455,22 @@ class StreamEngine:
             self._assign[stream_key] = e.idx
             return e
 
+    def _pick_parallel(self):
+        """Plan-aware dispatch for order-insensitive work: NO stickiness —
+        each partition goes to the least-loaded alive executor, so one
+        stream's micro-batches spread across the fleet.  A parallelism hint
+        caps the *candidates per dispatch* to the hint least-loaded
+        executors (not a fixed low-index subset — scale-ups must stay
+        usable).  Per-stream queues stay seq-ascending because dispatch
+        itself is in seq order."""
+        alive = self._alive()
+        if not alive:
+            return None
+        hint = self.plan.parallelism if self.plan is not None else None
+        if hint is not None and hint < len(alive):
+            alive = sorted(alive, key=lambda e: e.q.qsize())[:hint]
+        return min(alive, key=lambda e: e.q.qsize())
+
     # ---- work stealing ---------------------------------------------------
     @staticmethod
     def _peek_key(ex: _Executor) -> str | None:
@@ -414,6 +503,11 @@ class StreamEngine:
             if mb is _POISON:          # dying executor: hand it back
                 victim.q.put(_POISON)
                 continue
+            if self.plan is not None and self.plan.parallel_dispatch:
+                # parallel-dispatch plans have no sticky run to migrate:
+                # batches of one stream are already spread, so steal just
+                # the head partition
+                return mb
             key = mb.stream_key
             # extract the rest of this stream's queued run, preserving order
             with victim.q.mutex:
@@ -460,7 +554,9 @@ class StreamEngine:
                         or now - self._hold_t[key] >= self.trigger_interval)
                 if not ripe:
                     continue
-                ex = self._pick_executor(key)
+                parallel = self.plan is not None and self.plan.parallel_dispatch
+                ex = self._pick_parallel() if parallel \
+                    else self._pick_executor(key)
                 if ex is None:
                     continue
                 seq = self._next_seq.get(key, 0)
@@ -564,3 +660,7 @@ class StreamEngine:
             e.q.put(_POISON)
         for e in survivors:          # results must be collected before return
             self.clock.join(e, timeout=5.0)
+        if self.plan is not None:
+            # every partition is done: fire still-open window panes through
+            # the rest of the graph (single-threaded, deterministic order)
+            self.plan.flush()

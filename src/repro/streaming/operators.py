@@ -1,0 +1,895 @@
+"""Typed stream operators — the Cloud analysis layer as a real dataflow API.
+
+The paper's Cloud side is a distributed stream-processing service (§4: Flink
+jobs over broker streams), but the first DAG implementation here was a bare
+``(stream_key, value) -> value`` callback graph with no notion of windows,
+keys, or per-stage ordering — and the engine serialized every stage of every
+stream behind one ordering ticket.  This module replaces that with a typed
+operator model in the spirit of openPMD/ADIOS2 streaming pipelines and
+Wilkins-style declarative in-situ graphs:
+
+* :class:`Map` / :class:`Filter`   — per-element transforms,
+* :class:`KeyBy`                   — re-key the stream (fan records of many
+                                     producer streams into logical keys),
+* :class:`TumblingWindow` / :class:`SlidingWindow`
+                                   — event-time windows over
+                                     ``StreamRecord.t_generated``, holding
+                                     keyed state with snapshot/restore hooks,
+* :class:`Aggregate`               — reduce a fired window pane to a value,
+* :class:`Sink`                    — collect results (session-clock stamped).
+
+Every operator declares an **ordering contract** — ``ordered`` (exact
+per-stream arrival order), ``unordered`` (no cross-batch order), or ``keyed``
+(per-key state consistency; event-time bucketing makes results insensitive
+to processing order) — and a **parallelism hint**.  :meth:`OperatorPipeline.
+compile` lowers the graph to an :class:`ExecutionPlan` the
+``StreamEngine`` honors: the maximal order-insensitive prefix (every stage
+``unordered``/``keyed`` with no ``ordered`` ancestor) runs *before and
+without* the stream's ordering ticket, so micro-batches of ONE stream are
+analyzed concurrently by many executors; the ordered suffix (if any) keeps
+today's exactly-sequenced guarantee.  ``lower_dag`` compiles a legacy
+:class:`repro.streaming.dag.AnalysisDAG` onto the same plan machinery (all
+stages ordered, batch granularity), which is how the old ``Pipeline`` API
+keeps working unchanged.
+
+Window state lives in the plan (shared across executors, per-operator
+locks), NOT in any executor thread — so elasticity-driven steals,
+``replace_executor``, and rebalances never drop a pane.  ``snapshot()`` /
+``restore()`` serialize that state for migration across engines or
+sessions, and ``accounting()`` closes the loss ledger:
+``records_in == records into fired panes + records in open panes +
+late_dropped`` for tumbling windows (per-pane identities for sliding).
+"""
+from __future__ import annotations
+
+import copy
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.runtime.clock import Clock, ensure_clock
+
+ORDERED = "ordered"
+UNORDERED = "unordered"
+KEYED = "keyed"
+_CONTRACTS = (ORDERED, UNORDERED, KEYED)
+
+
+@dataclass(frozen=True)
+class Element:
+    """One item flowing through the graph: a key, a value, and its event
+    time (``StreamRecord.t_generated`` at the source; pane end for windows)."""
+
+    key: str
+    value: Any
+    t_event: float
+
+
+@dataclass(frozen=True)
+class WindowPane:
+    """One fired window: ``[start, end)`` in event time, values in arrival
+    order (sort by your own criterion in the downstream Aggregate if the
+    reduction is order-sensitive)."""
+
+    key: str
+    start: float
+    end: float
+    values: tuple
+
+    @property
+    def n(self) -> int:
+        return len(self.values)
+
+
+class Operator:
+    """One typed stage.  Subclasses implement :meth:`process`; stateful
+    operators also implement ``flush``/``snapshot``/``restore``.
+
+    ``ordering`` is the stage's contract (see module docstring);
+    ``parallelism`` is a hint capping how many executors the engine spreads
+    this stage's partitions over (``None`` = no cap).
+    """
+
+    stateful = False
+
+    def __init__(self, name: str, *, ordering: str, parallelism: int | None = None):
+        if not name:
+            raise ValueError("operator name must be non-empty")
+        if ordering not in _CONTRACTS:
+            raise ValueError(f"ordering must be one of {_CONTRACTS}, "
+                             f"got {ordering!r}")
+        if parallelism is not None and parallelism < 1:
+            raise ValueError(f"parallelism hint must be >= 1, got {parallelism}")
+        self.name = name
+        self.ordering = ordering
+        self.parallelism = parallelism
+        self._plan: "ExecutionPlan | None" = None
+
+    # plan wiring (clock + event hook access)
+    def open(self, plan: "ExecutionPlan") -> None:
+        self._plan = plan
+
+    @property
+    def clock(self) -> Clock:
+        return self._plan.clock if self._plan is not None else ensure_clock(None)
+
+    def process(self, elem: Element) -> list[Element]:
+        raise NotImplementedError
+
+    def flush(self) -> list[Element]:
+        """Emit whatever the operator is still holding (drain path)."""
+        return []
+
+    def snapshot(self):
+        return None
+
+    def restore(self, state) -> None:
+        pass
+
+    def __repr__(self):
+        return (f"{type(self).__name__}({self.name!r}, "
+                f"ordering={self.ordering!r})")
+
+
+class Map(Operator):
+    """``fn(key, value) -> value | None`` (None filters the element)."""
+
+    def __init__(self, name: str, fn: Callable[[str, Any], Any], *,
+                 ordering: str = ORDERED, parallelism: int | None = None):
+        super().__init__(name, ordering=ordering, parallelism=parallelism)
+        self.fn = fn
+
+    def process(self, elem: Element) -> list[Element]:
+        out = self.fn(elem.key, elem.value)
+        if out is None:
+            return []
+        return [Element(elem.key, out, elem.t_event)]
+
+
+class Filter(Operator):
+    """Keep elements where ``predicate(key, value)`` is truthy.  Stateless,
+    hence ``unordered`` by default."""
+
+    def __init__(self, name: str, predicate: Callable[[str, Any], bool], *,
+                 ordering: str = UNORDERED, parallelism: int | None = None):
+        super().__init__(name, ordering=ordering, parallelism=parallelism)
+        self.predicate = predicate
+
+    def process(self, elem: Element) -> list[Element]:
+        return [elem] if self.predicate(elem.key, elem.value) else []
+
+
+class KeyBy(Operator):
+    """Re-key the stream: ``key_fn(key, value) -> new_key``.  Downstream
+    keyed state (windows) buckets by the new key, so many producer streams
+    can pool into one logical key (e.g. all ranks of a field)."""
+
+    def __init__(self, name: str, key_fn: Callable[[str, Any], str], *,
+                 parallelism: int | None = None):
+        super().__init__(name, ordering=KEYED, parallelism=parallelism)
+        self.key_fn = key_fn
+
+    def process(self, elem: Element) -> list[Element]:
+        return [Element(str(self.key_fn(elem.key, elem.value)), elem.value,
+                        elem.t_event)]
+
+
+class Aggregate(Operator):
+    """Reduce a fired :class:`WindowPane` (or any iterable value) with
+    ``fn(key, values) -> value``."""
+
+    def __init__(self, name: str, fn: Callable[[str, list], Any], *,
+                 ordering: str = KEYED, parallelism: int | None = None):
+        super().__init__(name, ordering=ordering, parallelism=parallelism)
+        self.fn = fn
+
+    def process(self, elem: Element) -> list[Element]:
+        v = elem.value
+        values = list(v.values) if isinstance(v, WindowPane) else list(v)
+        out = self.fn(elem.key, values)
+        if out is None:
+            return []
+        return [Element(elem.key, out, elem.t_event)]
+
+
+class Sink(Operator):
+    """Terminal collection point: appends ``(key, value, t)`` with the
+    session clock's now() — never wall time — and passes the element through
+    (sinks may sit mid-chain, like legacy DAG stage sinks)."""
+
+    def __init__(self, name: str, *, ordering: str = UNORDERED):
+        super().__init__(name, ordering=ordering)
+        self._results: list[tuple[str, Any, float]] = []
+        self._lock = threading.Lock()
+
+    def process(self, elem: Element) -> list[Element]:
+        t = self.clock.now()
+        with self._lock:
+            self._results.append((elem.key, elem.value, t))
+        if self._plan is not None:
+            self._plan.emit_event("sink", op=self.name, key=elem.key)
+        return [elem]
+
+    def results(self) -> list[tuple[str, Any, float]]:
+        with self._lock:
+            return list(self._results)
+
+    def latest(self) -> dict[str, Any]:
+        out: dict[str, Any] = {}
+        for key, value, _t in self.results():
+            out[key] = value
+        return out
+
+
+class _Window(Operator):
+    """Shared machinery for event-time windows: per-key panes under one
+    operator lock, an operator-level watermark, loss ledger, and
+    snapshot/restore.
+
+    The watermark does NOT follow raw processing order.  Under plan-aware
+    parallel dispatch, micro-batches of one stream run concurrently on many
+    executors, so batch N+1 can be *processed* before batch N; if its
+    (later) event times advanced the watermark directly, batch N's records
+    would read as late and drop nondeterministically.  Instead, insertion
+    (:meth:`ingest`, commutative) is decoupled from firing
+    (:meth:`advance_watermark`), and the ExecutionPlan only advances the
+    watermark along the per-stream **in-order commit frontier** — batch N+1
+    contributes only after batches 0..N have finished inserting.  Producer
+    event times are monotone per stream, so a record can never be late with
+    respect to its own stream's frontier; records pooled across *different*
+    streams (KeyBy) can still race each other's frontiers, which is what
+    ``allowed_lateness_s`` is for."""
+
+    stateful = True
+
+    def __init__(self, name: str, *, allowed_lateness_s: float = 0.0,
+                 parallelism: int | None = None):
+        super().__init__(name, ordering=KEYED, parallelism=parallelism)
+        if allowed_lateness_s < 0:
+            raise ValueError("allowed_lateness_s must be >= 0")
+        self.allowed_lateness_s = float(allowed_lateness_s)
+        self._lock = threading.Lock()
+        self._watermark = float("-inf")
+        # key -> {(start, end): [values]}
+        self._panes: dict[str, dict[tuple[float, float], list]] = {}
+        # loss ledger (see accounting())
+        self.records_in = 0
+        self.late_dropped = 0
+        self.assigned = 0            # records that entered >= 1 pane
+        self.assignments = 0         # pane insertions (can exceed assigned
+        #                              for sliding windows)
+        self.panes_fired = 0
+        self.fired_inserts = 0       # sum of fired pane sizes
+
+    # subclass: event time -> [(start, end), ...] pane memberships
+    def _assign(self, t: float) -> list[tuple[float, float]]:
+        raise NotImplementedError
+
+    def ingest(self, elem: Element) -> None:
+        """Insert-only half: bucket the element into its live panes (order-
+        insensitive, safe to call from any executor at any time)."""
+        with self._lock:
+            self.records_in += 1
+            # a pane is live until the watermark passes end + lateness
+            live = [(s, e) for s, e in self._assign(elem.t_event)
+                    if e + self.allowed_lateness_s > self._watermark]
+            if not live:
+                self.late_dropped += 1
+                if self._plan is not None:
+                    self._plan.emit_event("late_drop", op=self.name,
+                                          key=elem.key, t_event=elem.t_event)
+                return
+            self.assigned += 1
+            panes = self._panes.setdefault(elem.key, {})
+            for span in live:
+                panes.setdefault(span, []).append(elem.value)
+                self.assignments += 1
+
+    def advance_watermark(self, t: float) -> list[Element]:
+        """Firing half: move the watermark forward (monotone) and pop every
+        pane it passed, keys and spans in sorted order for determinism.
+        Called by the plan with in-order frontier times only."""
+        fired: list[tuple[str, float, float, tuple]] = []
+        with self._lock:
+            if t <= self._watermark:
+                return []
+            self._watermark = t
+            for key in sorted(self._panes):
+                panes = self._panes[key]
+                for span in sorted(panes):
+                    if span[1] + self.allowed_lateness_s <= self._watermark:
+                        values = panes.pop(span)
+                        self.panes_fired += 1
+                        self.fired_inserts += len(values)
+                        fired.append((key, span[0], span[1], tuple(values)))
+        return [self._emit(k, s, e, v) for k, s, e, v in fired]
+
+    def process(self, elem: Element) -> list[Element]:
+        """In-order context (ordered suffix under the ticket, inline plan
+        calls, flush-fed elements): insert and advance directly."""
+        self.ingest(elem)
+        return self.advance_watermark(elem.t_event)
+
+    def _emit(self, key: str, start: float, end: float, values: tuple) -> Element:
+        if self._plan is not None:
+            self._plan.emit_event("window_fire", op=self.name, key=key,
+                                  start=start, end=end, n=len(values))
+        return Element(key, WindowPane(key, start, end, values), end)
+
+    def flush(self) -> list[Element]:
+        """Fire every open pane (drain path), keys and panes in sorted order
+        so flush emission is deterministic."""
+        fired = []
+        with self._lock:
+            for key in sorted(self._panes):
+                panes = self._panes[key]
+                for span in sorted(panes):
+                    values = panes.pop(span)
+                    self.panes_fired += 1
+                    self.fired_inserts += len(values)
+                    fired.append((key, span[0], span[1], tuple(values)))
+        return [self._emit(k, s, e, v) for k, s, e, v in fired]
+
+    # ---- keyed-state migration hooks ------------------------------------
+    def snapshot(self) -> dict:
+        """Deep-copied keyed state + ledger — enough to rebuild the operator
+        mid-window on another engine/session (elasticity migration)."""
+        with self._lock:
+            return copy.deepcopy({
+                "watermark": self._watermark,
+                "panes": self._panes,
+                "counters": {
+                    "records_in": self.records_in,
+                    "late_dropped": self.late_dropped,
+                    "assigned": self.assigned,
+                    "assignments": self.assignments,
+                    "panes_fired": self.panes_fired,
+                    "fired_inserts": self.fired_inserts}})
+
+    def restore(self, state: dict) -> None:
+        with self._lock:
+            snap = copy.deepcopy(state)
+            self._watermark = snap["watermark"]
+            self._panes = snap["panes"]
+            for k, v in snap["counters"].items():
+                setattr(self, k, v)
+
+    def accounting(self) -> dict:
+        """The loss ledger.  ``closed`` is the record-conservation identity:
+        every record that entered either joined >= 1 pane or was counted as
+        a late drop, and every pane insertion is either fired or still open."""
+        with self._lock:
+            open_inserts = sum(len(v) for panes in self._panes.values()
+                               for v in panes.values())
+            open_panes = sum(len(panes) for panes in self._panes.values())
+            return {
+                "records_in": self.records_in,
+                "late_dropped": self.late_dropped,
+                "assigned": self.assigned,
+                "assignments": self.assignments,
+                "panes_fired": self.panes_fired,
+                "fired_inserts": self.fired_inserts,
+                "open_inserts": open_inserts,
+                "open_panes": open_panes,
+                "closed": (self.records_in == self.assigned + self.late_dropped
+                           and self.assignments
+                           == self.fired_inserts + open_inserts)}
+
+
+class TumblingWindow(_Window):
+    """Fixed event-time buckets of ``size_s``: record at t falls in exactly
+    ``[floor(t/size)*size, +size)``."""
+
+    def __init__(self, name: str, size_s: float, **kw):
+        if size_s <= 0:
+            raise ValueError("size_s must be > 0")
+        super().__init__(name, **kw)
+        self.size_s = float(size_s)
+
+    def _assign(self, t: float) -> list[tuple[float, float]]:
+        b = int(t // self.size_s)
+        return [(b * self.size_s, (b + 1) * self.size_s)]
+
+
+class SlidingWindow(_Window):
+    """Overlapping panes of ``size_s`` every ``slide_s``: record at t joins
+    every pane ``[k*slide, k*slide + size)`` containing t."""
+
+    def __init__(self, name: str, size_s: float, slide_s: float, **kw):
+        if size_s <= 0 or slide_s <= 0:
+            raise ValueError("size_s and slide_s must be > 0")
+        if slide_s > size_s:
+            raise ValueError("slide_s must be <= size_s (gaps would drop "
+                             "records; use a TumblingWindow instead)")
+        super().__init__(name, **kw)
+        self.size_s = float(size_s)
+        self.slide_s = float(slide_s)
+
+    def _assign(self, t: float) -> list[tuple[float, float]]:
+        k_max = int(t // self.slide_s)
+        k_min = int((t - self.size_s) // self.slide_s) + 1
+        return [(k * self.slide_s, k * self.slide_s + self.size_s)
+                for k in range(k_min, k_max + 1)]
+
+
+# ---------------------------------------------------------------------------
+# The compiled plan
+# ---------------------------------------------------------------------------
+
+class _PreOut:
+    """Result of the order-insensitive prefix: elements parked at the
+    pre/post phase boundary, plus the partition's primary value."""
+
+    __slots__ = ("boundary", "primary")
+
+    def __init__(self, boundary: list, primary):
+        self.boundary = boundary
+        self.primary = primary
+
+
+class ExecutionPlan:
+    """An operator graph lowered for the ``StreamEngine``.
+
+    The compiler splits stages into two phases:
+
+    * **pre**  — the maximal prefix where every stage is order-insensitive
+      (``unordered``/``keyed``) and has no ``ordered`` ancestor.  The engine
+      runs this *without* the per-stream ordering ticket, so micro-batches
+      of one stream proceed concurrently on many executors.
+    * **post** — everything from the first ``ordered`` stage on, run under
+      the ticket in exact per-stream dispatch order.
+
+    ``contract`` summarizes the plan ("ordered" if any post stage exists,
+    else "keyed" if any keyed/stateful stage, else "unordered");
+    ``parallel_dispatch`` tells the engine to spread a stream's partitions
+    over executors instead of sticky-assigning them; ``parallelism`` is the
+    tightest pre-stage hint (None = no cap).
+
+    ``granularity`` selects what a source element is: ``"record"`` explodes
+    a micro-batch into one element per ``StreamRecord`` (event time =
+    ``t_generated``); ``"batch"`` feeds the whole records list as one
+    element (the legacy ``AnalysisDAG`` semantics used by ``lower_dag``).
+    """
+
+    def __init__(self, ops: dict[str, Operator], downstream: dict[str, list[str]],
+                 source: str, *, clock: Clock | None = None,
+                 granularity: str = "record"):
+        if source not in ops:
+            raise ValueError(f"unknown source {source!r}")
+        if granularity not in ("record", "batch"):
+            raise ValueError(f"granularity must be 'record' or 'batch', "
+                             f"got {granularity!r}")
+        for name, downs in downstream.items():
+            if name not in ops:
+                raise ValueError(f"unknown stage {name!r} in downstream map")
+            for d in downs:
+                if d not in ops:
+                    raise ValueError(f"unknown downstream stage {d!r}")
+        self.ops = dict(ops)
+        self.down = {n: list(downstream.get(n, [])) for n in ops}
+        self.source = source
+        self.clock = ensure_clock(clock)
+        self.granularity = granularity
+        self.on_event: Callable | None = None   # (kind, **detail) trace hook
+        self._topo = self._toposort()
+        self._pre, self._post = self._split_phases()
+        # in-order commit frontier (see _Window docstring): per source
+        # stream, batches contribute their max event time to the watermark
+        # only once every earlier-seq batch of that stream has finished
+        # inserting; the operator watermark is the max over stream frontiers
+        self._flock = threading.Lock()
+        self._frontier: dict[str, dict] = {}
+        self._committed_max = float("-inf")
+        for op in self.ops.values():
+            op.open(self)
+
+    # ---- compilation ----------------------------------------------------
+    def _toposort(self) -> list[str]:
+        state: dict[str, int] = {}
+        order: list[str] = []
+
+        def visit(n: str, path: frozenset):
+            if state.get(n) == 2:
+                return
+            if n in path:
+                raise ValueError(f"cycle through {n!r}")
+            for d in self.down[n]:
+                visit(d, path | {n})
+            state[n] = 2
+            order.append(n)
+
+        visit(self.source, frozenset())
+        unreachable = set(self.ops) - set(order)
+        if unreachable:
+            raise ValueError(
+                f"stages unreachable from source {self.source!r}: "
+                f"{sorted(unreachable)}")
+        order.reverse()
+        return order
+
+    def _split_phases(self) -> tuple[list[str], list[str]]:
+        parents: dict[str, list[str]] = {n: [] for n in self.ops}
+        for n, downs in self.down.items():
+            for d in downs:
+                parents[d].append(n)
+        pre: list[str] = []
+        pre_set: set[str] = set()
+        for n in self._topo:                     # parents precede children
+            op = self.ops[n]
+            if op.ordering != ORDERED and all(p in pre_set for p in parents[n]):
+                pre.append(n)
+                pre_set.add(n)
+        post = [n for n in self._topo if n not in pre_set]
+        return pre, post
+
+    @property
+    def pre_stages(self) -> list[str]:
+        return list(self._pre)
+
+    @property
+    def post_stages(self) -> list[str]:
+        return list(self._post)
+
+    @property
+    def contract(self) -> str:
+        if self._post:
+            return ORDERED
+        if any(op.stateful or op.ordering == KEYED for op in self.ops.values()):
+            return KEYED
+        return UNORDERED
+
+    @property
+    def parallel_dispatch(self) -> bool:
+        """True when the engine should spread one stream's partitions across
+        executors (there is order-insensitive work to parallelize)."""
+        return bool(self._pre)
+
+    @property
+    def parallelism(self) -> int | None:
+        hints = [self.ops[n].parallelism for n in self._pre
+                 if self.ops[n].parallelism is not None]
+        return min(hints) if hints else None
+
+    def bind_clock(self, clock: Clock | None) -> None:
+        """Adopt the Session's clock (operators read it through the plan, so
+        a rebind covers every sink/window timestamp)."""
+        self.clock = ensure_clock(clock)
+
+    def emit_event(self, kind: str, **detail) -> None:
+        cb = self.on_event
+        if cb is not None:
+            cb(kind, **detail)
+
+    # ---- execution -------------------------------------------------------
+    def _source_elements(self, key: str, records: list) -> list[Element]:
+        if self.granularity == "batch":
+            tmin = min((r.t_generated for r in records),
+                       default=self.clock.now())
+            return [Element(key, records, tmin)]
+        return [Element(key, r, r.t_generated) for r in records]
+
+    def _feed(self, name: str, elem: Element, allowed: set | None,
+              boundary: list | None, defer_fire: bool = False) -> None:
+        """DFS one element through the graph.  Stages outside ``allowed``
+        park the element at the phase boundary instead of running.  With
+        ``defer_fire``, windows only ingest — firing waits for the in-order
+        frontier commit (:meth:`run_pre`)."""
+        if allowed is not None and name not in allowed:
+            boundary.append((name, elem))
+            return
+        op = self.ops[name]
+        if defer_fire and isinstance(op, _Window):
+            op.ingest(elem)
+            return
+        for out in op.process(elem):
+            for d in self.down[name]:
+                self._feed(d, out, allowed, boundary, defer_fire)
+
+    def _commit(self, stream: str, seq: int | None, batch_max: float) -> float:
+        """Record one batch's max event time on its stream's frontier.
+        ``seq=None`` (inline callers) commits immediately; otherwise the
+        frontier only advances over the contiguous seq prefix, so an
+        out-of-order-processed batch never pushes the watermark past a
+        still-inserting earlier batch.  A seq below the frontier (dispatched
+        before this plan was attached mid-run) folds in directly.  Returns
+        the new global watermark."""
+        with self._flock:
+            st = self._frontier.setdefault(
+                stream, {"next": 0, "pending": {},
+                         "committed": float("-inf")})
+            if seq is None or seq < st["next"]:
+                st["committed"] = max(st["committed"], batch_max)
+            else:
+                st["pending"][seq] = batch_max
+                while st["next"] in st["pending"]:
+                    st["committed"] = max(st["committed"],
+                                          st["pending"].pop(st["next"]))
+                    st["next"] += 1
+            if st["committed"] > self._committed_max:
+                self._committed_max = st["committed"]
+            return self._committed_max
+
+    def seed_frontier(self, stream_next_seq: dict[str, int]) -> None:
+        """Align the frontier with an engine whose per-stream seq counters
+        are already past zero (a plan attached mid-run): the next expected
+        seq per stream is the engine's, and anything older folds straight
+        into the committed watermark (see :meth:`_commit`)."""
+        with self._flock:
+            for stream, nxt in stream_next_seq.items():
+                self._frontier.setdefault(
+                    stream, {"next": int(nxt), "pending": {},
+                             "committed": float("-inf")})
+
+    def run_pre(self, key: str, records: list,
+                seq: int | None = None) -> _PreOut:
+        """The order-insensitive prefix (call WITHOUT the ordering ticket).
+        Window insertion happens inline; window *firing* happens here too,
+        but only up to the in-order frontier watermark.  The seq is
+        committed even when a stage raises — a poisoned batch must not
+        stall its stream's watermark forever."""
+        boundary: list = []
+        allowed = set(self._pre)
+        elems = self._source_elements(key, records)
+        primary = self._primary(key, records)
+        try:
+            for elem in elems:
+                if self.granularity == "batch" and self.source in allowed:
+                    primary = self._run_batch_source(
+                        elem, allowed, boundary, defer_fire=True)
+                else:
+                    self._feed(self.source, elem, allowed, boundary,
+                               defer_fire=True)
+        finally:
+            w = self._commit(
+                key, seq,
+                max((e.t_event for e in elems), default=float("-inf")))
+        for name in self._pre:
+            op = self.ops[name]
+            if isinstance(op, _Window):
+                for out in op.advance_watermark(w):
+                    for d in self.down[name]:
+                        self._feed(d, out, allowed, boundary, defer_fire=True)
+        return _PreOut(boundary, primary)
+
+    def run_post(self, key: str, pre_out: _PreOut | None, records: list):
+        """The ordered suffix (call UNDER the ordering ticket).  With
+        ``pre_out=None`` (no prefix ran) the whole graph runs here."""
+        if pre_out is None:
+            boundary = [(self.source, e)
+                        for e in self._source_elements(key, records)]
+        else:
+            boundary = pre_out.boundary
+        primary = self._primary(key, records)
+        for name, elem in boundary:
+            if self.granularity == "batch" and name == self.source:
+                primary = self._run_batch_source(elem, None, None)
+            else:
+                self._feed(name, elem, None, None)
+        return primary
+
+    def _run_batch_source(self, elem: Element, allowed: set | None,
+                          boundary: list | None, defer_fire: bool = False):
+        """Batch-granularity source, capturing its output as the primary
+        value (legacy ``AnalysisDAG.__call__`` returned exactly this) —
+        in whichever phase the source landed."""
+        op = self.ops[self.source]
+        if defer_fire and isinstance(op, _Window):
+            op.ingest(elem)
+            return None              # a deferred window has no output yet
+        outs = op.process(elem)
+        for out in outs:
+            for d in self.down[self.source]:
+                self._feed(d, out, allowed, boundary, defer_fire)
+        return outs[0].value if outs else None
+
+    def _primary(self, key: str, records: list):
+        """The engine ``Result.value`` for this partition: record count for
+        record-granularity plans (the batch-source output overrides it in
+        :meth:`run_post` for legacy plans)."""
+        return len(records)
+
+    def __call__(self, key: str, records: list):
+        """Whole graph inline (both phases) — usable directly as an
+        ``analyze_fn`` or for single-threaded tests."""
+        if self._pre:
+            pre_out = self.run_pre(key, records)
+            if not self._post:
+                return pre_out.primary
+            return self.run_post(key, pre_out, records)
+        return self.run_post(key, None, records)
+
+    def flush(self) -> None:
+        """Drain path (single-threaded, after executors stop): fire every
+        open window pane through the rest of the graph, topo order."""
+        for name in self._topo:
+            for out in self.ops[name].flush():
+                for d in self.down[name]:
+                    self._feed(d, out, None, None)
+
+    # ---- observability / state migration --------------------------------
+    def sinks(self) -> list[str]:
+        return [n for n, op in self.ops.items() if isinstance(op, Sink)]
+
+    def results(self, name: str) -> list[tuple[str, Any, float]]:
+        op = self.ops.get(name)
+        if not isinstance(op, Sink):
+            raise ValueError(f"{name!r} is not a Sink (sinks: {self.sinks()})")
+        return op.results()
+
+    def latest(self, name: str) -> dict[str, Any]:
+        op = self.ops.get(name)
+        if not isinstance(op, Sink):
+            raise ValueError(f"{name!r} is not a Sink (sinks: {self.sinks()})")
+        return op.latest()
+
+    def snapshot(self) -> dict:
+        """Keyed state of every stateful operator (windows), deep-copied."""
+        return {n: op.snapshot() for n, op in self.ops.items() if op.stateful}
+
+    def restore(self, state: dict) -> None:
+        for n, s in state.items():
+            if n not in self.ops:
+                raise ValueError(f"snapshot has unknown operator {n!r}")
+            self.ops[n].restore(s)
+
+    def accounting(self) -> dict:
+        """Per-window loss ledgers plus the global ``closed`` flag."""
+        per_op = {n: op.accounting() for n, op in self.ops.items()
+                  if isinstance(op, _Window)}
+        return {"windows": per_op,
+                "closed": all(a["closed"] for a in per_op.values())}
+
+    def __repr__(self):
+        return (f"ExecutionPlan(contract={self.contract!r}, "
+                f"pre={self._pre}, post={self._post}, "
+                f"granularity={self.granularity!r})")
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+class OperatorPipeline:
+    """Fluent builder for operator graphs (the successor of the legacy
+    ``workflow.Pipeline`` stage/then/branch verbs):
+
+        pipe = (OperatorPipeline()
+                .key_by("by_field", lambda k, r: k.split("/")[0])
+                .tumbling_window("win", size_s=1.0)
+                .aggregate("dmd", window_dmd)
+                .map("alert", alert_fn, ordering="ordered")
+                .sink("alerts"))
+
+    Each verb appends downstream of the cursor and advances it; ``after=``
+    attaches anywhere (fan-out), ``at()`` repositions the cursor.  The graph
+    is acyclic by construction; ``compile()`` validates and returns the
+    :class:`ExecutionPlan`.
+
+    ``granularity="record"`` (default) feeds the source one element per
+    ``StreamRecord``; ``"batch"`` feeds the whole micro-batch records list
+    as one element — for stages that are inherently per-batch (e.g. a
+    stateful StreamingDMD update).
+
+    Note the compiled plan owns the *live* operator instances: compiling
+    the same builder twice yields plans SHARING sink/window state.  Build a
+    fresh pipeline per Session (scenario factories do exactly this).
+    """
+
+    def __init__(self, granularity: str = "record"):
+        if granularity not in ("record", "batch"):
+            raise ValueError(f"granularity must be 'record' or 'batch', "
+                             f"got {granularity!r}")
+        self.granularity = granularity
+        self._ops: dict[str, Operator] = {}
+        self._down: dict[str, list[str]] = {}
+        self._source: str | None = None
+        self._cursor: str | None = None
+
+    def add(self, op: Operator, *, after: str | None = None) -> "OperatorPipeline":
+        """Attach ``op`` downstream of ``after`` (default: the cursor) and
+        move the cursor to it.  The first operator becomes the source."""
+        if op.name in self._ops:
+            raise ValueError(f"duplicate operator {op.name!r}")
+        if self._source is None:
+            if after is not None:
+                raise ValueError("the first operator is the source; it has "
+                                 "no upstream to attach after")
+        else:
+            parent = self._cursor if after is None else after
+            if parent not in self._ops:
+                raise ValueError(f"unknown operator {parent!r}")
+            self._down[parent].append(op.name)
+        self._ops[op.name] = op
+        self._down[op.name] = []
+        if self._source is None:
+            self._source = op.name
+        self._cursor = op.name
+        return self
+
+    def at(self, name: str) -> "OperatorPipeline":
+        """Move the cursor to an existing operator (fan-out topologies)."""
+        if name not in self._ops:
+            raise ValueError(f"unknown operator {name!r}")
+        self._cursor = name
+        return self
+
+    # ---- typed conveniences ---------------------------------------------
+    def map(self, name: str, fn, *, ordering: str = ORDERED,
+            parallelism: int | None = None, after: str | None = None):
+        return self.add(Map(name, fn, ordering=ordering,
+                            parallelism=parallelism), after=after)
+
+    def filter(self, name: str, predicate, *, ordering: str = UNORDERED,
+               parallelism: int | None = None, after: str | None = None):
+        return self.add(Filter(name, predicate, ordering=ordering,
+                               parallelism=parallelism), after=after)
+
+    def key_by(self, name: str, key_fn, *, after: str | None = None):
+        return self.add(KeyBy(name, key_fn), after=after)
+
+    def tumbling_window(self, name: str, size_s: float, *,
+                        allowed_lateness_s: float = 0.0,
+                        after: str | None = None):
+        return self.add(TumblingWindow(name, size_s,
+                                       allowed_lateness_s=allowed_lateness_s),
+                        after=after)
+
+    def sliding_window(self, name: str, size_s: float, slide_s: float, *,
+                       allowed_lateness_s: float = 0.0,
+                       after: str | None = None):
+        return self.add(SlidingWindow(name, size_s, slide_s,
+                                      allowed_lateness_s=allowed_lateness_s),
+                        after=after)
+
+    def aggregate(self, name: str, fn, *, ordering: str = KEYED,
+                  after: str | None = None):
+        return self.add(Aggregate(name, fn, ordering=ordering), after=after)
+
+    def sink(self, name: str, *, ordering: str = UNORDERED,
+             after: str | None = None):
+        return self.add(Sink(name, ordering=ordering), after=after)
+
+    # ---- introspection / compilation ------------------------------------
+    def edges(self) -> list[tuple[str, str]]:
+        return [(p, c) for p, downs in self._down.items() for c in downs]
+
+    def compile(self, clock: Clock | None = None,
+                granularity: str | None = None) -> ExecutionPlan:
+        if self._source is None:
+            raise ValueError("empty pipeline: add at least one operator")
+        return ExecutionPlan(self._ops, self._down, self._source, clock=clock,
+                             granularity=granularity or self.granularity)
+
+
+# ---------------------------------------------------------------------------
+# Legacy lowering
+# ---------------------------------------------------------------------------
+
+class _DagStageOp(Operator):
+    """One legacy ``AnalysisDAG`` stage as an (ordered, batch-granularity)
+    operator: run the callback, record non-None output in the DAG's own sink
+    (so ``dag.results()`` keeps working), fan out."""
+
+    def __init__(self, name: str, fn, dag):
+        super().__init__(name, ordering=ORDERED)
+        self.fn = fn
+        self.dag = dag
+
+    def process(self, elem: Element) -> list[Element]:
+        out = self.fn(elem.key, elem.value)
+        if out is None:
+            return []
+        self.dag.record(self.name, elem.key, out)
+        return [Element(elem.key, out, elem.t_event)]
+
+
+def lower_dag(dag, clock: Clock | None = None) -> ExecutionPlan:
+    """Compile a legacy :class:`repro.streaming.dag.AnalysisDAG` onto the
+    operator machinery: every stage ordered, whole-micro-batch elements,
+    sink values landing in the DAG's own per-stage sinks — byte-identical
+    stage results, same sticky per-stream scheduling."""
+    ops = {name: _DagStageOp(name, stage.fn, dag)
+           for name, stage in dag.stages.items()}
+    down = {name: list(stage.downstream) for name, stage in dag.stages.items()}
+    return ExecutionPlan(ops, down, dag.source, clock=clock,
+                         granularity="batch")

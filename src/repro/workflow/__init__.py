@@ -13,14 +13,31 @@ Public surface:
   that holds the p99 QoS target by scaling executors, adapting wire batch
   caps, and recovering from endpoint/executor failure.
 
+The analysis surface is the **stream-operator API**
+(:mod:`repro.streaming.operators`, re-exported here): an
+:class:`OperatorPipeline` of typed operators (``Map``/``Filter``/``KeyBy``/
+``TumblingWindow``/``SlidingWindow``/``Aggregate``/``Sink``), each with an
+ordering contract (``ordered`` | ``unordered`` | ``keyed``) and a
+parallelism hint, compiled to an :class:`ExecutionPlan` the engine honors —
+order-insensitive stages run intra-stream parallel, windows hold keyed
+state with snapshot/restore.  The older :class:`Pipeline`/``AnalysisDAG``
+callback API still works as a deprecated shim that compiles onto the same
+operators.
+
 The paper's Listing 1.1 C API (``broker_connect``/``broker_init``/
 ``broker_write``/``broker_finalize`` in :mod:`repro.core.api`) is kept as a
 thin, deprecated compatibility shim over :class:`Session`.
 """
 from repro.runtime.controller import ElasticityConfig
+from repro.streaming.operators import (Aggregate, ExecutionPlan, Filter,
+                                       KeyBy, Map, OperatorPipeline, Sink,
+                                       SlidingWindow, TumblingWindow,
+                                       WindowPane)
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.pipeline import Pipeline
 from repro.workflow.session import FieldHandle, Session
 
 __all__ = ["WorkflowConfig", "Session", "FieldHandle", "Pipeline",
-           "ElasticityConfig"]
+           "ElasticityConfig", "OperatorPipeline", "ExecutionPlan",
+           "Map", "Filter", "KeyBy", "TumblingWindow", "SlidingWindow",
+           "Aggregate", "Sink", "WindowPane"]

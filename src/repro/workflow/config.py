@@ -47,6 +47,10 @@ class WorkflowConfig:
     trigger_interval: float = 1.0
     min_batch: int = 2
     n_executors: int | None = None     # None: plan.n_executors
+    # how long an executor waits on a stream's ordering ticket before
+    # proceeding out of order (broken-chain escape hatch; counted in
+    # engine.metrics()["order_timeouts"])
+    order_wait_s: float = 5.0
     # -- control plane (telemetry bus + ElasticController) ----------------
     # ``elasticity.enabled=True`` makes the Session own a TelemetryBus, a
     # FailureDetector, and an ElasticController for the engine's lifetime.
@@ -96,6 +100,8 @@ class WorkflowConfig:
             raise ValueError("trigger_interval and flush_timeout_s must be > 0")
         if self.min_batch < 1:
             raise ValueError("min_batch must be >= 1")
+        if self.order_wait_s <= 0:
+            raise ValueError("order_wait_s must be > 0")
         if self.n_executors is not None and self.n_executors < 1:
             raise ValueError("n_executors must be >= 1")
         if self.clock not in _CLOCK:

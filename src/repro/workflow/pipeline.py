@@ -1,4 +1,13 @@
-"""Fluent builder for in-situ analysis DAGs.
+"""Fluent builder for in-situ analysis DAGs — **deprecated**.
+
+This is the legacy bare-callback builder.  New code should use the typed
+stream-operator API (:class:`repro.streaming.operators.OperatorPipeline`):
+it adds event-time windows, keyed state, and per-stage ordering contracts,
+and ``Session.attach_pipeline`` compiles THIS builder's output onto those
+same operators (with a DeprecationWarning), so both run on one engine path.
+Migration is mechanical: ``stage(n, f)``/``then(n, f)`` → ``.map(n, f)``,
+``branch(n, f)`` → ``.map(n, f, after=parent)``, sinks are explicit
+``.sink(n)`` operators instead of every stage recording implicitly.
 
 The paper's §6 future work ("more complex DAGs") is implemented by
 :class:`repro.streaming.dag.AnalysisDAG`; this builder is the workflow-level

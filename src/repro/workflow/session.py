@@ -22,6 +22,7 @@ field as one aggregated queue item per group ⇒ ≤ one wire frame per
 from __future__ import annotations
 
 import threading
+import warnings
 
 import numpy as np
 
@@ -34,6 +35,8 @@ from repro.runtime.telemetry import TelemetryBus
 from repro.streaming.dag import AnalysisDAG
 from repro.streaming.endpoint import make_endpoints
 from repro.streaming.engine import StreamEngine
+from repro.streaming.operators import (ExecutionPlan, OperatorPipeline,
+                                       lower_dag)
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.pipeline import Pipeline
 
@@ -142,6 +145,7 @@ class Session:
                              self.config.broker_config(), clock=self.clock)
         self.engine: StreamEngine | None = None
         self.dag: AnalysisDAG | None = None
+        self.exec_plan: ExecutionPlan | None = None   # compiled operator plan
         # control plane (built lazily with the engine when elasticity is on)
         self.telemetry: TelemetryBus | None = None
         self.detector: FailureDetector | None = None
@@ -170,22 +174,49 @@ class Session:
                 clock=self.clock)
             self._start_control_plane()
         else:
-            self.engine.analyze_fn = fn
+            self.engine.attach_dag(fn)      # also detaches any operator plan
+        self.exec_plan = None               # stale sinks must not shadow fn
+        self.dag = None
         return self.engine
 
-    def attach_pipeline(self, pipeline: Pipeline | AnalysisDAG) -> AnalysisDAG:
-        """Compile a Pipeline (or adopt a prebuilt AnalysisDAG) and route
-        every micro-batch through it."""
-        dag = pipeline.compile() if isinstance(pipeline, Pipeline) else pipeline
+    def attach_pipeline(self, pipeline):
+        """Route every micro-batch through an analysis pipeline.
+
+        Accepts the stream-operator API — an :class:`OperatorPipeline`
+        (compiled here against the Session clock) or a prebuilt
+        :class:`ExecutionPlan` — and, deprecated, the legacy
+        :class:`Pipeline` / :class:`AnalysisDAG`, which are lowered onto the
+        same operator machinery (``lower_dag``): identical stage results,
+        ``dag.results()`` keeps working, sink timestamps come from the
+        Session clock.  Returns the legacy DAG for legacy inputs (API
+        compatibility), the compiled plan otherwise."""
+        legacy = None
+        if isinstance(pipeline, OperatorPipeline):
+            plan = pipeline.compile(clock=self.clock)
+            self.dag = None                 # drop any stale legacy sinks
+        elif isinstance(pipeline, ExecutionPlan):
+            plan = pipeline
+            plan.bind_clock(self.clock)
+            self.dag = None
+        else:
+            warnings.warn(
+                "Pipeline/AnalysisDAG are deprecated: build an "
+                "OperatorPipeline (repro.streaming.operators) with typed "
+                "operators and per-stage ordering contracts instead",
+                DeprecationWarning, stacklevel=2)
+            legacy = pipeline.compile() if isinstance(pipeline, Pipeline) \
+                else pipeline
+            legacy.bind_clock(self.clock)
+            plan = lower_dag(legacy, clock=self.clock)
+            self.dag = legacy
         if self.engine is None:
             self.engine = StreamEngine.from_config(
-                self.config, self._handles(), dag, plan=self.plan,
+                self.config, self._handles(), plan, plan=self.plan,
                 clock=self.clock)
             self._start_control_plane()
-        else:
-            self.engine.attach_dag(dag)
-        self.dag = dag
-        return dag
+        self.engine.attach_plan(plan)
+        self.exec_plan = plan
+        return legacy if legacy is not None else plan
 
     def _start_control_plane(self) -> None:
         """With ``elasticity.enabled``, the Session owns the closed loop:
@@ -222,12 +253,17 @@ class Session:
         return self.broker.stats
 
     def results(self, stage: str | None = None) -> list:
-        """Engine results, or a DAG stage's sink when ``stage`` is given."""
+        """Engine results; with ``stage``, a legacy DAG stage's sink or an
+        operator plan's :class:`Sink` results."""
         if stage is not None:
-            if self.dag is None:
-                raise ValueError("no pipeline attached; results(stage=...) "
-                                 "needs attach_pipeline()")
-            return self.dag.results(stage)
+            if self.dag is not None:
+                # legacy pipeline: every stage has a DAG sink, and an
+                # unknown stage raises KeyError exactly as the old API did
+                return self.dag.results(stage)
+            if self.exec_plan is not None:
+                return self.exec_plan.results(stage)
+            raise ValueError("no pipeline attached; results(stage=...) "
+                             "needs attach_pipeline()")
         return self.engine.collect() if self.engine is not None else []
 
     def latency_stats(self) -> dict:

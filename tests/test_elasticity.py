@@ -17,7 +17,7 @@ from repro.core.grouping import GroupPlan
 from repro.runtime.clock import VirtualClock, ensure_clock
 from repro.runtime.controller import (Action, BatchCapPolicy,
                                       ElasticController, ElasticityConfig,
-                                      LatencyScalePolicy)
+                                      LatencyScalePolicy, TrendScalePolicy)
 from repro.runtime.fault import FailureDetector
 from repro.runtime.telemetry import TelemetryBus, TelemetrySnapshot
 from repro.streaming.endpoint import make_endpoints
@@ -295,6 +295,130 @@ def test_latency_policy_cooldown_and_bounds():
     at_max = TelemetrySnapshot(t=1.0, latency_p99=1.0, latency_n=10,
                                alive_executors=2)
     assert pol2.decide(at_max, []) == []
+
+
+def test_trend_policy_scales_before_the_breach():
+    """Predictive scale-up: a rising-but-not-yet-breaching p99 series whose
+    projection crosses the target within the horizon must trigger, while
+    flat sub-target series must not."""
+    el = ElasticityConfig(enabled=True, predictive=True, target_p99_s=1.0,
+                          trend_window=6, trend_horizon_s=2.0,
+                          cooldown_s=0.0, backlog_high=1_000_000)
+
+    def snaps(vals, t0=0.0, dt=0.1):
+        return [TelemetrySnapshot(t=t0 + i * dt, latency_p99=v,
+                                  latency_n=10, alive_executors=1)
+                for i, v in enumerate(vals)]
+
+    pol = TrendScalePolicy(el)
+    rising = snaps([0.3, 0.4, 0.5, 0.6, 0.7])      # slope 1.0/s, proj 2.7
+    acts = pol.decide(rising[-1], rising)
+    assert len(acts) == 1 and acts[0].kind == "scale_up"
+    assert acts[0].reason.startswith("projected")
+    assert rising[-1].latency_p99 < el.target_p99_s    # fired PRE-breach
+
+    flat = snaps([0.5] * 5)
+    assert TrendScalePolicy(el).decide(flat[-1], flat) == []
+    falling = snaps([0.9, 0.8, 0.7, 0.6, 0.5])
+    assert TrendScalePolicy(el).decide(falling[-1], falling) == []
+    # too little history for a slope: no action
+    short = snaps([0.3, 0.9])
+    assert TrendScalePolicy(el).decide(short[-1], short) == []
+
+
+def test_trend_policy_projects_backlog_growth():
+    el = ElasticityConfig(enabled=True, predictive=True, backlog_high=64,
+                          trend_window=5, trend_horizon_s=1.0, cooldown_s=10.0)
+    grow = [TelemetrySnapshot(t=i * 0.1, alive_executors=1,
+                              executors=(), held_records=i * 10)
+            for i in range(5)]                      # backlog 0..40, +100/s
+    pol = TrendScalePolicy(el)
+    acts = pol.decide(grow[-1], grow)
+    assert len(acts) == 1 and acts[0].kind == "scale_up"
+    assert "backlog" in acts[0].reason
+    # cooldown respected on the very next tick
+    assert pol.decide(grow[-1], grow) == []
+
+
+def test_predictive_plus_reactive_respect_max_executors():
+    """Both scale policies deciding off the same stale snapshot must not
+    double the step or push the fleet past max_executors: one scale-up per
+    tick, and _apply clamps to the cap."""
+    clk = VirtualClock()
+    clk.attach()
+    el = ElasticityConfig(enabled=True, interval_s=0.02, target_p99_s=0.01,
+                          min_executors=1, max_executors=3, scale_up_step=2,
+                          cooldown_s=0.0, predictive=True, trend_window=3,
+                          trend_horizon_s=1.0, backlog_high=1)
+    broker, eps, eng, bus, ctl = _mk_loop(n_exec=1, cost=0.05, el=el,
+                                          clock=clk)
+    assert len(ctl.policies) >= 3           # Trend + Latency + BatchCap
+    for s in range(60):                     # saturate: p99 + backlog breach
+        broker.write("f", 0, s, np.zeros(8, np.float32))
+    broker.flush()
+    for _ in range(30):
+        eng.trigger_once()
+        ctl.tick()
+        assert eng.metrics()["alive_executors"] <= el.max_executors, \
+            "scale-up overshot max_executors"
+        clk.sleep(0.02)
+    ups = [a for _, a in ctl.actions_log if a.kind == "scale_up"]
+    assert ups, "saturated pipeline must scale up"
+    assert eng.metrics()["alive_executors"] == el.max_executors
+    eng.drain_and_stop()
+    broker.finalize()
+    clk.detach()
+
+
+def test_trend_policy_validation():
+    with pytest.raises(ValueError, match="trend_window"):
+        ElasticityConfig(trend_window=2).validate()
+    with pytest.raises(ValueError, match="trend_horizon_s"):
+        ElasticityConfig(trend_horizon_s=0.0).validate()
+
+
+def test_predictive_spike_scales_before_reactive_on_virtual_time():
+    """The ROADMAP claim end-to-end: under a ramping load on virtual time,
+    the predictive controller's first scale-up lands EARLIER than the
+    reactive controller's, before the p99 target is breached."""
+    from repro.sim.scenario import LoadPhase, Scenario, ScenarioRunner
+
+    def run(predictive: bool):
+        wf = WorkflowConfig(
+            n_producers=4, n_groups=2, executors_per_group=2,
+            compress="none", backpressure="block", queue_capacity=4096,
+            trigger_interval=0.05, min_batch=4, n_executors=1,
+            max_batch_records=8, clock="virtual",
+            elasticity=ElasticityConfig(
+                enabled=True, interval_s=0.1, target_p99_s=1.5,
+                min_executors=1, max_executors=4, scale_up_step=2,
+                backlog_high=24, idle_scale_down_s=2.0, cooldown_s=0.3,
+                predictive=predictive, trend_window=5, trend_horizon_s=1.0))
+        sc = Scenario(workflow=wf,
+                      phases=(LoadPhase("low", 2.0, 5.0),
+                              LoadPhase("ramp1", 1.5, 20.0),
+                              LoadPhase("ramp2", 1.5, 40.0),
+                              LoadPhase("spike", 3.0, 60.0),
+                              LoadPhase("low", 2.0, 5.0)),
+                      seed=0, analysis_cost_s=0.008, payload_elems=64)
+        return ScenarioRunner(sc).run()
+
+    reactive, predictive = run(False), run(True)
+    def first_scale_up(trace):
+        ts = [t for t, d in trace.events_of("action")
+              if d["kind"] == "scale_up"]
+        return min(ts) if ts else float("inf")
+
+    t_pred, t_react = first_scale_up(predictive), first_scale_up(reactive)
+    assert t_pred < float("inf"), "predictive run never scaled"
+    assert t_pred < t_react, (
+        f"predictive first scale-up at {t_pred}s not earlier than "
+        f"reactive at {t_react}s")
+    assert any(d["reason"].startswith("projected")
+               for _t, d in predictive.events_of("action")
+               if d["kind"] == "scale_up")
+    # QoS: the predictive run must hold the target through the spike
+    assert predictive.phase_p99("spike") <= 1.5
 
 
 def test_slow_uniform_analysis_is_not_declared_dead():

@@ -173,6 +173,48 @@ def test_pipeline_builder_rejects_misuse():
         AnalysisDAG([Stage("a", None), Stage("a", None)], source="a")
 
 
+def test_pipeline_branch_after_at_fans_out_from_new_cursor():
+    """branch() after at() must fan out from the repositioned cursor's
+    parent, not the construction-order tail."""
+    pipe = (Pipeline()
+            .stage("src", lambda k, v: v)
+            .then("a", lambda k, v: v)
+            .then("deep", lambda k, v: v)
+            .at("a").branch("b", lambda k, v: v))     # sibling of a (src->b)
+    assert set(pipe.edges()) == {("src", "a"), ("a", "deep"), ("src", "b")}
+    # at() the source: branch still has no parent to fan out from
+    with pytest.raises(ValueError, match="no parent"):
+        pipe.at("src").branch("c", lambda k, v: v)
+
+
+def test_pipeline_at_cannot_introduce_cycle():
+    """The builder only ever attaches NEW nodes below existing ones, so a
+    back-edge is unreachable: re-adding an ancestor via then() after at()
+    hits the duplicate check, and the compiled DAG always validates
+    acyclic."""
+    pipe = (Pipeline()
+            .stage("a", lambda k, v: v)
+            .then("b", lambda k, v: v))
+    with pytest.raises(ValueError, match="duplicate stage"):
+        pipe.at("b").then("a", lambda k, v: v)        # would be the back-edge
+    pipe.at("b").then("c", lambda k, v: v)
+    pipe.compile()                                    # still acyclic
+
+    # a hand-assembled cyclic Stage list is rejected by AnalysisDAG itself
+    with pytest.raises(ValueError, match="cycle"):
+        AnalysisDAG([Stage("a", None, ["b"]), Stage("b", None, ["a"])],
+                    source="a")
+
+
+def test_pipeline_duplicate_names_rejected_across_all_verbs():
+    with pytest.raises(ValueError, match="duplicate stage"):
+        Pipeline().stage("x", None).then("y", None).branch("y", None)
+    with pytest.raises(ValueError, match="duplicate stage"):
+        Pipeline().stage("x", None).then("y", None).at("x").then("y", None)
+    with pytest.raises(ValueError, match="non-empty"):
+        Pipeline().stage("", None)
+
+
 def test_pipeline_runs_in_session():
     cfg = WorkflowConfig(n_producers=2, n_groups=1, executors_per_group=2,
                          compress="none", trigger_interval=0.05)
