@@ -1,0 +1,96 @@
+"""Atomic on-disk store for Session-level checkpoints.
+
+Reuses the commit protocol of ``repro.checkpoint.ckpt.CheckpointManager``
+(stage into a ``.tmp`` directory, write payload + manifest, touch a
+``COMMITTED`` marker, atomically rename, garbage-collect to ``keep``) —
+but without its jax dependency: session state is an opaque pickle (window
+panes, commit frontier, broker counters, WAL trim points), not a pytree of
+device arrays, and ``Session.restore()`` must work on machines that never
+import jax.
+
+A crash at ANY point leaves either the previous committed checkpoint or
+the new one — never a torn directory visible to ``load()`` (uncommitted
+leftovers are swept by the next save's gc).
+"""
+from __future__ import annotations
+
+import json
+import pickle
+import shutil
+from pathlib import Path
+
+_PREFIX = "ckpt_"
+_FORMAT = 1
+
+
+class SessionCheckpointStore:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # ---- helpers ---------------------------------------------------------
+    def _committed_ids(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith(_PREFIX) \
+                    and (p / "COMMITTED").exists():
+                try:
+                    out.append(int(p.name[len(_PREFIX):]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def _path(self, ckpt_id: int) -> Path:
+        return self.dir / f"{_PREFIX}{ckpt_id:08d}"
+
+    # ---- API -------------------------------------------------------------
+    def latest_id(self) -> int | None:
+        ids = self._committed_ids()
+        return ids[-1] if ids else None
+
+    def save(self, state: dict) -> int:
+        ids = self._committed_ids()
+        ckpt_id = (ids[-1] if ids else 0) + 1
+        tmp = self.dir / f".tmp_{_PREFIX}{ckpt_id:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        (tmp / "state.pkl").write_bytes(
+            pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL))
+        (tmp / "manifest.json").write_text(
+            json.dumps({"id": ckpt_id, "format": _FORMAT}))
+        (tmp / "COMMITTED").touch()
+        tmp.rename(self._path(ckpt_id))
+        self._gc()
+        return ckpt_id
+
+    def load(self, ckpt_id: int | None = None) -> tuple[dict, int]:
+        """Load (state, id) of the given or latest committed checkpoint.
+        Raises FileNotFoundError when the store has none (a fresh run)."""
+        if ckpt_id is None:
+            ckpt_id = self.latest_id()
+            if ckpt_id is None:
+                raise FileNotFoundError(
+                    f"no committed session checkpoint in {self.dir}")
+        path = self._path(ckpt_id)
+        if not (path / "COMMITTED").exists():
+            raise FileNotFoundError(f"checkpoint {ckpt_id} not committed")
+        manifest = json.loads((path / "manifest.json").read_text())
+        if manifest.get("format") != _FORMAT:
+            raise ValueError(f"unsupported checkpoint format "
+                             f"{manifest.get('format')!r}")
+        state = pickle.loads((path / "state.pkl").read_bytes())
+        return state, ckpt_id
+
+    def _gc(self) -> None:
+        committed = self._committed_ids()
+        for old in committed[:-self.keep]:
+            shutil.rmtree(self._path(old), ignore_errors=True)
+        for p in self.dir.iterdir():     # sweep torn/uncommitted leftovers
+            if p.is_dir() and (p.name.startswith(".tmp_") or (
+                    p.name.startswith(_PREFIX)
+                    and not (p / "COMMITTED").exists())):
+                shutil.rmtree(p, ignore_errors=True)

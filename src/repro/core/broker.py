@@ -32,14 +32,17 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.grouping import GroupPlan
-from repro.core.records import FieldSchema, StreamRecord, encode, encode_batch
+from repro.core.records import (FieldSchema, StreamRecord, decode, encode,
+                                encode_batch, wrap_seq)
 from repro.core.transport import Transport
 from repro.runtime.clock import Clock, ensure_clock
+from repro.runtime.wal import WalSegment, WalStore
 
 
 @dataclass
@@ -57,6 +60,13 @@ class BrokerConfig:
     # sender's mutable ``batch_cap``.
     max_batch_records: int = 32
     delta_encode: bool = False        # delta-vs-previous-step in batch frames
+    # Delivery guarantee.  "exactly-once" logs every record to a per-group
+    # write-ahead segment (runtime.wal) before it ships: the WAL replaces
+    # the sender queue, endpoints dedupe on frame seq, and unacked tails
+    # replay across endpoint failover and broker restarts.  Requires
+    # backpressure="block" (a drop policy contradicts the guarantee).
+    delivery: str = "at-most-once"    # at-most-once | exactly-once
+    wal_capacity_bytes: int = 16 << 20  # per-group WAL byte bound
 
 
 @dataclass
@@ -71,6 +81,14 @@ class BrokerStats:
     rerouted: int = 0
     bytes_sent: int = 0
     send_errors: int = 0
+    # frames given up on (at-most-once retry exhaustion, or an exactly-once
+    # drain whose endpoints were all dead past the flush timeout) — always
+    # paired with a RuntimeWarning, never silent
+    frames_abandoned: int = 0
+    # exactly-once replay traffic: frames/records re-shipped from the WAL
+    # after a failover or restart (also counted in frames_sent/sent)
+    frames_replayed: int = 0
+    records_replayed: int = 0
     queue_high_water: int = 0
     # Effective deployment shape: a connect-time plan that asks for more
     # groups than there are endpoints is silently shrunk; these two fields
@@ -80,7 +98,8 @@ class BrokerStats:
 
 
 _COUNTER_FIELDS = ("written", "sent", "frames_sent", "dropped", "rerouted",
-                   "bytes_sent", "send_errors")
+                   "bytes_sent", "send_errors", "frames_abandoned",
+                   "frames_replayed", "records_replayed")
 
 
 class _SenderStats:
@@ -89,7 +108,8 @@ class _SenderStats:
     it under ``lock``, so reads via ``snapshot()`` are exact."""
 
     __slots__ = ("lock", "written", "sent", "frames_sent", "dropped",
-                 "rerouted", "bytes_sent", "send_errors", "queue_high_water")
+                 "rerouted", "bytes_sent", "send_errors", "frames_abandoned",
+                 "frames_replayed", "records_replayed", "queue_high_water")
 
     def __init__(self):
         self.lock = threading.Lock()
@@ -119,7 +139,9 @@ class _GroupSender(threading.Thread):
     group to its designated endpoint)."""
 
     def __init__(self, group_id: int, endpoints: list[Transport], primary: int,
-                 cfg: BrokerConfig, clock: Clock | None = None):
+                 cfg: BrokerConfig, clock: Clock | None = None, *,
+                 wal: WalSegment | None = None,
+                 go: threading.Event | None = None):
         super().__init__(daemon=True, name=f"broker-g{group_id}")
         self.group_id = group_id
         self.endpoints = endpoints            # anything satisfying Transport
@@ -137,6 +159,28 @@ class _GroupSender(threading.Thread):
         self._stop_evt = threading.Event()
         self._sample_lock = threading.Lock()
         self._sample_ctr = 0
+        # -- exactly-once state ------------------------------------------
+        # In exactly-once mode the WAL *is* the queue: producers append,
+        # this thread ships through the segment's `shipped` pointer, so
+        # wire order == seq order by construction.
+        self.wal = wal
+        self._killed = False                  # simulated crash (kill())
+        # held shut while a restored Session rebuilds plan/ledger state;
+        # Broker.release() opens it (normal construction pre-sets it)
+        if go is None:                        # standalone sender: open gate
+            go = threading.Event()
+            go.set()
+        self._go = go
+        self._replay_horizon = 0
+        if wal is not None:
+            # entries adopted from a previous broker incarnation replay
+            # first; count acks at-or-below this horizon as replay traffic
+            self._replay_horizon = wal.last_seq
+            wal.rewind_shipped()
+
+    @property
+    def _exactly_once(self) -> bool:
+        return self.wal is not None
 
     def set_batch_cap(self, cap: int) -> int:
         self.batch_cap = max(1, int(cap))
@@ -159,7 +203,31 @@ class _GroupSender(threading.Thread):
         self.stats.add(dropped=len(evicted) if isinstance(evicted, list) else 1)
         return True
 
+    def _submit_eo(self, recs: list[StreamRecord]) -> int:
+        """Exactly-once admission: log each record to the WAL before it can
+        ship.  Blocks (bounded-WAL backpressure) until space frees.  A
+        *killed* sender still appends — the WAL outlives this broker
+        incarnation and its successor ships the record — but a gracefully
+        stopped one refuses new records.  ``written`` is not counted here:
+        in exactly-once mode it derives from the WAL itself (see
+        :meth:`stats_snapshot`), the one ledger producers share across
+        broker incarnations."""
+        n = 0
+        for rec in recs:
+            blob = encode(rec, compress=self.cfg.compress)
+            while True:
+                if self._stop_evt.is_set() and not self._killed:
+                    return n                  # graceful shutdown: refuse
+                if self.wal.try_append(blob, rec) is not None:
+                    break
+                self.clock.sleep(0.005)       # WAL full: bounded backpressure
+            self.stats.observe_depth(self.wal.unshipped_count())
+            n += 1
+        return n
+
     def submit(self, rec: StreamRecord) -> bool:
+        if self._exactly_once:
+            return self._submit_eo([rec]) == 1
         self.stats.add(written=1)
         self.stats.observe_depth(self.q.qsize())
         if self.cfg.backpressure == "block":
@@ -195,6 +263,8 @@ class _GroupSender(threading.Thread):
         frame per (field, group) guarantee.  Returns #records accepted."""
         if not recs:
             return 0
+        if self._exactly_once:
+            return self._submit_eo(list(recs))
         self.stats.add(written=len(recs))
         self.stats.observe_depth(self.q.qsize())
         item = list(recs)
@@ -226,14 +296,28 @@ class _GroupSender(threading.Thread):
 
     # ---- sender loop ---------------------------------------------------
     def run(self):
-        """Drain the queue in aggregated frames: each wake-up takes every
-        queued record (up to ``batch_cap``, re-read per wake-up so the
-        controller can retune it live) and ships them as one batched wire
-        frame, so a burst of writes pays framing/compression/bandwidth-model
-        cost once per batch, not once per record.  Queue items are single
-        records (``submit``) or record lists (``submit_batch``); an oversized
-        list is chunked at the cap."""
-        while not self._stop_evt.is_set() or not self.q.empty():
+        try:
+            if not self._go.is_set():
+                self.clock.wait_event(self._go)
+            if self._exactly_once:
+                self._run_wal()
+            else:
+                self._run_queue()
+        finally:
+            # leave the clock's schedule on exit so a virtual schedule never
+            # waits out the dead-participant watchdog for this thread
+            self.clock.detach()
+
+    def _run_queue(self):
+        """At-most-once drain: each wake-up takes every queued record (up to
+        ``batch_cap``, re-read per wake-up so the controller can retune it
+        live) and ships them as one batched wire frame, so a burst of writes
+        pays framing/compression/bandwidth-model cost once per batch, not
+        once per record.  Queue items are single records (``submit``) or
+        record lists (``submit_batch``); an oversized list is chunked at the
+        cap."""
+        while not self._killed \
+                and (not self._stop_evt.is_set() or not self.q.empty()):
             cap = max(1, self.batch_cap)
             item = self.clock.queue_get(self.q, timeout=0.05)
             if item is None:
@@ -256,10 +340,76 @@ class _GroupSender(threading.Thread):
                     self.stats.add(sent=len(chunk), frames_sent=1,
                                    bytes_sent=len(blob))
                 else:
-                    self.stats.add(dropped=len(chunk))  # retries exhausted
-        # leave the clock's schedule on exit so a virtual schedule never
-        # waits out the dead-participant watchdog for this thread
-        self.clock.detach()
+                    # retries exhausted: the frame is gone.  Loudly — silent
+                    # loss is indistinguishable from a broken pipeline.
+                    self.stats.add(dropped=len(chunk), frames_abandoned=1)
+                    warnings.warn(
+                        f"broker group {self.group_id}: abandoned a frame of "
+                        f"{len(chunk)} record(s) after {self.cfg.retry_limit} "
+                        "failed sends (at-most-once delivery: records are "
+                        "lost; use delivery='exactly-once' for replay)",
+                        RuntimeWarning, stacklevel=2)
+
+    def _run_wal(self):
+        """Exactly-once ship loop: fetch unshipped WAL entries in seq order,
+        wrap them with their seq range, and retry each frame until an
+        endpoint acks it — head-of-line blocking is intentional (acks are
+        contiguous).  Entries adopted from a dead broker incarnation (seq <=
+        the replay horizon) are replay traffic; the receive-side SeqLedger
+        makes re-sends idempotent."""
+        wal = self.wal
+        while not self._killed:
+            entries = wal.fetch_unshipped(max(1, self.batch_cap))
+            if not entries:
+                if self._stop_evt.is_set() and wal.unshipped_count() == 0:
+                    return
+                self.clock.sleep(0.02)
+                continue
+            if len(entries) == 1:
+                blob = entries[0].blob        # reuse the logged encoding
+                recs_n = 1
+            else:
+                recs = [e.rec if e.rec is not None else decode(e.blob)
+                        for e in entries]
+                blob = encode_batch(recs, compress=self.cfg.compress,
+                                    delta=self.cfg.delta_encode)
+                recs_n = len(recs)
+            wire = wrap_seq(entries[0].seq, recs_n, blob)
+            if not self._ship(wire, entries):
+                return                        # killed mid-retry
+
+    def _ship(self, wire: bytes, entries) -> bool:
+        """Retry one wrapped frame until acked (exactly-once never drops on
+        its own).  During a stop-drain with every endpoint dead we abandon
+        after the flush timeout — loudly — instead of hanging teardown."""
+        last = entries[-1].seq
+        n = len(entries)
+        deadline = None
+        while True:
+            if self._send(wire):
+                self.wal.ack(last)
+                replayed = sum(1 for e in entries
+                               if e.seq <= self._replay_horizon)
+                extra = {"frames_replayed": 1, "records_replayed": replayed} \
+                    if replayed else {}
+                self.stats.add(sent=n, frames_sent=1, bytes_sent=len(wire),
+                               **extra)
+                return True
+            if self._killed:
+                return False
+            if self._stop_evt.is_set():
+                if deadline is None:
+                    deadline = self.clock.now() + self.cfg.flush_timeout_s
+                elif self.clock.now() >= deadline:
+                    self.wal.ack(last)        # consume so teardown can exit
+                    self.stats.add(dropped=n, frames_abandoned=1)
+                    warnings.warn(
+                        f"broker group {self.group_id}: abandoned a frame of "
+                        f"{n} record(s) at shutdown — no endpoint recovered "
+                        f"within flush_timeout_s={self.cfg.flush_timeout_s}",
+                        RuntimeWarning, stacklevel=2)
+                    return True
+            self.clock.sleep(0.05)
 
     def _send(self, blob: bytes) -> bool:
         """Send to primary; on failure re-route to the next healthy endpoint
@@ -297,11 +447,38 @@ class _GroupSender(threading.Thread):
                 continue
         return None
 
+    def backlog(self) -> int:
+        """Records admitted but not yet handed to the wire."""
+        return self.wal.unshipped_count() if self._exactly_once \
+            else self.q.qsize()
+
+    def stats_snapshot(self) -> dict:
+        snap = self.stats.snapshot()
+        if self._exactly_once:
+            # written derives from the WAL (total ever appended to this
+            # group's segment): producers may append across broker
+            # incarnations — racing a restart — and the segment is the one
+            # ledger they all share, so it is the only exact count
+            snap["written"] = self.wal.points()["last"]
+        return snap
+
     def stop(self, timeout: float):
         self._stop_evt.set()
+        self._go.set()                        # never strand a paused sender
         # clock-mediated join: under VirtualClock a native join would stall
         # the schedule (the joiner is runnable but blocked outside the clock)
         self.clock.join(self, timeout=timeout)
+
+    def kill(self):
+        """Simulated crash: stop immediately without draining.  In
+        exactly-once mode unacked WAL entries survive in the (external)
+        WalStore and replay in the next broker incarnation; in at-most-once
+        mode queued records are lost, exactly as a real crash would lose
+        them."""
+        self._killed = True
+        self._stop_evt.set()
+        self._go.set()                        # never strand a paused sender
+        self.clock.join(self, timeout=5.0)
 
 
 class Broker:
@@ -309,7 +486,8 @@ class Broker:
 
     def __init__(self, plan: GroupPlan, endpoints: list[Transport],
                  cfg: BrokerConfig | None = None, *,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None, wal: WalStore | None = None,
+                 paused: bool = False):
         assert len(endpoints) >= plan.n_groups, (
             f"{plan.n_groups} groups need >= that many endpoints, "
             f"got {len(endpoints)}")
@@ -320,13 +498,35 @@ class Broker:
         self.planned_groups = plan.n_groups
         self.effective_groups = plan.n_groups
         self.schemas: dict[str, FieldSchema] = {}
+        self.wal = wal
+        if self.cfg.delivery == "exactly-once":
+            if self.cfg.backpressure != "block":
+                raise ValueError(
+                    "delivery='exactly-once' requires backpressure='block' "
+                    "(a drop policy contradicts the guarantee)")
+            if self.wal is None:
+                self.wal = WalStore(capacity_bytes=self.cfg.wal_capacity_bytes,
+                                    queue_capacity=self.cfg.queue_capacity)
+        elif self.wal is not None:
+            raise ValueError("a WalStore requires delivery='exactly-once'")
+        # `paused` holds the senders shut until release() — Session.restore
+        # uses it so replay cannot race the plan/ledger state restore
+        self._go = threading.Event()
+        if not paused:
+            self._go.set()
         self._senders: dict[int, _GroupSender] = {}
         for g in range(plan.n_groups):
             s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg,
-                             self.clock)
+                             self.clock,
+                             wal=self.wal.segment(g) if self.wal else None,
+                             go=self._go)
             self.clock.thread_started(s)
             s.start()
             self._senders[g] = s
+
+    def release(self) -> None:
+        """Open the sender gate of a ``paused=True`` broker (replay starts)."""
+        self._go.set()
 
     # ---- observability --------------------------------------------------
     @property
@@ -335,7 +535,7 @@ class Broker:
         out = BrokerStats(planned_groups=self.planned_groups,
                           effective_groups=self.effective_groups)
         for s in self._senders.values():
-            snap = s.stats.snapshot()
+            snap = s.stats_snapshot()
             for f in _COUNTER_FIELDS:
                 setattr(out, f, getattr(out, f) + snap[f])
             out.queue_high_water = max(out.queue_high_water,
@@ -348,8 +548,8 @@ class Broker:
         contribution to ``runtime.telemetry.TelemetrySnapshot``."""
         rows = []
         for g, s in sorted(self._senders.items()):
-            row = s.stats.snapshot()
-            row.update(group=g, queue_depth=s.q.qsize(),
+            row = s.stats_snapshot()
+            row.update(group=g, queue_depth=s.backlog(),
                        queue_capacity=self.cfg.queue_capacity,
                        batch_cap=s.batch_cap, primary=s.primary)
             rows.append(row)
@@ -383,20 +583,27 @@ class Broker:
         self.schemas[f"{schema.field_name}/g{schema.group_id}"] = schema
 
     def write(self, field_name: str, rank: int, step: int,
-              payload: np.ndarray) -> bool:
+              payload: np.ndarray, *, t: float | None = None) -> bool:
+        """``t`` overrides the event timestamp (default: the clock's now).
+        Producers that know their simulation time should pass it — event
+        time then survives backpressure stalls and crash-recovery delays,
+        keeping window membership identical across replays."""
         g = self.plan.group_of(rank)
         rec = StreamRecord(field_name=field_name, group_id=g, rank=rank,
                            step=step, payload=np.asarray(payload),
-                           t_generated=self.clock.now())
+                           t_generated=self.clock.now() if t is None
+                           else float(t))
         return self._senders[g].submit(rec)
 
-    def write_batch(self, field_name: str, ranks, steps, payloads) -> int:
+    def write_batch(self, field_name: str, ranks, steps, payloads, *,
+                    t: float | None = None) -> int:
         """Submit many records at once, one aggregated queue item per group,
         so each group ships the batch as (at most) one wire frame.  ``ranks``,
         ``steps`` and ``payloads`` are aligned sequences; returns #records
-        accepted (backpressure may drop whole per-group batches)."""
+        accepted (backpressure may drop whole per-group batches).  ``t``:
+        explicit event timestamp, as in :meth:`write`."""
         by_group: dict[int, list[StreamRecord]] = {}
-        now = self.clock.now()
+        now = self.clock.now() if t is None else float(t)
         for rank, step, payload in zip(ranks, steps, payloads):
             g = self.plan.group_of(rank)
             by_group.setdefault(g, []).append(
@@ -417,19 +624,30 @@ class Broker:
         failure episode cannot trigger a return while records written after
         the endpoints recovered are still in flight."""
         deadline = self.clock.now() + (timeout or self.cfg.flush_timeout_s)
+        if self.cfg.delivery == "exactly-once":
+            # the WAL is the exact in-flight ledger: flushed means every
+            # appended record is acked by an endpoint.  No early give-up —
+            # an endpoint may come back, and giving up early would lie.
+            while self.clock.now() < deadline:
+                if self.wal.unacked_records() == 0:
+                    return
+                self.clock.sleep(0.01)
+            return
         st = self.stats
         err_mark = st.send_errors
         progress_mark = st.sent + st.dropped
         while self.clock.now() < deadline:
             st = self.stats
             undelivered = st.written - st.sent - st.dropped
-            if undelivered <= 0 and all(s.q.empty() for s in self._senders.values()):
+            if undelivered <= 0 \
+                    and all(s.backlog() == 0 for s in self._senders.values()):
                 return
             delivered = st.sent + st.dropped
             if delivered != progress_mark:     # progress: restart error window
                 progress_mark = delivered
                 err_mark = st.send_errors
-            elif st.send_errors - err_mark >= self.cfg.retry_limit * max(undelivered, 1):
+            elif st.send_errors - err_mark >= \
+                    self.cfg.retry_limit * max(undelivered, 1):
                 return  # endpoints down and this flush's retries exhausted
             self.clock.sleep(0.01)
 
@@ -438,3 +656,30 @@ class Broker:
         for s in self._senders.values():
             s.stop(timeout=self.cfg.flush_timeout_s)
         return self.stats
+
+    # ---- exactly-once lifecycle -----------------------------------------
+    def kill(self) -> BrokerStats:
+        """Simulated hard crash: every sender stops without draining (see
+        _GroupSender.kill).  Returns the final stats of this incarnation so
+        a replacement broker can fold them into its accounting."""
+        for s in self._senders.values():
+            s.kill()
+        return self.stats
+
+    def commit_wal(self) -> dict[int, dict]:
+        """Checkpoint hook: mark everything appended so far as committed
+        (the caller guarantees the pipeline is quiescent, i.e. it is all
+        acked and applied) and trim.  Returns post-commit trim points."""
+        out = {}
+        for g, s in self._senders.items():
+            if s.wal is not None:
+                s.wal.commit(s.wal.last_seq)
+                out[g] = s.wal.points()
+        return out
+
+    def wal_points(self) -> dict[int, dict]:
+        """Read-only per-group WAL trim points ({} in at-most-once mode)."""
+        return self.wal.points() if self.wal is not None else {}
+
+    def unacked_records(self) -> int:
+        return self.wal.unacked_records() if self.wal is not None else 0

@@ -35,6 +35,7 @@ frames (shared blocks over the concatenated buffer) still decode.
 """
 from __future__ import annotations
 
+import struct
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -325,6 +326,29 @@ def decode_batch(data: bytes) -> list[StreamRecord]:
 
 def decode_any(data: bytes) -> list[StreamRecord]:
     """Tag-dispatching decode: single-record or batch frame -> list."""
+    if data[:1] == b"S":                    # seq-wrapped exactly-once frame
+        data = unwrap_seq(data)[2]
     if data[:1] in (b"B", b"C"):
         return decode_batch(data)
     return [decode(data)]
+
+
+# ---- exactly-once delivery framing (tag ``S``) -----------------------------
+# ``S`` + base_seq(u64) + count(u32) + inner frame.  The WAL sequence range
+# [base, base+count) travels in-band with the frame so the Transport protocol
+# is untouched; endpoints unwrap it for receive-side dedupe (runtime.wal).
+_SEQ_HDR = struct.Struct("!QI")
+
+
+def wrap_seq(base_seq: int, count: int, blob: bytes) -> bytes:
+    """Prefix a wire frame with its WAL seq range (exactly-once delivery)."""
+    return b"S" + _SEQ_HDR.pack(base_seq, count) + blob
+
+
+def unwrap_seq(data: bytes) -> tuple[int | None, int, bytes]:
+    """Split a seq-wrapped frame into (base_seq, count, inner).  Frames
+    without the ``S`` tag pass through as (None, 0, data)."""
+    if data[:1] != b"S":
+        return None, 0, data
+    base, count = _SEQ_HDR.unpack_from(data, 1)
+    return base, count, data[1 + _SEQ_HDR.size:]

@@ -83,6 +83,19 @@ def _recv_exact(conn: socket.socket, n: int) -> bytes | None:
     return buf
 
 
+def _answer(endpoint, typ: int, gid: int, blob: bytes) -> bool:
+    """Server-side frame semantics, shared by every loopback flavor: a
+    health probe answers the endpoint's health; a data frame is pushed and
+    acked (1) or rejected (0)."""
+    if typ == _T_HEALTH:
+        return bool(endpoint.healthy())
+    try:
+        endpoint.push(gid, blob)
+        return True
+    except Exception:
+        return False
+
+
 class LoopbackTransport:
     """Ship frames to an Endpoint over a localhost TCP socket.
 
@@ -136,14 +149,7 @@ class LoopbackTransport:
                 blob = _recv_exact(conn, ln) if ln else b""
                 if blob is None:
                     return
-                if typ == _T_HEALTH:
-                    ok = self.endpoint.healthy()
-                else:
-                    try:
-                        self.endpoint.push(gid, blob)
-                        ok = True
-                    except Exception:
-                        ok = False
+                ok = _answer(self.endpoint, typ, gid, blob)
                 conn.sendall(b"\x01" if ok else b"\x00")
         except OSError:
             pass
@@ -198,3 +204,49 @@ class LoopbackTransport:
             self._srv.close()
         except OSError:
             pass
+
+
+class VirtualLoopbackTransport:
+    """The loopback frame protocol on simulated time.
+
+    Chaos/replay scenarios want coverage of the real TCP framing path, but
+    socket I/O blocks outside a :class:`~repro.runtime.clock.VirtualClock`
+    schedule.  This transport packs each request into the exact byte frame
+    ``LoopbackTransport`` would put on the wire, re-parses it with the same
+    header codec, and answers it through the same server-side handler
+    (:func:`_answer`) — synchronously, in-process, deterministically.  Same
+    framing, same rejection semantics, zero sockets.  An optional
+    ``latency_s`` charges virtual time per round-trip."""
+
+    _ports = iter(range(50_000, 60_000))
+
+    def __init__(self, endpoint, clock=None, latency_s: float = 0.0):
+        from repro.runtime.clock import ensure_clock
+        self.endpoint = endpoint
+        self.clock = ensure_clock(clock)
+        self.latency_s = latency_s
+        self.port = next(self._ports)
+        self._closing = False
+
+    def _request(self, typ: int, group_id: int, blob: bytes) -> bool:
+        if self._closing:
+            raise ConnectionError("virtual loopback transport closed")
+        wire = _HDR.pack(typ, group_id, len(blob)) + blob
+        typ2, gid2, ln = _HDR.unpack(wire[:_HDR.size])  # server-side parse
+        payload = wire[_HDR.size:_HDR.size + ln]
+        if self.latency_s:
+            self.clock.sleep(self.latency_s)
+        return _answer(self.endpoint, typ2, gid2, payload)
+
+    def healthy(self) -> bool:
+        if self._closing:
+            return False
+        return self._request(_T_HEALTH, 0, b"")
+
+    def push(self, group_id: int, blob: bytes) -> None:
+        if not self._request(_T_DATA, group_id, blob):
+            raise ConnectionError(
+                f"endpoint behind virtual-loopback:{self.port} rejected frame")
+
+    def close(self) -> None:
+        self._closing = True

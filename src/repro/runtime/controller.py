@@ -245,10 +245,13 @@ class ElasticController(threading.Thread):
     def __init__(self, bus: TelemetryBus, cfg: ElasticityConfig | None = None,
                  *, engine=None, broker=None,
                  detector: FailureDetector | None = None, policies=None,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None, recovery=None):
         super().__init__(daemon=True, name="elastic-controller")
         self.bus = bus
         self.cfg = (cfg or ElasticityConfig(enabled=True)).validate()
+        # exactly-once wiring: a RecoverySupervisor (runtime.recovery) turns
+        # detector-driven failures into WAL replay instead of lossy reroute
+        self.recovery = recovery
         # one schedule for the whole loop: default to the bus's clock so a
         # virtual-time bus implies a virtual-time controller
         self.clock = ensure_clock(clock if clock is not None else bus.clock)
@@ -315,7 +318,9 @@ class ElasticController(threading.Thread):
         if node.kind == "endpoint" and self.broker is not None:
             idx = self._endpoint_index(node.name)
             if idx is not None:
-                self._apply(Action("reroute_endpoint", value=idx,
+                kind = "recover_endpoint" if self.recovery is not None \
+                    else "reroute_endpoint"
+                self._apply(Action(kind, value=idx,
                                    reason=f"{node.name} heartbeat lost"))
         elif node.kind == "executor" and self.engine is not None:
             idx = int(node.name.rsplit("-", 1)[-1])
@@ -364,9 +369,16 @@ class ElasticController(threading.Thread):
             elif action.kind == "set_batch_cap" and self.broker is not None:
                 self.broker.set_batch_cap(action.value, group=action.group)
             elif action.kind == "replace_executor" and self.engine is not None:
-                self.engine.replace_executor(action.value)
+                if self.recovery is not None:
+                    self.recovery.on_executor_failure(action.value,
+                                                      reason=action.reason)
+                else:
+                    self.engine.replace_executor(action.value)
             elif action.kind == "reroute_endpoint" and self.broker is not None:
                 self.broker.reroute_from_endpoint(action.value)
+            elif action.kind == "recover_endpoint" and self.recovery is not None:
+                self.recovery.on_endpoint_failure(action.value,
+                                                  reason=action.reason)
             self.actions_log.append((self.clock.now(), action))
         except Exception:
             self.apply_errors += 1

@@ -1,0 +1,76 @@
+"""Replay-based failure recovery for exactly-once sessions.
+
+The at-most-once control plane reacts to a dead endpoint by re-pointing its
+groups (``Broker.reroute_from_endpoint``) — whatever the dead endpoint had
+in flight is simply gone.  :class:`RecoverySupervisor` is the exactly-once
+counterpart the :class:`~repro.runtime.controller.ElasticController` calls
+instead: the same re-point, but because every unacked frame still sits in
+the broker's write-ahead log (``runtime.wal``), the group senders replay
+the tail to the new primary and the receive-side ``SeqLedger`` dedupes any
+frame the dead endpoint *did* manage to apply.  Nothing is lost, nothing is
+double-applied.
+
+Executor deaths route through here too so one component owns the recovery
+event log: chaos scenarios read ``events``/``summary()`` to assert that
+every injected death was answered by a replayed (not dropped) recovery.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.runtime.clock import Clock, ensure_clock
+
+
+class RecoverySupervisor:
+    """Turns detector-driven failures into replay instead of loss.
+
+    Holds references to the live broker/engine (a Session re-points
+    ``broker`` after a broker restart) and records every recovery action
+    with its virtual timestamp and the WAL backlog it found.
+    """
+
+    def __init__(self, *, broker=None, engine=None,
+                 clock: Clock | None = None):
+        self.broker = broker
+        self.engine = engine
+        self.clock = ensure_clock(clock)
+        self.events: list[tuple[float, str, dict]] = []
+        self._lock = threading.Lock()
+
+    def _record(self, kind: str, **detail) -> None:
+        with self._lock:
+            self.events.append((self.clock.now(), kind, detail))
+
+    # ---- failure handlers ------------------------------------------------
+    def on_endpoint_failure(self, idx: int, reason: str = "") -> int:
+        """A dead endpoint: re-point every group whose primary it was.  The
+        senders' in-flight retries then land on the new primary, and any
+        unacked WAL tail replays there (seq dedupe keeps it exact)."""
+        groups = self.broker.reroute_from_endpoint(idx) \
+            if self.broker is not None else 0
+        unacked = self.broker.unacked_records() \
+            if self.broker is not None else 0
+        self._record("endpoint_failover", endpoint=idx, groups=groups,
+                     unacked=unacked, reason=reason)
+        return groups
+
+    def on_executor_failure(self, idx: int, reason: str = "") -> None:
+        """A dead executor: replace it; its queued partitions are re-dealt
+        to survivors by the engine (no records were lost — they had already
+        left the WAL's responsibility once applied by an endpoint)."""
+        if self.engine is not None:
+            self.engine.replace_executor(idx)
+        self._record("executor_replaced", executor=idx, reason=reason)
+
+    def on_broker_restart(self, replayed: int) -> None:
+        """Log hook for ``Session.restart_broker`` (the restart itself is
+        orchestrated by the session, which owns broker construction)."""
+        self._record("broker_restarted", replay_backlog=replayed)
+
+    # ---- observability ---------------------------------------------------
+    def summary(self) -> dict:
+        with self._lock:
+            counts: dict[str, int] = {}
+            for _, kind, _ in self.events:
+                counts[kind] = counts.get(kind, 0) + 1
+            return counts

@@ -1,0 +1,322 @@
+"""Bounded write-ahead frame log for exactly-once broker delivery.
+
+The paper's broker streams simulation frames to cloud endpoints with no
+durability story: a dead endpoint (or a dead broker) simply loses whatever
+it had in flight.  This module adds the minimal machinery to make the
+broker -> endpoint -> engine path *exactly-once*:
+
+``WalSegment``
+    A per-group, bounded, in-memory log of encoded records.  Every record
+    is appended (with a monotonic sequence number) *before* it ships; the
+    segment tracks four pointers::
+
+        base < - trimmed - >  acked  <= shipped  <=  last
+                              committed (checkpoint frontier)
+
+    - ``shipped`` — highest seq handed to the group sender.  In
+      exactly-once mode the WAL *is* the send queue: the sender fetches
+      entries through this pointer, so there is no separate queue whose
+      ordering could diverge from the seq order.
+    - ``acked`` — highest seq contiguously applied by an endpoint.  On
+      endpoint failure/reroute or broker restart the sender rewinds
+      ``shipped`` to ``acked`` and replays the tail.
+    - ``committed`` — highest seq captured by a session checkpoint.  With
+      ``retain="commit"`` entries survive until both acked *and*
+      committed, so ``Session.restore()`` can replay everything after the
+      last checkpoint even though it was already delivered once (the
+      receive side dedupes on seq).
+
+    ``to_bytes``/``from_bytes`` give the segment a durable, CRC-framed
+    serialization; a torn final record (partial write at crash) is
+    discarded cleanly rather than corrupting the log.
+
+``WalStore``
+    The collection of per-group segments.  It outlives Broker and Session
+    objects: a restarted broker or a restored session adopts the same
+    store and replays its unacked/uncommitted tails.
+
+``SeqLedger``
+    The receive-side dedupe table, shared by every endpoint of a session
+    (a frame retried onto a *different* endpoint after failover must still
+    be recognized as a duplicate).  It records, per group, the highest
+    contiguously applied seq; replayed prefixes are skipped, never
+    double-applied.
+"""
+from __future__ import annotations
+
+import struct
+import threading
+import zlib
+from dataclasses import dataclass
+
+_MAGIC = b"WALSEG1\n"
+_HDR = struct.Struct("!IQQQ")      # group_id, base_seq, acked_seq, committed_seq
+_REC = struct.Struct("!QII")       # seq, payload_len, crc32(payload)
+
+_RETAIN = ("ack", "commit")
+
+
+@dataclass
+class WalEntry:
+    """One logged record: wire blob + (when still in memory) the decoded
+    record object, so the hot path never re-decodes what it just encoded."""
+    seq: int
+    blob: bytes
+    rec: object | None = None
+
+
+class WalSegment:
+    """Bounded per-group write-ahead log (see module docstring).
+
+    Thread-safe: producers append concurrently with the group sender
+    fetching and acking.  No method blocks — a full segment makes
+    ``try_append`` return ``None`` and the caller retries outside any lock
+    (a blocking append while holding a lock would deadlock VirtualClock's
+    one-runnable-thread schedule).
+    """
+
+    def __init__(self, group_id: int = 0, *, capacity_bytes: int = 16 << 20,
+                 max_pending: int = 256, retain: str = "ack"):
+        if retain not in _RETAIN:
+            raise ValueError(f"retain must be one of {_RETAIN}, got {retain!r}")
+        self.group_id = group_id
+        self.capacity_bytes = int(capacity_bytes)
+        self.max_pending = int(max_pending)
+        self.retain = retain
+        self._lock = threading.Lock()
+        self._entries: list[WalEntry] = []     # seqs base+1 .. last, contiguous
+        self._bytes = 0
+        self.base_seq = 0                      # everything <= base is trimmed
+        self.last_seq = 0
+        self.shipped_seq = 0
+        self.acked_seq = 0
+        self.committed_seq = 0
+
+    # ---- append / fetch / ack ------------------------------------------
+    def try_append(self, blob: bytes, rec: object | None = None) -> int | None:
+        """Log one encoded record; returns its seq, or None when the
+        segment is at capacity (caller backs off and retries)."""
+        with self._lock:
+            if self._entries and self._bytes + len(blob) > self.capacity_bytes:
+                return None
+            if self.last_seq - self.shipped_seq >= self.max_pending:
+                return None
+            self.last_seq += 1
+            self._entries.append(WalEntry(self.last_seq, blob, rec))
+            self._bytes += len(blob)
+            return self.last_seq
+
+    def fetch_unshipped(self, limit: int) -> list[WalEntry]:
+        """Hand the sender the next <= limit entries, advancing shipped."""
+        with self._lock:
+            if self.shipped_seq >= self.last_seq or limit < 1:
+                return []
+            lo = self.shipped_seq - self.base_seq          # list index
+            hi = min(lo + limit, self.last_seq - self.base_seq)
+            out = self._entries[lo:hi]
+            self.shipped_seq = self.base_seq + hi
+            return out
+
+    def rewind_shipped(self) -> int:
+        """Point the sender back at the acked frontier (endpoint failover /
+        broker restart): everything unacked re-ships.  Returns the number
+        of entries that will replay."""
+        with self._lock:
+            self.shipped_seq = self.acked_seq
+            return self.last_seq - self.shipped_seq
+
+    def ack(self, seq: int) -> None:
+        """Endpoint applied everything through ``seq`` (contiguously)."""
+        with self._lock:
+            self.acked_seq = max(self.acked_seq, min(seq, self.last_seq))
+            if self.shipped_seq < self.acked_seq:
+                self.shipped_seq = self.acked_seq
+            self._trim_locked()
+
+    def commit(self, seq: int) -> None:
+        """A session checkpoint captured state through ``seq``."""
+        with self._lock:
+            self.committed_seq = max(self.committed_seq,
+                                     min(seq, self.last_seq))
+            self._trim_locked()
+
+    def reset_acked_to_commit(self) -> int:
+        """Session restore: delivery beyond the last checkpoint is void
+        (the state it produced died with the session) — rewind acked and
+        shipped to the committed frontier so the tail replays.  Returns
+        the number of entries that will replay."""
+        with self._lock:
+            self.acked_seq = self.committed_seq
+            self.shipped_seq = self.committed_seq
+            return self.last_seq - self.shipped_seq
+
+    def _trim_locked(self) -> None:
+        point = self.acked_seq if self.retain == "ack" \
+            else min(self.acked_seq, self.committed_seq)
+        if point > self.base_seq:
+            drop = point - self.base_seq
+            for e in self._entries[:drop]:
+                self._bytes -= len(e.blob)
+            del self._entries[:drop]
+            self.base_seq = point
+
+    # ---- introspection --------------------------------------------------
+    def unshipped_count(self) -> int:
+        with self._lock:
+            return self.last_seq - self.shipped_seq
+
+    def unacked_count(self) -> int:
+        with self._lock:
+            return self.last_seq - self.acked_seq
+
+    def uncommitted_count(self) -> int:
+        with self._lock:
+            return self.last_seq - self.committed_seq
+
+    def bytes_used(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def points(self) -> dict:
+        with self._lock:
+            return {"base": self.base_seq, "last": self.last_seq,
+                    "shipped": self.shipped_seq, "acked": self.acked_seq,
+                    "committed": self.committed_seq, "bytes": self._bytes}
+
+    # ---- durable serialization -----------------------------------------
+    def to_bytes(self) -> bytes:
+        """CRC-framed snapshot of the retained tail + pointers."""
+        with self._lock:
+            parts = [_MAGIC, _HDR.pack(self.group_id, self.base_seq,
+                                       self.acked_seq, self.committed_seq)]
+            for e in self._entries:
+                parts.append(_REC.pack(e.seq, len(e.blob),
+                                       zlib.crc32(e.blob) & 0xFFFFFFFF))
+                parts.append(e.blob)
+            return b"".join(parts)
+
+    @classmethod
+    def from_bytes(cls, data: bytes, *, capacity_bytes: int = 16 << 20,
+                   max_pending: int = 256, retain: str = "ack") -> "WalSegment":
+        """Recover a segment from ``to_bytes`` output.  A torn tail — a
+        final record cut short or failing its CRC (partial write at crash)
+        — is discarded; everything before it survives intact."""
+        if data[:len(_MAGIC)] != _MAGIC:
+            raise ValueError("not a WAL segment (bad magic)")
+        off = len(_MAGIC)
+        if len(data) < off + _HDR.size:
+            raise ValueError("WAL segment header truncated")
+        group_id, base, acked, committed = _HDR.unpack_from(data, off)
+        off += _HDR.size
+        seg = cls(group_id, capacity_bytes=capacity_bytes,
+                  max_pending=max_pending, retain=retain)
+        entries: list[WalEntry] = []
+        expect = base + 1
+        while off + _REC.size <= len(data):
+            seq, ln, crc = _REC.unpack_from(data, off)
+            body = data[off + _REC.size: off + _REC.size + ln]
+            if len(body) < ln or (zlib.crc32(body) & 0xFFFFFFFF) != crc \
+                    or seq != expect:
+                break                      # torn/corrupt tail: stop here
+            entries.append(WalEntry(seq, body))
+            expect += 1
+            off += _REC.size + ln
+        seg._entries = entries
+        seg._bytes = sum(len(e.blob) for e in entries)
+        seg.base_seq = base
+        seg.last_seq = entries[-1].seq if entries \
+            else max(base, acked, committed)
+        # pointers never exceed what actually survived
+        seg.acked_seq = min(acked, seg.last_seq)
+        seg.committed_seq = min(committed, seg.last_seq)
+        seg.shipped_seq = seg.acked_seq
+        return seg
+
+
+class WalStore:
+    """Per-group WAL segments with shared limits.  Lives *outside* Broker
+    and Session so a restarted broker / restored session adopts the same
+    log and replays its tail."""
+
+    def __init__(self, *, capacity_bytes: int = 16 << 20,
+                 queue_capacity: int = 256, retain: str = "ack"):
+        if retain not in _RETAIN:
+            raise ValueError(f"retain must be one of {_RETAIN}, got {retain!r}")
+        self.capacity_bytes = int(capacity_bytes)
+        self.queue_capacity = int(queue_capacity)
+        self.retain = retain
+        self._lock = threading.Lock()
+        self._segs: dict[int, WalSegment] = {}
+
+    def segment(self, group_id: int) -> WalSegment:
+        with self._lock:
+            seg = self._segs.get(group_id)
+            if seg is None:
+                seg = WalSegment(group_id, capacity_bytes=self.capacity_bytes,
+                                 max_pending=self.queue_capacity,
+                                 retain=self.retain)
+                self._segs[group_id] = seg
+            return seg
+
+    def groups(self) -> list[int]:
+        with self._lock:
+            return sorted(self._segs)
+
+    def reset_for_restore(self) -> int:
+        """Rewind every segment's acked frontier to its committed frontier
+        (see WalSegment.reset_acked_to_commit).  Returns total replay size."""
+        return sum(self.segment(g).reset_acked_to_commit()
+                   for g in self.groups())
+
+    def unacked_records(self) -> int:
+        return sum(self.segment(g).unacked_count() for g in self.groups())
+
+    def uncommitted_records(self) -> int:
+        return sum(self.segment(g).uncommitted_count() for g in self.groups())
+
+    def points(self) -> dict[int, dict]:
+        return {g: self.segment(g).points() for g in self.groups()}
+
+
+class SeqLedger:
+    """Receive-side dedupe table: per group, the highest contiguously
+    applied seq.  One ledger is shared by all endpoints of a session so a
+    frame replayed onto a *different* endpoint after failover still reads
+    as a duplicate."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._applied: dict[int, int] = {}
+
+    def applied(self, group_id: int) -> int:
+        with self._lock:
+            return self._applied.get(group_id, 0)
+
+    def admit(self, group_id: int, base_seq: int, count: int) -> int:
+        """A frame carrying seqs [base, base+count) arrived: advance the
+        applied frontier and return how many *leading* records are
+        duplicates the endpoint must skip (count == whole-frame dup)."""
+        with self._lock:
+            ap = self._applied.get(group_id, 0)
+            top = base_seq + count - 1
+            if top <= ap:
+                return count
+            self._applied[group_id] = top
+            return max(0, ap - base_seq + 1)
+
+    def mark_consumed(self, group_id: int, base_seq: int, count: int) -> None:
+        """Consume seqs without applying them — used when an injected
+        silent drop eats a frame: the drop is acked upstream, so replay
+        must *not* resurrect it (it stays visible as audited loss)."""
+        with self._lock:
+            ap = self._applied.get(group_id, 0)
+            self._applied[group_id] = max(ap, base_seq + count - 1)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"applied": dict(self._applied)}
+
+    def restore(self, state: dict) -> None:
+        with self._lock:
+            self._applied = {int(k): int(v)
+                             for k, v in state["applied"].items()}

@@ -26,13 +26,18 @@ from __future__ import annotations
 
 import hashlib
 import json
+import struct
+import tempfile
 import threading
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.checkpoint.session_store import SessionCheckpointStore
 from repro.runtime.clock import VirtualClock
+from repro.runtime.wal import WalStore
 from repro.streaming.engine import percentile_sorted
+from repro.streaming.operators import WindowPane
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.session import Session
 
@@ -62,6 +67,14 @@ class Fault:
       ``drop_frames``        endpoint ``target`` silently discards the next
                              ``value`` accepted frames (acked, then lost —
                              invisible to the broker's retry logic)
+      ``kill_broker``        crash the broker in place; a fresh one adopts
+                             the same WAL and replays the unacked tail
+                             (requires delivery="exactly-once")
+      ``kill_session``       whole-session crash — broker, engine, endpoints
+                             all die mid-flight — then ``Session.restore``
+                             from the latest checkpoint + WAL tail replay
+                             (requires delivery="exactly-once" and an
+                             ``operators`` factory)
     """
 
     t: float
@@ -72,7 +85,8 @@ class Fault:
 
 _FAULT_KINDS = ("kill_executor", "add_executor", "inject_straggler",
                 "clear_straggler", "fail_endpoint", "recover_endpoint",
-                "drop_frames")
+                "drop_frames", "kill_broker", "kill_session")
+_KILL_KINDS = ("kill_broker", "kill_session")
 
 
 @dataclass(frozen=True)
@@ -105,6 +119,13 @@ class Scenario:
     flush_timeout_s: float = 120.0     # virtual seconds, costs nothing real
     operators: object = None           # () -> OperatorPipeline factory
     record_latency: bool = False
+    # take a Session.checkpoint() roughly every N virtual seconds of load
+    # (0 = never).  Exactly-once only.  ``checkpoint_dir`` pins the store
+    # on disk (CI artifact inspection); the default is a fresh temp dir per
+    # run, which re-running the same Scenario requires — a reused dir would
+    # make run #2 restore run #1's checkpoints.
+    checkpoint_every_s: float = 0.0
+    checkpoint_dir: str | None = None
 
     def validate(self) -> "Scenario":
         self.workflow.validate()
@@ -117,6 +138,21 @@ class Scenario:
                                  f"(expected one of {_FAULT_KINDS})")
             if f.t < 0:
                 raise ValueError(f"fault time must be >= 0, got {f.t}")
+        if self.checkpoint_every_s < 0:
+            raise ValueError("checkpoint_every_s must be >= 0")
+        kinds = {f.kind for f in self.faults}
+        if (kinds & set(_KILL_KINDS) or self.checkpoint_every_s) \
+                and self.workflow.delivery != "exactly-once":
+            raise ValueError(
+                "kill_broker/kill_session faults and checkpoint_every_s "
+                "require workflow.delivery='exactly-once' (there is nothing "
+                "to replay from in at-most-once mode)")
+        if ("kill_session" in kinds or self.checkpoint_every_s) \
+                and self.operators is None:
+            raise ValueError(
+                "kill_session and checkpoint_every_s require an operators "
+                "factory: Session.restore/checkpoint rebuild plan state "
+                "(window panes, sinks), which the callback path has none of")
         if self.operators is not None:
             if not callable(self.operators):
                 raise ValueError("operators must be a zero-arg factory "
@@ -185,6 +221,53 @@ class ScenarioTrace:
         return hashlib.sha256(self.to_jsonl().encode()).hexdigest()
 
 
+def _canon(v) -> bytes:
+    """Canonical bytes of one sink value — type-tagged so e.g. 1 and 1.0
+    and "1" cannot collide — for :func:`sink_digest`."""
+    if isinstance(v, np.ndarray):
+        return b"nd:" + str(v.dtype).encode() + str(v.shape).encode() \
+            + v.tobytes()
+    if isinstance(v, np.generic):
+        v = v.item()
+    if isinstance(v, bool):
+        return b"b1" if v else b"b0"
+    if isinstance(v, float):
+        return b"f:" + struct.pack("!d", v)
+    if isinstance(v, int):
+        return b"i:" + str(v).encode()
+    if isinstance(v, str):
+        return b"s:" + v.encode()
+    if isinstance(v, bytes):
+        return b"y:" + v
+    if isinstance(v, WindowPane):
+        return b"w:" + struct.pack("!dd", v.start, v.end) \
+            + _canon(v.key) + _canon(list(v.values))
+    if isinstance(v, (tuple, list)):
+        return b"l:" + b",".join(_canon(x) for x in v)
+    if isinstance(v, dict):
+        return b"d:" + b",".join(
+            _canon(k) + b"=" + _canon(v[k]) for k in sorted(v, key=repr))
+    return b"r:" + repr(v).encode()
+
+
+def sink_digest(plan) -> str:
+    """sha256 over every sink's per-key ordered value sequences, timestamps
+    excluded — the "did the cloud see exactly the same analysis results"
+    oracle.  A chaos run whose digest equals the fault-free same-seed run's
+    delivered byte-identical results despite every injected death."""
+    h = hashlib.sha256()
+    for name in sorted(plan.sinks()):
+        h.update(b"S:" + name.encode())
+        per_key: dict[str, list] = {}
+        for key, value, _t in plan.results(name):
+            per_key.setdefault(key, []).append(value)
+        for key in sorted(per_key):
+            h.update(b"K:" + key.encode())
+            for value in per_key[key]:
+                h.update(_canon(value))
+    return h.hexdigest()
+
+
 class ScenarioRunner:
     """Drives one :class:`Scenario` to completion under a seeded
     ``VirtualClock`` and returns its :class:`ScenarioTrace`."""
@@ -237,16 +320,64 @@ class ScenarioRunner:
             emit("analyze", stream=key, steps=[r.step for r in records])
             return len(records)
 
-        if sc.operators is not None:
-            sess = Session(sc.workflow, pipeline=sc.operators(), clock=clock)
+        # ---- durable artifacts shared across session incarnations -------
+        kinds = {f.kind for f in sc.faults}
+        durable = sc.checkpoint_every_s > 0 or "kill_session" in kinds
+        wal = ckpt_store = None
+        if sc.workflow.delivery == "exactly-once":
+            # retain="commit" keeps even acked entries until a checkpoint
+            # commits them, so a whole-session crash can replay the tail
+            wal = WalStore(capacity_bytes=sc.workflow.wal_capacity_bytes,
+                           queue_capacity=sc.workflow.queue_capacity,
+                           retain="commit" if durable else "ack")
+            if durable:
+                ckpt_store = SessionCheckpointStore(
+                    sc.checkpoint_dir
+                    or tempfile.mkdtemp(prefix="repro_scenario_ckpt_"))
+
+        def op_emit(kind, **d):
             # operator-level trace events: window fires / late drops / sinks
-            sess.exec_plan.on_event = \
-                lambda kind, **d: emit("op", event=kind, **d)
+            emit("op", event=kind, **d)
+
+        if sc.operators is not None:
+            sess = Session(sc.workflow, pipeline=sc.operators(), clock=clock,
+                           wal=wal, checkpoints=ckpt_store)
+            sess.exec_plan.on_event = op_emit
         else:
-            sess = Session(sc.workflow, analyze=analyze, clock=clock)
+            sess = Session(sc.workflow, analyze=analyze, clock=clock,
+                           wal=wal, checkpoints=ckpt_store)
+
+        # every live reference routes through the box: kill_session swaps
+        # the session (and its field handle) under the load loop's feet
+        box = {"sess": sess, "handle": None, "actions": [],
+               "recovery_counts": {}, "restores": 0}
+
+        def absorb_dead(old: Session) -> None:
+            # controller actions and recovery events die with a killed
+            # incarnation — fold them out before the crash
+            if old.controller is not None:
+                box["actions"].extend(old.controller.actions_log)
+            if old.recovery is not None:
+                for k, v in old.recovery.summary().items():
+                    box["recovery_counts"][k] = \
+                        box["recovery_counts"].get(k, 0) + v
+
+        def restore_session() -> None:
+            old = box["sess"]
+            absorb_dead(old)
+            old.kill()
+            new = Session.restore(sc.workflow, checkpoints=ckpt_store,
+                                  wal=wal, pipeline=sc.operators(),
+                                  clock=clock)
+            new.exec_plan.on_event = op_emit
+            box["sess"] = new
+            box["handle"] = new.open_field(sc.field_name,
+                                           shape=(sc.payload_elems,))
+            box["restores"] += 1
+
         try:
-            handle = sess.open_field(sc.field_name,
-                                     shape=(sc.payload_elems,))
+            box["handle"] = sess.open_field(sc.field_name,
+                                            shape=(sc.payload_elems,))
             n_ranks = sc.workflow.n_producers
             rng = np.random.RandomState(sc.seed)
             payloads = [rng.randn(sc.payload_elems).astype(np.float32)
@@ -264,7 +395,12 @@ class ScenarioRunner:
                     # other waiter targeting the same instant
                     clock.sleep_until(f.t)
                     try:
-                        self._apply_fault(sess, f)
+                        if f.kind == "kill_broker":
+                            box["sess"].restart_broker()
+                        elif f.kind == "kill_session":
+                            restore_session()
+                        else:
+                            self._apply_fault(box["sess"], f)
                         emit("fault", fault=f.kind, target=f.target,
                              value=f.value, ok=True)
                     except Exception as e:   # a mistargeted fault is a trace
@@ -278,37 +414,64 @@ class ScenarioRunner:
             clock.thread_started(injector)
             injector.start()
 
+            next_ckpt = sc.checkpoint_every_s or None
+
+            def maybe_checkpoint() -> None:
+                nonlocal next_ckpt
+                if next_ckpt is None or clock.now() < next_ckpt:
+                    return
+                try:
+                    cid = box["sess"].checkpoint(timeout=sc.flush_timeout_s)
+                    emit("checkpoint", ok=True, ckpt_id=cid)
+                except Exception as e:
+                    # a kill landing mid-quiesce aborts THIS checkpoint;
+                    # the run continues from the previous committed one
+                    emit("checkpoint", ok=False, error=type(e).__name__)
+                next_ckpt = clock.now() + sc.checkpoint_every_s
+
             step = 0
+            sched = 0.0   # nominal producer time: event timestamps follow
+            #               the simulation schedule, not the (crash-delayed)
+            #               virtual instant a write lands, so window
+            #               membership is identical across recovery replays
             for ph in sc.phases:
                 t0 = round(clock.now(), 9)
                 emit("phase", name=ph.name, rate_hz=ph.rate_hz,
                      duration_s=ph.duration_s)
                 n_steps = int(round(ph.duration_s * ph.rate_hz))
                 if n_steps == 0:
+                    sched += ph.duration_s
                     clock.sleep(ph.duration_s)
                 else:
                     period = ph.duration_s / n_steps
                     for _ in range(n_steps):
-                        accepted = handle.write_batch(
-                            step, payloads, ranks=list(range(n_ranks)))
+                        accepted = box["handle"].write_batch(
+                            step, payloads, ranks=list(range(n_ranks)),
+                            t=round(sched, 9))
                         emit("write", step=step, accepted=accepted)
                         step += 1
+                        sched += period
                         clock.sleep(period)
+                        maybe_checkpoint()
                 trace.phase_windows.append((ph.name, t0,
                                             round(clock.now(), 9)))
 
             clock.join(injector)       # let trailing faults land
-            sess.flush(timeout=sc.flush_timeout_s)
+            box["sess"].flush(timeout=sc.flush_timeout_s)
         finally:
-            sess.close()
+            box["sess"].close()
+        sess = box["sess"]
 
-        # post-run, single-threaded: merge the controller's action log and
-        # the engine's results into the trace at their virtual timestamps
+        # post-run, single-threaded: merge the controller's action log (all
+        # incarnations — killed sessions' logs were absorbed into the box)
+        # and the engine's results into the trace at their virtual timestamps
+        actions = list(box["actions"])
         if sess.controller is not None:
-            for t, a in sess.controller.actions_log:
-                trace.events.append((round(t, 9), "action",
-                                     {"kind": a.kind, "value": a.value,
-                                      "group": a.group, "reason": a.reason}))
+            actions.extend(sess.controller.actions_log)
+        for t, a in actions:
+            trace.events.append((round(t, 9), "action",
+                                 {"kind": a.kind, "value": a.value,
+                                  "group": a.group, "reason": a.reason}))
         for r in sess.results():
             trace.events.append((round(r.t_analyzed, 9), "result",
                                  {"stream": r.stream_key,
@@ -344,11 +507,31 @@ class ScenarioRunner:
             "virtual_duration_s": round(clock.now(), 9),
             "clock_wakeups": clock.wakeups,
         }
-        if sess.controller is not None:
-            trace.summary["controller_actions"] = \
-                sess.controller.summary()["actions"]
+        if sess.controller is not None or actions:
+            act_counts: dict[str, int] = {}
+            for _, a in actions:
+                act_counts[a.kind] = act_counts.get(a.kind, 0) + 1
+            trace.summary["controller_actions"] = act_counts
         if sess.exec_plan is not None:
             trace.summary["windows"] = sess.exec_plan.accounting()
+            # content oracle: per-sink, per-key ordered values (no times)
+            trace.summary["sink_digest"] = sink_digest(sess.exec_plan)
+        if sc.workflow.delivery == "exactly-once":
+            rec = dict(box["recovery_counts"])
+            if sess.recovery is not None:
+                for k, v in sess.recovery.summary().items():
+                    rec[k] = rec.get(k, 0) + v
+            trace.summary["recovery"] = {
+                "frames_abandoned": st.frames_abandoned,
+                "frames_replayed": st.frames_replayed,
+                "records_replayed": st.records_replayed,
+                "frames_deduped": sum(e["frames_deduped"] for e in eps),
+                "records_deduped": sum(e["records_deduped"] for e in eps),
+                "checkpoints": sum(1 for _, d in
+                                   trace.events_of("checkpoint") if d["ok"]),
+                "session_restores": box["restores"],
+                "events": rec,
+            }
         return trace
 
 

@@ -11,13 +11,15 @@ from __future__ import annotations
 import threading
 from collections import defaultdict, deque
 
-from repro.core.records import StreamRecord, decode_any
+from repro.core.records import StreamRecord, decode_any, unwrap_seq
 from repro.runtime.clock import Clock, ensure_clock
+from repro.runtime.wal import SeqLedger
 
 
 class Endpoint:
     def __init__(self, name: str = "ep0", *, inbound_bw: float | None = None,
-                 port: int = 6379, clock: Clock | None = None):
+                 port: int = 6379, clock: Clock | None = None,
+                 ledger: SeqLedger | None = None):
         self.name = name
         self.port = port
         self.inbound_bw = inbound_bw          # bytes/s, None = unmetered
@@ -28,6 +30,11 @@ class Endpoint:
         self.bytes_in = 0
         self.records_in = 0
         self.frames_in = 0            # wire frames (batched: frames < records)
+        # exactly-once receive side: a SeqLedger (shared by the whole
+        # endpoint fleet) dedupes replayed frames on their WAL seq range
+        self.ledger = ledger
+        self.frames_deduped = 0       # wholly-duplicate frames skipped
+        self.records_deduped = 0      # leading duplicate records skipped
         # fault injection: silently discard the next N accepted frames (the
         # scenario runner's lossy-transport model); counters make the loss
         # auditable so chaos tests can assert "no loss beyond what was
@@ -70,13 +77,28 @@ class Endpoint:
             lag = self._bw_debt / self.inbound_bw
             if lag > 1e-4:
                 self.clock.sleep(min(lag, 0.05))
-        recs = decode_any(blob)       # single-record or aggregated frame
+        base, count, payload = unwrap_seq(blob)   # exactly-once seq header
+        recs = decode_any(payload)    # single-record or aggregated frame
         with self._lock:
             if self._drop_frames > 0:
                 self._drop_frames -= 1
                 self.frames_dropped += 1
                 self.records_dropped += len(recs)
+                if base is not None and self.ledger is not None:
+                    # the drop is silent: the frame acks upstream, so its
+                    # seqs are consumed — replay must NOT resurrect injected
+                    # loss, or it would stop being auditable as loss
+                    self.ledger.mark_consumed(group_id, base, len(recs))
                 return
+            if base is not None and self.ledger is not None:
+                skip = self.ledger.admit(group_id, base, len(recs))
+                if skip:
+                    if skip == len(recs):
+                        self.frames_deduped += 1
+                    self.records_deduped += skip
+                    recs = recs[skip:]
+                if not recs:
+                    return            # whole frame was a replay duplicate
             for rec in recs:
                 self._streams[rec.key()].append(rec)
             self.bytes_in += len(blob)
@@ -117,34 +139,60 @@ class Endpoint:
                 "bytes_in": self.bytes_in, "frames_in": self.frames_in,
                 "frames_dropped": self.frames_dropped,
                 "records_dropped": self.records_dropped,
+                "frames_deduped": self.frames_deduped,
+                "records_deduped": self.records_deduped,
                 "ingest_rate_rps": self.ingest_rate()}
+
+    # ---- exactly-once checkpointing --------------------------------------
+    _AUDIT_FIELDS = ("bytes_in", "records_in", "frames_in", "frames_dropped",
+                     "records_dropped", "frames_deduped", "records_deduped")
+
+    def audit_snapshot(self) -> dict:
+        """The delivery-audit counters a Session checkpoint carries, so a
+        restored run's loss accounting stays closed across the crash."""
+        with self._lock:
+            return {f: getattr(self, f) for f in self._AUDIT_FIELDS}
+
+    def restore_audit(self, state: dict) -> None:
+        with self._lock:
+            for f in self._AUDIT_FIELDS:
+                setattr(self, f, int(state.get(f, 0)))
 
 
 def make_endpoints(n: int, *, inbound_bw: float | None = None,
                    base_port: int = 6379, transport: str = "inprocess",
-                   clock: Clock | None = None) -> list:
+                   clock: Clock | None = None,
+                   ledger: SeqLedger | None = None) -> list:
     """The paper's `struct CloudEndpoint endpoints[NUM_GROUPS]`.
 
     ``transport="inprocess"`` binds each CloudEndpoint straight to its
     Endpoint handle; ``"loopback"`` routes frames through a real localhost
-    TCP socket (same semantics, proves the Transport seam).  A virtual
-    ``clock`` requires the in-process transport — loopback's socket I/O
-    blocks outside any clock's schedule."""
-    from repro.core.transport import CloudEndpoint, LoopbackTransport
+    TCP socket (same semantics, proves the Transport seam).  Under a
+    virtual ``clock`` the loopback flavor swaps in
+    ``VirtualLoopbackTransport`` — the same frame protocol executed
+    synchronously on simulated time, so chaos/replay scenarios also cover
+    the TCP framing path.
+
+    All endpoints of one fleet share one ``SeqLedger`` (created here when
+    not supplied): exactly-once dedupe must recognize a frame replayed onto
+    a *different* endpoint after failover."""
+    from repro.core.transport import (CloudEndpoint, LoopbackTransport,
+                                      VirtualLoopbackTransport)
     clock = ensure_clock(clock)
-    if clock.virtual and transport != "inprocess":
-        raise ValueError("VirtualClock requires transport='inprocess' "
-                         f"(got {transport!r}): socket I/O cannot be "
-                         "scheduled on simulated time")
+    if ledger is None:
+        ledger = SeqLedger()
     eps = []
     for i in range(n):
         h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port,
-                     clock=clock)
+                     clock=clock, ledger=ledger)
         if transport == "inprocess":
             eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
                                      service_port=base_port, handle=h))
         elif transport == "loopback":
-            t = LoopbackTransport(h)
+            if clock.virtual:
+                t = VirtualLoopbackTransport(h, clock=clock)
+            else:
+                t = LoopbackTransport(h)
             eps.append(CloudEndpoint(service_ip="127.0.0.1",
                                      service_port=t.port, handle=h,
                                      transport=t))

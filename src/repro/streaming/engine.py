@@ -664,3 +664,53 @@ class StreamEngine:
             # every partition is done: fire still-open window panes through
             # the rest of the graph (single-threaded, deterministic order)
             self.plan.flush()
+
+    # ---- exactly-once recovery -------------------------------------------
+    def kill(self) -> None:
+        """Simulated hard crash: driver and executors stop immediately,
+        queued and held micro-batches are discarded (the replacement
+        session replays them from the broker WAL).  Contrast
+        :meth:`drain_and_stop`, which completes all in-flight work."""
+        self._stop.set()
+        with self._elock:
+            self._account_locked()
+            for e in self.executors:
+                e.alive = False
+                with e.q.mutex:
+                    e.q.queue.clear()
+                    e.q.not_empty.notify_all()
+                e.q.put(_POISON)
+        with self._tlock:
+            self._hold.clear()
+            self._hold_t.clear()
+        with self._done_cv:
+            self._done_cv.notify_all()
+        self.clock.join(self._driver, timeout=5.0)
+        for e in self.executors:
+            self.clock.join(e, timeout=5.0)
+
+    def state_snapshot(self) -> dict:
+        """Dispatch/ordering counters plus collected results — the engine's
+        share of a Session checkpoint.  Callers quiesce the pipeline first
+        (``Session.checkpoint`` does), so the snapshot is a consistent cut."""
+        with self._tlock:
+            next_seq = dict(self._next_seq)
+        with self._done_cv:
+            done_seq = dict(self._done_seq)
+        with self._rlock:
+            results = list(self.results)
+        return {"next_seq": next_seq, "done_seq": done_seq,
+                "results": results}
+
+    def restore_state(self, state: dict) -> None:
+        """Install a checkpointed :meth:`state_snapshot` into a fresh
+        engine: per-stream seq counters resume where the dead engine
+        stopped (keeping the plan's commit frontier consistent) and
+        pre-crash results survive."""
+        with self._tlock:
+            self._next_seq = dict(state["next_seq"])
+        with self._done_cv:
+            self._done_seq = dict(state["done_seq"])
+            self._done_cv.notify_all()
+        with self._rlock:
+            self.results = list(state["results"])

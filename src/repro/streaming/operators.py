@@ -220,6 +220,18 @@ class Sink(Operator):
             out[key] = value
         return out
 
+    # Sinks are checkpointed with the plan (exactly-once recovery restores
+    # collected results alongside window panes) even though ``stateful``
+    # stays False — that flag feeds the ordering contract, and a sink does
+    # not need keyed ordering.
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"results": list(self._results)}
+
+    def restore(self, state: dict) -> None:
+        with self._lock:
+            self._results = list(state["results"])
+
 
 class _Window(Operator):
     """Shared machinery for event-time windows: per-key panes under one
@@ -723,14 +735,37 @@ class ExecutionPlan:
         return op.latest()
 
     def snapshot(self) -> dict:
-        """Keyed state of every stateful operator (windows), deep-copied."""
-        return {n: op.snapshot() for n, op in self.ops.items() if op.stateful}
+        """Keyed state of every stateful operator (windows), deep-copied,
+        plus every sink's collected results (so an exactly-once restore
+        resumes with pre-crash outputs intact)."""
+        return {n: op.snapshot() for n, op in self.ops.items()
+                if op.stateful or isinstance(op, Sink)}
 
     def restore(self, state: dict) -> None:
         for n, s in state.items():
             if n not in self.ops:
                 raise ValueError(f"snapshot has unknown operator {n!r}")
             self.ops[n].restore(s)
+
+    def frontier_snapshot(self) -> dict:
+        """The per-stream in-order commit frontier (see :meth:`_commit`) —
+        captured by ``Session.checkpoint()`` so a restored run resumes
+        firing windows from the same watermark instead of re-waiting for
+        each stream's seq 0."""
+        with self._flock:
+            return {"streams": {k: {"next": st["next"],
+                                    "pending": dict(st["pending"]),
+                                    "committed": st["committed"]}
+                                for k, st in self._frontier.items()},
+                    "committed_max": self._committed_max}
+
+    def restore_frontier(self, state: dict) -> None:
+        with self._flock:
+            self._frontier = {k: {"next": int(st["next"]),
+                                  "pending": dict(st["pending"]),
+                                  "committed": st["committed"]}
+                              for k, st in state["streams"].items()}
+            self._committed_max = state["committed_max"]
 
     def accounting(self) -> dict:
         """Per-window loss ledgers plus the global ``closed`` flag."""

@@ -21,6 +21,7 @@ _BACKPRESSURE = ("block", "drop_oldest", "sample")
 _COMPRESS = ("none", "zstd", "int8", "int8+zstd")
 _TRANSPORT = ("inprocess", "loopback")
 _CLOCK = ("wall", "virtual")
+_DELIVERY = ("at-most-once", "exactly-once")
 
 
 @dataclass(frozen=True)
@@ -43,6 +44,17 @@ class WorkflowConfig:
     retry_limit: int = 3
     max_batch_records: int = 32
     delta_encode: bool = False
+    # -- delivery guarantee -----------------------------------------------
+    # "exactly-once" puts a bounded write-ahead segment (runtime.wal) under
+    # every group sender: records are logged before they ship, endpoints
+    # dedupe replayed frames on their seq range, and unacked tails replay
+    # across endpoint failover, broker restarts (Session.restart_broker)
+    # and whole-session crashes (Session.checkpoint / Session.restore).
+    # Requires backpressure="block" (a drop policy contradicts the
+    # guarantee) and delta_encode=False (replayed frames must decode
+    # independently of their neighbors).
+    delivery: str = "at-most-once"     # at-most-once | exactly-once
+    wal_capacity_bytes: int = 16 << 20 # per-group WAL byte bound
     # -- engine (micro-batching + executors) ------------------------------
     trigger_interval: float = 1.0
     min_batch: int = 2
@@ -60,7 +72,8 @@ class WorkflowConfig:
     # driver/executors, telemetry, controller, failure detector — on
     # deterministic simulated time (repro.runtime.clock.VirtualClock seeded
     # with ``clock_seed``): sleeps cost nothing real and same-seed runs
-    # replay identically.  Requires transport="inprocess".  The default
+    # replay identically.  transport="loopback" under a virtual clock uses
+    # VirtualLoopbackTransport (same framing, no sockets).  The default
     # "wall" keeps production behavior byte-identical to the pre-clock code.
     clock: str = "wall"                # wall | virtual
     clock_seed: int = 0                # VirtualClock wakeup tie-break seed
@@ -107,9 +120,20 @@ class WorkflowConfig:
         if self.clock not in _CLOCK:
             raise ValueError(f"clock must be one of {_CLOCK}, "
                              f"got {self.clock!r}")
-        if self.clock == "virtual" and self.transport != "inprocess":
-            raise ValueError("clock='virtual' requires transport='inprocess' "
-                             "(socket I/O cannot run on simulated time)")
+        if self.delivery not in _DELIVERY:
+            raise ValueError(f"delivery must be one of {_DELIVERY}, "
+                             f"got {self.delivery!r}")
+        if self.delivery == "exactly-once":
+            if self.backpressure != "block":
+                raise ValueError(
+                    "delivery='exactly-once' requires backpressure='block' "
+                    "(a drop policy contradicts the guarantee)")
+            if self.delta_encode:
+                raise ValueError(
+                    "delivery='exactly-once' requires delta_encode=False "
+                    "(replayed frames must decode independently)")
+        if self.wal_capacity_bytes < (1 << 12):
+            raise ValueError("wal_capacity_bytes must be >= 4096")
         self.elasticity.validate()
         return self
 
@@ -132,7 +156,9 @@ class WorkflowConfig:
                             flush_timeout_s=self.flush_timeout_s,
                             retry_limit=self.retry_limit,
                             max_batch_records=self.max_batch_records,
-                            delta_encode=self.delta_encode)
+                            delta_encode=self.delta_encode,
+                            delivery=self.delivery,
+                            wal_capacity_bytes=self.wal_capacity_bytes)
 
     @property
     def endpoint_count(self) -> int:
@@ -177,4 +203,6 @@ class WorkflowConfig:
                    flush_timeout_s=bcfg.flush_timeout_s,
                    retry_limit=bcfg.retry_limit,
                    max_batch_records=bcfg.max_batch_records,
-                   delta_encode=bcfg.delta_encode, **overrides).validate()
+                   delta_encode=bcfg.delta_encode, delivery=bcfg.delivery,
+                   wal_capacity_bytes=bcfg.wal_capacity_bytes,
+                   **overrides).validate()

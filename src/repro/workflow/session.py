@@ -26,12 +26,14 @@ import warnings
 
 import numpy as np
 
-from repro.core.broker import Broker, BrokerStats
+from repro.core.broker import _COUNTER_FIELDS, Broker, BrokerStats
 from repro.core.records import FieldSchema
 from repro.runtime.clock import Clock, ensure_clock
 from repro.runtime.controller import ElasticController
 from repro.runtime.fault import FailureDetector
+from repro.runtime.recovery import RecoverySupervisor
 from repro.runtime.telemetry import TelemetryBus
+from repro.runtime.wal import SeqLedger, WalStore
 from repro.streaming.dag import AnalysisDAG
 from repro.streaming.endpoint import make_endpoints
 from repro.streaming.engine import StreamEngine
@@ -74,12 +76,15 @@ class FieldHandle:
                 f"{out.shape} ({out.size} elems)")
         return out
 
-    def write(self, step: int, arr, *, rank: int | None = None) -> bool:
-        """Enqueue one snapshot; returns False if backpressure dropped it."""
+    def write(self, step: int, arr, *, rank: int | None = None,
+              t: float | None = None) -> bool:
+        """Enqueue one snapshot; returns False if backpressure dropped it.
+        ``t``: explicit event timestamp (default: session clock's now)."""
         r = self.rank if rank is None else rank
-        return self.broker.write(self.name, r, step, self._coerce(arr))
+        return self.broker.write(self.name, r, step, self._coerce(arr), t=t)
 
-    def write_batch(self, steps, arrs, *, ranks=None) -> int:
+    def write_batch(self, steps, arrs, *, ranks=None,
+                    t: float | None = None) -> int:
         """Enqueue many snapshots as one aggregated batch.
 
         ``steps`` is a scalar (broadcast) or a sequence aligned with
@@ -100,7 +105,8 @@ class FieldHandle:
             raise ValueError(
                 f"write_batch needs aligned sequences: {len(steps)} steps, "
                 f"{len(ranks)} ranks, {n} payloads")
-        return self.broker.write_batch(self.name, list(ranks), list(steps), arrs)
+        return self.broker.write_batch(self.name, list(ranks), list(steps),
+                                       arrs, t=t)
 
     def __repr__(self):
         return (f"FieldHandle({self.name!r}, shape={self.shape}, "
@@ -112,7 +118,9 @@ class Session:
 
     def __init__(self, config: WorkflowConfig | None = None, *,
                  endpoints: list | None = None, analyze=None, pipeline=None,
-                 clock: Clock | None = None):
+                 clock: Clock | None = None, wal: WalStore | None = None,
+                 checkpoints=None, ledger: SeqLedger | None = None,
+                 _paused: bool = False):
         self.config = (config or WorkflowConfig()).validate()
         self.plan = self.config.group_plan()
         # one time source for every layer: an explicit ``clock`` wins,
@@ -129,6 +137,21 @@ class Session:
             # runnable set and freeze the schedule.
             self._attached_thread = threading.current_thread()
             self.clock.attach(self._attached_thread)
+        # -- exactly-once durability (no-ops in at-most-once mode) --------
+        self._ckpt_store = checkpoints
+        exactly_once = self.config.delivery == "exactly-once"
+        if exactly_once:
+            if ledger is None:
+                ledger = SeqLedger()
+            if wal is None:
+                wal = WalStore(capacity_bytes=self.config.wal_capacity_bytes,
+                               queue_capacity=self.config.queue_capacity,
+                               retain="commit" if checkpoints is not None
+                               else "ack")
+        self._ledger = ledger
+        self._wal = wal
+        self._stats_base: dict[str, int] = {}
+        self.recovery: RecoverySupervisor | None = None
         if endpoints is not None:
             self.endpoints = list(endpoints)
             self._owns_endpoints = False
@@ -139,10 +162,11 @@ class Session:
                 inbound_bw=self.config.inbound_bw,
                 base_port=self.config.base_port,
                 transport=self.config.transport,
-                clock=self.clock)
+                clock=self.clock, ledger=self._ledger)
             self._owns_endpoints = True
         self.broker = Broker(self.plan, self.endpoints,
-                             self.config.broker_config(), clock=self.clock)
+                             self.config.broker_config(), clock=self.clock,
+                             wal=self._wal, paused=_paused)
         self.engine: StreamEngine | None = None
         self.dag: AnalysisDAG | None = None
         self.exec_plan: ExecutionPlan | None = None   # compiled operator plan
@@ -233,9 +257,16 @@ class Session:
         self.detector = FailureDetector(
             timeout_s=el.heartbeat_timeout_s,
             straggler_factor=el.straggler_factor, clock=self.clock)
+        if self.config.delivery == "exactly-once":
+            # endpoint/executor death routes through the supervisor: the
+            # same re-point, but with WAL replay behind it instead of loss
+            self.recovery = RecoverySupervisor(broker=self.broker,
+                                               engine=self.engine,
+                                               clock=self.clock)
         self.controller = ElasticController(
             self.telemetry, el, engine=self.engine, broker=self.broker,
-            detector=self.detector, clock=self.clock)
+            detector=self.detector, clock=self.clock,
+            recovery=self.recovery)
         self.controller.start()
 
     # ---- producer-side API ----------------------------------------------
@@ -250,7 +281,26 @@ class Session:
     # ---- observability ---------------------------------------------------
     @property
     def stats(self) -> BrokerStats:
-        return self.broker.stats
+        """Broker counters, folded with whatever previous broker/session
+        incarnations accumulated before a crash (exactly-once restarts)."""
+        return self._merge_base(self.broker.stats)
+
+    def _merge_base(self, st: BrokerStats) -> BrokerStats:
+        for f, v in self._stats_base.items():
+            setattr(st, f, getattr(st, f) + v)
+        return st
+
+    def _absorb_stats(self, stats: BrokerStats) -> None:
+        """Fold a dead incarnation's counters into the session base.
+
+        In exactly-once mode ``written`` is excluded: it derives from the
+        WAL segments the successor broker shares, so the live broker's
+        count already covers the dead incarnation's writes."""
+        for f in _COUNTER_FIELDS:
+            if f == "written" and self._wal is not None:
+                continue
+            self._stats_base[f] = self._stats_base.get(f, 0) \
+                + getattr(stats, f)
 
     def results(self, stage: str | None = None) -> list:
         """Engine results; with ``stage``, a legacy DAG stage's sink or an
@@ -272,6 +322,153 @@ class Session:
     def flush(self, timeout: float | None = None) -> None:
         self.broker.flush(timeout=timeout)
 
+    # ---- exactly-once: checkpoint / crash / restore ----------------------
+    def _quiesce_engine(self, timeout: float = 60.0) -> None:
+        """Run the pipeline dry: force-trigger until nothing is pending on
+        the endpoints, held in the engine, queued, or being analyzed.  A
+        checkpoint taken here is a consistent cut — every record the broker
+        acked has fully traversed the plan."""
+        eng = self.engine
+
+        def idle() -> bool:
+            if self._closed:
+                raise RuntimeError("session killed during checkpoint quiesce")
+            eng.trigger_once(force=True)
+            if any(h.pending() for h in self._handles()):
+                return False
+            m = eng.metrics()
+            return (eng.held() == 0 and m["queued"] == 0
+                    and all(e["current_key"] is None
+                            for e in m["executors"]))
+
+        if not self.clock.wait(idle, timeout=timeout, poll=0.01):
+            raise TimeoutError(
+                "pipeline did not quiesce within the checkpoint timeout")
+
+    def checkpoint(self, timeout: float = 60.0) -> int:
+        """Quiesce and capture a consistent cut of the whole run — plan
+        state (window panes, watermarks, loss ledgers, sink results), the
+        per-stream commit frontier, engine seq counters + results, broker
+        counters and WAL trim points, the receive-side seq ledger, and the
+        endpoints' audit counters — into the checkpoint store.  The WAL is
+        marked committed through the cut only after the store commits, so a
+        crash during save still restores from the previous checkpoint."""
+        if self._ckpt_store is None:
+            raise ValueError("no checkpoint store: pass "
+                             "checkpoints=SessionCheckpointStore(dir)")
+        if self._wal is None or self.exec_plan is None:
+            raise ValueError("checkpoint() requires delivery='exactly-once' "
+                             "and an attached operator pipeline")
+        self.broker.flush(timeout=timeout)
+        self._quiesce_engine(timeout=timeout)
+        st = self.stats
+        state = {
+            "config": self.config.to_dict(),
+            "plan": self.exec_plan.snapshot(),
+            "frontier": self.exec_plan.frontier_snapshot(),
+            "engine": self.engine.state_snapshot(),
+            "stats": {f: getattr(st, f) for f in _COUNTER_FIELDS},
+            "wal": self.broker.wal_points(),
+            "ledger": self._ledger.snapshot(),
+            "endpoints": [h.audit_snapshot() for h in self._handles()],
+        }
+        cid = self._ckpt_store.save(state)
+        self.broker.commit_wal()
+        return cid
+
+    def kill(self) -> None:
+        """Simulated whole-session crash: controller, broker senders, and
+        engine threads stop immediately; queued work and in-memory state
+        die.  The durable artifacts — the WalStore and checkpoint store
+        passed to __init__ — survive for :meth:`restore`."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.controller is not None:
+            self.controller.stop()
+        self.broker.kill()
+        if self.engine is not None:
+            self.engine.kill()
+        if self._owns_endpoints:
+            for ep in self.endpoints:
+                close = getattr(ep, "close", None)
+                if close is not None:
+                    close()
+        self.clock.detach(self._attached_thread)
+
+    def restart_broker(self) -> Broker:
+        """Crash-and-replace the broker in place (exactly-once only): the
+        dead broker's senders stop without draining, a fresh Broker adopts
+        the same WalStore, and each group's unacked tail replays through
+        the endpoints (receive-side dedupe keeps delivery exact)."""
+        if self._wal is None:
+            raise ValueError("restart_broker() requires "
+                             "delivery='exactly-once' (the WAL is what "
+                             "makes a broker restart lossless)")
+        old = self.broker
+        self._absorb_stats(old.kill())
+        replay = self._wal.unacked_records()
+        self.broker = Broker(self.plan, self.endpoints,
+                             self.config.broker_config(), clock=self.clock,
+                             wal=self._wal)
+        for schema in old.schemas.values():
+            self.broker.register(schema)
+        for h in self._fields.values():
+            h.broker = self.broker
+        if self.telemetry is not None:
+            self.telemetry.broker = self.broker
+        if self.controller is not None:
+            self.controller.broker = self.broker
+        if self.recovery is not None:
+            self.recovery.broker = self.broker
+            self.recovery.on_broker_restart(replay)
+        return self.broker
+
+    @classmethod
+    def restore(cls, config: WorkflowConfig | None = None, *, checkpoints,
+                wal: WalStore, pipeline, clock: Clock | None = None,
+                endpoints: list | None = None) -> "Session":
+        """Rebuild a crashed exactly-once run: load the latest committed
+        checkpoint (if any), rewind the WAL's acked frontier to its commit
+        frontier, and start a Session whose broker replays the uncommitted
+        tail through a freshly-built pipeline restored to the checkpoint
+        cut — windows resume mid-pane, sinks keep pre-crash results, and
+        the loss ledger stays closed across the crash."""
+        try:
+            state, _cid = checkpoints.load()
+        except FileNotFoundError:
+            state = None                   # crash before the 1st checkpoint
+        if config is None:
+            if state is None:
+                raise ValueError("no checkpoint and no config: cannot "
+                                 "reconstruct the workflow")
+            config = WorkflowConfig.from_dict(state["config"])
+        ledger = SeqLedger()
+        if state is not None:
+            ledger.restore(state["ledger"])
+        wal.reset_for_restore()            # tail past the commit replays
+        sess = cls(config, pipeline=pipeline, clock=clock, wal=wal,
+                   checkpoints=checkpoints, ledger=ledger,
+                   endpoints=endpoints, _paused=True)
+        try:
+            if state is not None:
+                sess.exec_plan.restore(state["plan"])
+                sess.exec_plan.restore_frontier(state["frontier"])
+                sess.engine.restore_state(state["engine"])
+                for h, snap in zip(sess._handles(), state["endpoints"]):
+                    h.restore_audit(snap)
+                sess._stats_base = dict(state["stats"])
+            # ``written`` derives from the shared WAL segments (total ever
+            # appended, across every incarnation), so the new broker already
+            # reports the pre-crash writes — carrying the checkpoint's count
+            # forward would double them
+            sess._stats_base["written"] = 0
+        except Exception:
+            sess.kill()
+            raise
+        sess.broker.release()              # state is in place: replay
+        return sess
+
     # ---- lifecycle --------------------------------------------------------
     def close(self) -> BrokerStats:
         """Ordered teardown: controller.stop() (quiesce the control plane so
@@ -279,11 +476,11 @@ class Session:
         engine.drain_and_stop() → transport close.  Idempotent; returns the
         final broker stats."""
         if self._closed:
-            return self.broker.stats
+            return self._merge_base(self.broker.stats)
         self._closed = True
         if self.controller is not None:
             self.controller.stop()
-        stats = self.broker.finalize()
+        stats = self._merge_base(self.broker.finalize())
         if self.engine is not None:
             self.engine.drain_and_stop()
         if self._owns_endpoints:

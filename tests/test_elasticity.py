@@ -189,8 +189,9 @@ def test_workflow_config_clock_knob():
     assert WorkflowConfig.from_dict(d) == cfg
     with pytest.raises(ValueError, match="clock"):
         WorkflowConfig(clock="sundial").validate()
-    with pytest.raises(ValueError, match="inprocess"):
-        WorkflowConfig(clock="virtual", transport="loopback").validate()
+    # virtual time now composes with the loopback transport (the frames go
+    # through VirtualLoopbackTransport instead of real sockets)
+    WorkflowConfig(clock="virtual", transport="loopback").validate()
     assert not WorkflowConfig().make_clock().virtual
 
 
