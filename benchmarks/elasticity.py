@@ -39,8 +39,11 @@ import json
 import time
 from pathlib import Path
 
+import math
+
 import numpy as np
 
+from repro.cloud import DEFAULT_CATALOG
 from repro.sim.scenario import LoadPhase, Scenario, ScenarioRunner
 from repro.streaming.engine import percentile_sorted
 from repro.workflow import ElasticityConfig, Session, WorkflowConfig
@@ -52,6 +55,28 @@ TARGET_P99_S = 1.5              # sits between elastic (~0.2s) and the
                                 # underprovisioned static run (~3.5s)
 BASE_EXECUTORS = 1              # quiet-phase provisioning
 PEAK_EXECUTORS = 4              # spike provisioning
+NODE_CLASS = "standard"         # cloud billing unit for node-seconds
+
+
+def node_seconds_from_actions(n_exec0: int, duration_s: float,
+                              actions) -> float:
+    """Bill the run as if its executors lived on ``NODE_CLASS`` nodes:
+    reconstruct alive(t) from the controller's scale actions and integrate
+    whole-node occupancy (``ceil(alive / executors-per-node)``) over the
+    run.  Cloud capacity comes in nodes, not executors — executor-seconds
+    understate what a provider would actually charge for the fleet."""
+    per = DEFAULT_CATALOG[NODE_CLASS].executors
+    t_prev, alive, total = 0.0, n_exec0, 0.0
+    for t, d in sorted(actions, key=lambda e: e[0]):
+        if d["kind"] not in ("scale_up", "scale_down"):
+            continue
+        t = min(max(t, 0.0), duration_s)
+        total += math.ceil(alive / per) * (t - t_prev)
+        t_prev = t
+        step = int(d.get("value") or 1)
+        alive = max(1, alive + (step if d["kind"] == "scale_up" else -step))
+    total += math.ceil(alive / per) * (duration_s - t_prev)
+    return round(total, 6)
 
 
 def _profile(smoke: bool) -> list[tuple[str, float, float]]:
@@ -98,11 +123,16 @@ def _run_mode_virtual(mode: str, smoke: bool, seed: int,
         "p99_spike_s": trace.phase_p99("spike"),
         "p99_low_s": trace.phase_p99("low"),
         "executor_seconds": s["executor_seconds"],
+        "node_seconds": node_seconds_from_actions(
+            sc.workflow.n_executors, s["virtual_duration_s"],
+            trace.events_of("action")),
         "executors_configured": sc.workflow.n_executors,
         "executors_peak_observed": max(s["executors_peak"],
                                        sc.workflow.n_executors),
         "virtual_duration_s": s["virtual_duration_s"],
     }
+    row["node_cost"] = round(
+        row["node_seconds"] * DEFAULT_CATALOG[NODE_CLASS].cost_rate, 6)
     if mode == "elastic":
         row["controller_actions"] = s.get("controller_actions", {})
     return row, trace
@@ -150,6 +180,21 @@ def _run_mode_wall(mode: str, smoke: bool) -> dict:
                       if pn == name and a <= r.t_generated_min < b)
         return percentile_sorted(lats, 0.99)
 
+    # node-seconds on wall time: integrate whole-node occupancy over the
+    # telemetry history when the controller ran, else the static fleet
+    per = DEFAULT_CATALOG[NODE_CLASS].executors
+    t0_run, t1_run = phase_windows[0][1], phase_windows[-1][2]
+    hist = list(sess.telemetry.history) if sess.telemetry is not None else []
+    if len(hist) >= 2:
+        node_secs = sum(
+            np.ceil(max(a.alive_executors, 1) / per) * (b.t - a.t)
+            for a, b in zip(hist, hist[1:]))
+        node_secs += np.ceil(max(hist[0].alive_executors, 1) / per) \
+            * max(0.0, hist[0].t - t0_run)
+        node_secs += np.ceil(max(hist[-1].alive_executors, 1) / per) \
+            * max(0.0, t1_run - hist[-1].t)
+    else:
+        node_secs = np.ceil(n_exec / per) * (t1_run - t0_run)
     row = {
         "mode": mode,
         "records": sess.stats.sent,
@@ -158,6 +203,9 @@ def _run_mode_wall(mode: str, smoke: bool) -> dict:
         "p99_spike_s": _phase_p99("spike"),
         "p99_low_s": _phase_p99("low"),
         "executor_seconds": exec_secs,
+        "node_seconds": round(float(node_secs), 6),
+        "node_cost": round(float(node_secs)
+                           * DEFAULT_CATALOG[NODE_CLASS].cost_rate, 6),
         "executors_configured": n_exec,
         "executors_peak_observed": exec_peak,
     }
@@ -204,15 +252,21 @@ def main(smoke: bool = False, wall: bool = False, seed: int = 0,
         "elastic_vs_peak_exec_seconds_ratio": (
             by["elastic"]["executor_seconds"]
             / max(by["static_peak"]["executor_seconds"], 1e-9)),
+        # the cloud bill arrives in whole node-seconds, not executor-seconds
+        "node_class": NODE_CLASS,
+        "elastic_vs_peak_node_seconds_ratio": (
+            by["elastic"]["node_seconds"]
+            / max(by["static_peak"]["node_seconds"], 1e-9)),
     }
     out = {"rows": rows, "verdict": verdict}
     hdr = ("mode,records,dropped,p99_spike_s,p99_overall_s,"
-           "executor_seconds,executors_peak_observed")
+           "executor_seconds,node_seconds,executors_peak_observed")
     print(hdr)
     for r in rows:
         print(f"{r['mode']},{r['records']},{r['dropped']},"
               f"{r['p99_spike_s']:.3f},{r['p99_overall_s']:.3f},"
-              f"{r['executor_seconds']:.1f},{r['executors_peak_observed']}")
+              f"{r['executor_seconds']:.1f},{r['node_seconds']:.1f},"
+              f"{r['executors_peak_observed']}")
     print(f"verdict: {verdict}")
     return out
 

@@ -1,0 +1,50 @@
+"""Cloud capacity plane: node catalog, async provisioner, cost ledger.
+
+ElasticBroker's cloud side is elastic only if capacity can actually come
+and go.  This package models the resource layer the controller drives:
+
+- :class:`~repro.cloud.nodes.NodeClass` — a catalog entry (executor
+  capacity, cold-start distribution, cost rate, failure probability).
+- :class:`~repro.cloud.ledger.CostLedger` — node-seconds accounting from
+  ``power_on`` to ``power_off``, per class, next to the engine's
+  executor-seconds integral.
+- :class:`~repro.cloud.provisioner.CloudProvisioner` — CLUES-style
+  pending-task queue with retry/backoff and ``recover``; nodes move
+  ``pending -> booting -> ready -> draining -> off``.
+- :class:`~repro.cloud.fabric.SessionFabric` — bridges lifecycle
+  transitions onto a live Session (dynamic endpoint attach, executor
+  add/remove, drain-before-poweroff through broker reroute).
+
+Everything runs on the injectable Clock, so provisioning studies are
+deterministic under ``VirtualClock``.
+"""
+
+from repro.cloud.fabric import SessionFabric
+from repro.cloud.ledger import CostLedger
+from repro.cloud.nodes import (
+    DEFAULT_CATALOG,
+    BOOTING,
+    DRAINING,
+    FAILED,
+    OFF,
+    PENDING,
+    READY,
+    CloudNode,
+    NodeClass,
+)
+from repro.cloud.provisioner import CloudProvisioner
+
+__all__ = [
+    "BOOTING",
+    "CloudNode",
+    "CloudProvisioner",
+    "CostLedger",
+    "DEFAULT_CATALOG",
+    "DRAINING",
+    "FAILED",
+    "NodeClass",
+    "OFF",
+    "PENDING",
+    "READY",
+    "SessionFabric",
+]

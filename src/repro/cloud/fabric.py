@@ -1,0 +1,58 @@
+"""Bridges CloudProvisioner lifecycle transitions onto a live Session.
+
+The provisioner stays testable with a fake fabric; this is the real one.
+It owns the mechanics of dynamic attach/detach:
+
+- ready:  build a fresh endpoint on the session transport, register it
+  with broker/engine/telemetry, and add the node's executors.
+- drain:  mark the endpoint draining (senders stop selecting it, but
+  in-flight frames still land), reroute every group whose primary points
+  at it, and retire the node's executors gracefully.
+- off:    once no group targets the endpoint and its queue is empty,
+  retire the handle, detach the transport and deregister from the
+  failure detector.  Endpoint slots are tombstoned, never removed, so
+  indices stay stable.
+"""
+
+from __future__ import annotations
+
+
+class SessionFabric:
+    """Duck-typed adapter: the provisioner only sees these four methods."""
+
+    def __init__(self, session) -> None:
+        self.session = session
+
+    def attach_node(self, node) -> tuple[int, list[int]]:
+        sess = self.session
+        idx = sess.attach_endpoint()
+        execs = [
+            sess.engine.add_executor().idx
+            for _ in range(node.node_class.executors)
+        ]
+        return idx, execs
+
+    def begin_drain(self, node) -> None:
+        sess = self.session
+        ep = sess.endpoints[node.endpoint_idx]
+        ep.handle.begin_drain()
+        sess.broker.reroute_from_endpoint(node.endpoint_idx)
+        for ex_idx in node.executor_idxs:
+            sess.engine.remove_executor(ex_idx)
+
+    def node_drained(self, node) -> bool:
+        sess = self.session
+        ep = sess.endpoints[node.endpoint_idx]
+        return (
+            sess.broker.groups_on_endpoint(node.endpoint_idx) == 0
+            and ep.handle.pending() == 0
+        )
+
+    def finish_poweroff(self, node) -> None:
+        sess = self.session
+        ep = sess.endpoints[node.endpoint_idx]
+        ep.handle.retire()
+        ep.detach()
+        detector = getattr(sess, "detector", None)
+        if detector is not None:
+            detector.remove(ep.handle.name)

@@ -1,0 +1,90 @@
+"""Node-seconds cost ledger for the cloud capacity plane.
+
+Billing is cloud-honest: a record opens when the node powers on (boot
+time is paid for even though no work runs yet) and closes at power-off.
+The ledger "closes" when every opened record has been closed — the
+provisioning benchmark gates on this, so a node lost across a
+drain-before-poweroff scale-in shows up as an open record.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+
+@dataclass
+class _Record:
+    node_id: int
+    node_class: str
+    cost_rate: float
+    t_on: float
+    t_off: float | None = None
+
+
+class CostLedger:
+    """Accounts node-seconds per node class from power_on to power_off."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._records: list[_Record] = []
+
+    def power_on(self, node, t: float) -> None:
+        with self._lock:
+            self._records.append(
+                _Record(node.node_id, node.node_class.name,
+                        node.node_class.cost_rate, float(t))
+            )
+
+    def power_off(self, node, t: float) -> None:
+        """Close the node's open record; idempotent if already closed."""
+        with self._lock:
+            for rec in reversed(self._records):
+                if rec.node_id == node.node_id and rec.t_off is None:
+                    rec.t_off = float(t)
+                    return
+
+    @property
+    def open_count(self) -> int:
+        with self._lock:
+            return sum(1 for r in self._records if r.t_off is None)
+
+    @property
+    def closed(self) -> bool:
+        """True when every power_on has a matching power_off."""
+        return self.open_count == 0
+
+    def node_seconds(self) -> dict[str, float]:
+        """Closed node-seconds per class (open records excluded)."""
+        with self._lock:
+            out: dict[str, float] = {}
+            for r in self._records:
+                if r.t_off is None:
+                    continue
+                out[r.node_class] = out.get(r.node_class, 0.0) + (r.t_off - r.t_on)
+            return {k: round(v, 9) for k, v in sorted(out.items())}
+
+    def total_node_seconds(self) -> float:
+        return round(sum(self.node_seconds().values()), 9)
+
+    def total_cost(self) -> float:
+        with self._lock:
+            cost = sum(
+                r.cost_rate * (r.t_off - r.t_on)
+                for r in self._records
+                if r.t_off is not None
+            )
+        return round(cost, 9)
+
+    def summary(self) -> dict:
+        with self._lock:
+            n = len(self._records)
+            open_n = sum(1 for r in self._records if r.t_off is None)
+        return {
+            "records": n,
+            "open": open_n,
+            "closed": open_n == 0,
+            "node_seconds": self.node_seconds(),
+            "total_node_seconds": self.total_node_seconds(),
+            "total_cost": self.total_cost(),
+        }

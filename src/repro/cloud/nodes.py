@@ -1,0 +1,100 @@
+"""Node classes and node lifecycle state for the cloud capacity plane.
+
+A :class:`NodeClass` is a catalog entry describing what one cloud node
+gives you (executor slots), what it costs (per node-second), and how it
+behaves while provisioning (cold-start distribution, failure
+probability).  A :class:`CloudNode` is one provisioned instance moving
+through the lifecycle::
+
+    pending -> booting -> ready -> draining -> off
+                  \\-> failed (retry budget exhausted; `recover` requeues)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+# Lifecycle states (strings so they serialize directly into traces).
+PENDING = "pending"
+BOOTING = "booting"
+READY = "ready"
+DRAINING = "draining"
+OFF = "off"
+FAILED = "failed"
+
+STATES = (PENDING, BOOTING, READY, DRAINING, OFF, FAILED)
+
+
+@dataclass(frozen=True)
+class NodeClass:
+    """Catalog entry: capacity, cold-start distribution, cost, failure."""
+
+    name: str
+    executors: int = 1
+    cold_start_s: float = 1.0       # deterministic floor of the cold start
+    cold_start_jitter_s: float = 0.0  # uniform extra on top, seeded per run
+    cost_rate: float = 1.0          # cost units per node-second
+    provision_fail_prob: float = 0.0  # chance one power_on attempt fails
+
+    def validate(self) -> None:
+        if not self.name:
+            raise ValueError("NodeClass.name must be non-empty")
+        if self.executors < 1:
+            raise ValueError("NodeClass.executors must be >= 1")
+        if self.cold_start_s < 0 or self.cold_start_jitter_s < 0:
+            raise ValueError("cold-start times must be >= 0")
+        if self.cost_rate < 0:
+            raise ValueError("cost_rate must be >= 0")
+        if not 0.0 <= self.provision_fail_prob < 1.0:
+            raise ValueError("provision_fail_prob must be in [0, 1)")
+
+    def expected_ready_s(self) -> float:
+        """Worst-case cold start: the horizon a predictive policy must beat."""
+        return self.cold_start_s + self.cold_start_jitter_s
+
+
+DEFAULT_CATALOG: dict[str, NodeClass] = {
+    c.name: c
+    for c in (
+        NodeClass("small", executors=1, cold_start_s=0.6,
+                  cold_start_jitter_s=0.2, cost_rate=1.0),
+        NodeClass("standard", executors=2, cold_start_s=1.2,
+                  cold_start_jitter_s=0.4, cost_rate=1.8),
+        NodeClass("large", executors=4, cold_start_s=2.5,
+                  cold_start_jitter_s=0.8, cost_rate=3.2),
+    )
+}
+for _c in DEFAULT_CATALOG.values():
+    _c.validate()
+del _c
+
+
+@dataclass
+class CloudNode:
+    """One provisioned instance of a NodeClass."""
+
+    node_id: int
+    node_class: NodeClass
+    state: str = PENDING
+    t_requested: float = 0.0
+    t_power_on: float | None = None   # boot started (billing opens here)
+    t_ready_at: float | None = None   # boot deadline while BOOTING
+    t_ready: float | None = None
+    t_drain: float | None = None
+    t_off: float | None = None
+    attempts: int = 0                 # power_on attempts so far
+    endpoint_idx: int | None = None   # session endpoint slot once attached
+    executor_idxs: list[int] = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return f"node-{self.node_id}-{self.node_class.name}"
+
+    def describe(self) -> dict:
+        return {
+            "node": self.name,
+            "class": self.node_class.name,
+            "state": self.state,
+            "executors": self.node_class.executors,
+            "endpoint_idx": self.endpoint_idx,
+        }

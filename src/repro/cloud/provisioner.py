@@ -1,0 +1,341 @@
+"""CLUES-style async CloudProvisioner.
+
+The provisioner is passive: it owns a pending-task queue (power_on /
+power_off requests) and advances it only when the ElasticController
+calls :meth:`process_pending_tasks` at the top of each tick.  That keeps
+every transition on the controller thread, so the whole capacity plane
+is deterministic under ``VirtualClock`` — cold-start jitter and failure
+draws come from one seeded RNG consumed in queue order.
+
+Lifecycle, mirroring the CLUES powermanager shape::
+
+    request_node()      -> PENDING   (power_on task queued)
+    power_on ok         -> BOOTING   (billing opens; boot deadline set)
+    boot deadline hit   -> READY     (fabric attaches endpoint + executors)
+    request_poweroff()  -> DRAINING  (fabric reroutes groups, removes
+                                      executors; poweroff task polls drain)
+    fully drained       -> OFF       (billing closes, transport detached)
+    retries exhausted   -> FAILED    (``recover()`` requeues)
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from random import Random
+
+from repro.cloud.ledger import CostLedger
+from repro.cloud.nodes import (
+    BOOTING,
+    DEFAULT_CATALOG,
+    DRAINING,
+    FAILED,
+    OFF,
+    PENDING,
+    READY,
+    CloudNode,
+    NodeClass,
+)
+from repro.runtime.clock import ensure_clock
+
+
+@dataclass
+class _Task:
+    kind: str                 # "power_on" | "power_off"
+    node: CloudNode
+    attempts: int = 0
+    not_before: float = 0.0   # retry backoff gate
+
+
+@dataclass
+class _Counters:
+    requests: int = 0
+    provision_failures: int = 0
+    retries: int = 0
+    nodes_ready: int = 0
+    nodes_failed: int = 0
+    nodes_off: int = 0
+    recovered: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+class CloudProvisioner:
+    """Async provision/teardown driven through a pending-task queue."""
+
+    def __init__(
+        self,
+        fabric,
+        *,
+        catalog: dict[str, NodeClass] | None = None,
+        clock=None,
+        seed: int = 0,
+        retry_limit: int = 3,
+        backoff_s: float = 0.5,
+        ledger: CostLedger | None = None,
+    ) -> None:
+        if retry_limit < 1:
+            raise ValueError("retry_limit must be >= 1")
+        if backoff_s < 0:
+            raise ValueError("backoff_s must be >= 0")
+        self.fabric = fabric
+        self.catalog = dict(DEFAULT_CATALOG if catalog is None else catalog)
+        self.clock = ensure_clock(clock)
+        self.retry_limit = int(retry_limit)
+        self.backoff_s = float(backoff_s)
+        self.ledger = ledger if ledger is not None else CostLedger()
+        self.nodes: list[CloudNode] = []
+        self.events: list[tuple[float, dict]] = []
+        self._rng = Random(seed)
+        self._lock = threading.Lock()
+        self._tasks: deque[_Task] = deque()
+        self._next_id = 0
+        self._c = _Counters()
+        # fault injection (scenario hooks)
+        self._fail_next = 0       # force the next N power_on attempts to fail
+        self._stall_extra_s = 0.0  # one-shot extra cold-start time
+
+    # ------------------------------------------------------------------
+    # catalog / introspection
+
+    def node_class(self, name: str) -> NodeClass:
+        try:
+            return self.catalog[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown node class {name!r}; catalog has {sorted(self.catalog)}"
+            ) from None
+
+    def expected_ready_s(self, class_name: str) -> float:
+        """Worst-case cold start for a class (predictive horizon floor)."""
+        return self.node_class(class_name).expected_ready_s()
+
+    def capacity_in_flight(self) -> int:
+        """Executor slots already requested but not READY yet.
+
+        Scale-up decisions subtract this so a slow boot doesn't trigger a
+        second wave of provisioning for the same breach (flap suppression).
+        """
+        with self._lock:
+            return sum(
+                n.node_class.executors
+                for n in self.nodes
+                if n.state in (PENDING, BOOTING)
+            )
+
+    def nodes_in_state(self, state: str) -> list[CloudNode]:
+        with self._lock:
+            return [n for n in self.nodes if n.state == state]
+
+    # ------------------------------------------------------------------
+    # requests
+
+    def request_node(self, class_name: str) -> CloudNode:
+        """Queue an async provision request; returns the PENDING node."""
+        cls = self.node_class(class_name)
+        with self._lock:
+            now = self.clock.now()
+            node = CloudNode(node_id=self._next_id, node_class=cls,
+                             t_requested=now)
+            self._next_id += 1
+            self.nodes.append(node)
+            self._tasks.append(_Task("power_on", node))
+            self._c.requests += 1
+            self._event(now, "requested", node)
+            return node
+
+    def request_poweroff(self, node: CloudNode) -> None:
+        """Begin drain-before-poweroff for a READY node."""
+        with self._lock:
+            if node.state != READY:
+                raise ValueError(
+                    f"can only power off READY nodes, {node.name} is {node.state}"
+                )
+            now = self.clock.now()
+            node.state = DRAINING
+            node.t_drain = now
+            self._tasks.append(_Task("power_off", node))
+            self._event(now, "drain", node)
+            # Reroute groups away and retire the node's executors; frames
+            # already in flight still land (drain != dead) and are consumed
+            # by the surviving fleet before the poweroff task completes.
+            self.fabric.begin_drain(node)
+
+    def pick_poweroff(self, can_release) -> CloudNode | None:
+        """Newest READY node whose release `can_release(node)` allows.
+
+        Never returns a booting or draining node — scale-in must not race
+        a cold start or double-drain.
+        """
+        with self._lock:
+            ready = [n for n in self.nodes if n.state == READY]
+        for node in sorted(ready, key=lambda n: n.node_id, reverse=True):
+            if can_release(node):
+                return node
+        return None
+
+    def recover(self) -> int:
+        """Requeue FAILED nodes for another round of power_on attempts."""
+        with self._lock:
+            now = self.clock.now()
+            n = 0
+            for node in self.nodes:
+                if node.state == FAILED:
+                    node.state = PENDING
+                    self._tasks.append(_Task("power_on", node))
+                    self._event(now, "recover", node)
+                    n += 1
+            self._c.recovered += n
+            return n
+
+    # ------------------------------------------------------------------
+    # fault injection (driven by sim.scenario)
+
+    def inject_provision_failures(self, n: int) -> None:
+        """Force the next `n` power_on attempts to fail."""
+        with self._lock:
+            self._fail_next += max(0, int(n))
+
+    def inject_boot_stall(self, extra_s: float) -> None:
+        """Stretch cold starts: extends nodes currently BOOTING, and the
+        next boot if nothing is booting yet."""
+        extra = max(0.0, float(extra_s))
+        with self._lock:
+            booting = [n for n in self.nodes if n.state == BOOTING]
+            if booting:
+                for node in booting:
+                    node.t_ready_at += extra
+                    self._event(self.clock.now(), "boot_stall", node,
+                                extra_s=round(extra, 9))
+            else:
+                self._stall_extra_s += extra
+
+    # ------------------------------------------------------------------
+    # the pending-task pump
+
+    def process_pending_tasks(self) -> None:
+        """Advance the queue: attempt power_ons, complete boots, poll drains.
+
+        Called by the ElasticController at the start of every tick (and
+        safe to call from tests directly).  All transitions happen here,
+        in queue order, on the caller's thread.
+        """
+        with self._lock:
+            now = self.clock.now()
+            self._complete_boots_locked(now)
+            remaining: deque[_Task] = deque()
+            while self._tasks:
+                task = self._tasks.popleft()
+                if task.not_before > now:
+                    remaining.append(task)
+                    continue
+                if task.kind == "power_on":
+                    self._power_on_locked(task, remaining, now)
+                elif task.kind == "power_off":
+                    self._power_off_locked(task, remaining, now)
+            self._tasks = remaining
+
+    def _complete_boots_locked(self, now: float) -> None:
+        for node in self.nodes:
+            if node.state == BOOTING and now >= node.t_ready_at:
+                node.state = READY
+                node.t_ready = now
+                node.endpoint_idx, node.executor_idxs = self.fabric.attach_node(node)
+                self._c.nodes_ready += 1
+                self._event(now, "ready", node,
+                            cold_start_s=round(now - node.t_power_on, 9))
+
+    def _power_on_locked(self, task: _Task, remaining: deque, now: float) -> None:
+        node = task.node
+        if node.state != PENDING:  # superseded (e.g. recovered elsewhere)
+            return
+        failed = False
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            failed = True
+        elif node.node_class.provision_fail_prob > 0.0:
+            failed = self._rng.random() < node.node_class.provision_fail_prob
+        if failed:
+            task.attempts += 1
+            node.attempts += 1
+            self._c.provision_failures += 1
+            if task.attempts > self.retry_limit:
+                node.state = FAILED
+                self._c.nodes_failed += 1
+                self._event(now, "provision_failed", node,
+                            attempts=task.attempts)
+            else:
+                task.not_before = now + self.backoff_s * (2 ** (task.attempts - 1))
+                remaining.append(task)
+                self._c.retries += 1
+                self._event(now, "provision_retry", node,
+                            attempts=task.attempts,
+                            retry_at=round(task.not_before, 9))
+            return
+        node.state = BOOTING
+        node.t_power_on = now
+        cold = (node.node_class.cold_start_s
+                + node.node_class.cold_start_jitter_s * self._rng.random()
+                + self._stall_extra_s)
+        self._stall_extra_s = 0.0
+        node.t_ready_at = now + cold
+        self.ledger.power_on(node, now)
+        self._event(now, "power_on", node, boot_s=round(cold, 9))
+
+    def _power_off_locked(self, task: _Task, remaining: deque, now: float) -> None:
+        node = task.node
+        if node.state != DRAINING:
+            return
+        if not self.fabric.node_drained(node):
+            remaining.append(task)  # poll again next tick
+            return
+        self.fabric.finish_poweroff(node)
+        node.state = OFF
+        node.t_off = now
+        self.ledger.power_off(node, now)
+        self._c.nodes_off += 1
+        self._event(now, "power_off", node,
+                    node_seconds=round(now - node.t_power_on, 9))
+
+    # ------------------------------------------------------------------
+    # teardown / reporting
+
+    def shutdown(self) -> None:
+        """Close the books at session teardown: every node that ever
+        powered on gets its ledger record closed."""
+        with self._lock:
+            now = self.clock.now()
+            for node in self.nodes:
+                if node.state in (BOOTING, READY, DRAINING):
+                    node.state = OFF
+                    node.t_off = now
+                    self.ledger.power_off(node, now)
+                    self._c.nodes_off += 1
+                    self._event(now, "shutdown_off", node)
+            self._tasks.clear()
+
+    def _event(self, t: float, event: str, node: CloudNode, **extra) -> None:
+        d = {"event": event, **node.describe()}
+        d.update(extra)
+        self.events.append((round(t, 9), d))
+
+    def summary(self) -> dict:
+        with self._lock:
+            states: dict[str, int] = {}
+            for node in self.nodes:
+                states[node.state] = states.get(node.state, 0) + 1
+            c = self._c
+            out = {
+                "nodes": len(self.nodes),
+                "states": dict(sorted(states.items())),
+                "requests": c.requests,
+                "nodes_ready": c.nodes_ready,
+                "provision_failures": c.provision_failures,
+                "retries": c.retries,
+                "nodes_failed": c.nodes_failed,
+                "nodes_off": c.nodes_off,
+                "recovered": c.recovered,
+                "pending_tasks": len(self._tasks),
+            }
+        out["ledger"] = self.ledger.summary()
+        return out

@@ -429,23 +429,51 @@ class _GroupSender(threading.Thread):
             self.stats.add(send_errors=1)
         return False
 
+    @staticmethod
+    def _endpoint_load(ep) -> float | None:
+        """Routing-load estimate for reroute target selection: buffered
+        backlog plus current ingest rate.  None when the binding exposes no
+        telemetry (bare transports) — callers fall back to ring order."""
+        handle = getattr(ep, "handle", None)
+        if handle is None:
+            return None
+        try:
+            return float(handle.pending()) + float(handle.ingest_rate())
+        except Exception:
+            return None
+
     def reroute(self) -> int | None:
         """Proactively move the primary off a known-dead endpoint (the
         controller's FailureDetector path) instead of waiting for the next
         send to burn retries.  Returns the new primary index, or None when no
-        healthy endpoint exists."""
+        healthy endpoint exists.
+
+        Target selection is least-loaded, not first-surviving: when an
+        endpoint dies mid-spike, every orphaned group rerouting to the same
+        "next" survivor would dogpile it while emptier endpoints idle.
+        Candidates are ranked by pending+ingest telemetry; ties (and
+        endpoints with no telemetry) resolve in ring order, which keeps the
+        choice deterministic."""
         n = len(self.endpoints)
+        candidates: list[tuple[int, float | None]] = []
         for shift in range(1, n + 1):
             idx = (self.primary + shift) % n
             try:
-                if self.endpoints[idx].healthy():
-                    if idx != self.primary:
-                        self.primary = idx
-                        self.stats.add(rerouted=1)
-                    return idx
+                if not self.endpoints[idx].healthy():
+                    continue
             except Exception:
                 continue
-        return None
+            candidates.append((idx, self._endpoint_load(self.endpoints[idx])))
+        if not candidates:
+            return None
+        if any(load is None for _, load in candidates):
+            best = candidates[0][0]       # no telemetry: legacy ring order
+        else:
+            best = min(candidates, key=lambda c: c[1])[0]
+        if best != self.primary:
+            self.primary = best
+            self.stats.add(rerouted=1)
+        return best
 
     def backlog(self) -> int:
         """Records admitted but not yet handed to the wire."""
@@ -516,8 +544,10 @@ class Broker:
             self._go.set()
         self._senders: dict[int, _GroupSender] = {}
         for g in range(plan.n_groups):
-            s = _GroupSender(g, endpoints, g % len(endpoints), self.cfg,
-                             self.clock,
+            # senders share the broker's OWN endpoint list (not the caller's)
+            # so a dynamically attached endpoint is immediately routable
+            s = _GroupSender(g, self.endpoints, g % len(self.endpoints),
+                             self.cfg, self.clock,
                              wal=self.wal.segment(g) if self.wal else None,
                              go=self._go)
             self.clock.thread_started(s)
@@ -577,6 +607,23 @@ class Broker:
             if s.primary == endpoint_idx and s.reroute() is not None:
                 n += 1
         return n
+
+    def groups_on_endpoint(self, endpoint_idx: int) -> int:
+        """#groups whose primary currently targets this endpoint — the
+        cloud capacity plane's drain gate (a node may only power off once
+        this reaches zero and its endpoint queue is empty)."""
+        return sum(1 for s in self._senders.values()
+                   if s.primary == endpoint_idx)
+
+    def attach_endpoint(self, ep: Transport) -> int:
+        """Register a freshly provisioned endpoint with every sender.
+
+        Appending to the shared list is enough: senders size their
+        failover ring from ``len(self.endpoints)`` per call, so the new
+        slot becomes routable on the next send/reroute.  Returns the new
+        endpoint's fleet index."""
+        self.endpoints.append(ep)
+        return len(self.endpoints) - 1
 
     # -- the paper's three-call API surface lives in core.api ------------
     def register(self, schema: FieldSchema) -> None:

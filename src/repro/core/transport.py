@@ -47,8 +47,11 @@ class CloudEndpoint:
     service_port: int
     handle: object = None       # the in-process Endpoint (Redis stand-in)
     transport: object = None    # optional wire transport (e.g. loopback TCP)
+    detached: bool = False      # powered off by the cloud capacity plane
 
     def healthy(self) -> bool:
+        if self.detached:
+            return False
         if self.transport is not None:
             return self.transport.healthy()
         return self.handle is not None and self.handle.healthy()
@@ -60,6 +63,15 @@ class CloudEndpoint:
             self.handle.push(group_id, blob)
 
     def close(self) -> None:
+        if self.transport is not None:
+            self.transport.close()
+
+    def detach(self) -> None:
+        """Power-off detach: tear down the wire binding and mark the slot
+        dead.  The slot object itself stays in every endpoint list as a
+        tombstone so fleet indices (group primaries, node records) remain
+        stable after scale-in."""
+        self.detached = True
         if self.transport is not None:
             self.transport.close()
 

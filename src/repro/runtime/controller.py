@@ -65,6 +65,17 @@ class ElasticityConfig:
     # the failure scan; the controller revives it unless the SAME analysis
     # has run longer than this — only then is the executor deemed wedged
     stuck_analysis_s: float = 30.0
+    # -- cloud capacity plane (repro.cloud.CloudProvisioner) --------------
+    # when ``provision`` is on, scale-out becomes an async provision
+    # request for whole nodes of ``node_class`` (capacity arrives after a
+    # cold start) and scale-in drains a node before powering it off
+    provision: bool = False
+    node_class: str = "standard"      # DEFAULT_CATALOG entry for scale-out
+    provision_retry_limit: int = 3    # power_on attempts before FAILED
+    provision_backoff_s: float = 0.5  # retry backoff base (doubles/attempt)
+    # predictive horizon is floored at cold-start + this margin, so the
+    # TrendScalePolicy asks for capacity early enough for it to boot
+    cold_start_margin_s: float = 0.5
 
     def validate(self) -> "ElasticityConfig":
         if self.interval_s <= 0:
@@ -90,6 +101,14 @@ class ElasticityConfig:
             raise ValueError("trend_horizon_s must be > 0")
         if self.stuck_analysis_s <= 0:
             raise ValueError("stuck_analysis_s must be > 0")
+        if self.provision_retry_limit < 1:
+            raise ValueError("provision_retry_limit must be >= 1")
+        if self.provision_backoff_s < 0:
+            raise ValueError("provision_backoff_s must be >= 0")
+        if self.cold_start_margin_s < 0:
+            raise ValueError("cold_start_margin_s must be >= 0")
+        if self.provision and not self.node_class:
+            raise ValueError("provision=True needs a node_class")
         return self
 
 
@@ -159,8 +178,12 @@ class TrendScalePolicy:
     compose (Session wires Trend *before* Latency when
     ``cfg.predictive``)."""
 
-    def __init__(self, cfg: ElasticityConfig):
+    def __init__(self, cfg: ElasticityConfig, horizon_s: float | None = None):
         self.cfg = cfg
+        # horizon override: with a CloudProvisioner attached the projection
+        # must look past the node-class cold start, or capacity lands late
+        self.horizon_s = (cfg.trend_horizon_s if horizon_s is None
+                          else float(horizon_s))
         self._last_scale = float("-inf")     # see LatencyScalePolicy note
 
     @staticmethod
@@ -182,7 +205,7 @@ class TrendScalePolicy:
         if len(window) < 3:
             return []
         now = snap.t
-        h = cfg.trend_horizon_s
+        h = self.horizon_s
         lat_pts = [(s.t, s.latency_p99) for s in window if s.latency_n > 0]
         back_pts = [(s.t, float(s.backlog)) for s in window]
         proj_p99 = (snap.latency_p99 + self._slope(lat_pts) * h
@@ -245,13 +268,18 @@ class ElasticController(threading.Thread):
     def __init__(self, bus: TelemetryBus, cfg: ElasticityConfig | None = None,
                  *, engine=None, broker=None,
                  detector: FailureDetector | None = None, policies=None,
-                 clock: Clock | None = None, recovery=None):
+                 clock: Clock | None = None, recovery=None,
+                 provisioner=None):
         super().__init__(daemon=True, name="elastic-controller")
         self.bus = bus
         self.cfg = (cfg or ElasticityConfig(enabled=True)).validate()
         # exactly-once wiring: a RecoverySupervisor (runtime.recovery) turns
         # detector-driven failures into WAL replay instead of lossy reroute
         self.recovery = recovery
+        # cloud capacity plane: when set, scale decisions actuate through
+        # the provisioner (async provision / drain-before-poweroff) instead
+        # of instant engine add/remove
+        self.provisioner = provisioner
         # one schedule for the whole loop: default to the bus's clock so a
         # virtual-time bus implies a virtual-time controller
         self.clock = ensure_clock(clock if clock is not None else bus.clock)
@@ -266,7 +294,13 @@ class ElasticController(threading.Thread):
                                "max_batch_records", 32)
             policies = []
             if self.cfg.predictive:
-                policies.append(TrendScalePolicy(self.cfg))
+                horizon = None
+                if self.provisioner is not None:
+                    horizon = max(
+                        self.cfg.trend_horizon_s,
+                        self.provisioner.expected_ready_s(self.cfg.node_class)
+                        + self.cfg.cold_start_margin_s)
+                policies.append(TrendScalePolicy(self.cfg, horizon_s=horizon))
             policies.append(LatencyScalePolicy(self.cfg))
             if self.cfg.adapt_batch:
                 policies.append(BatchCapPolicy(self.cfg, baseline=baseline))
@@ -285,9 +319,13 @@ class ElasticController(threading.Thread):
             name = getattr(ep, "name", None)
             if name is None:
                 continue
+            if getattr(ep, "retired", False):
+                continue    # deliberately powered off, not a failure
             if name not in det.nodes:
                 det.register(name, "endpoint")
-            if ep.healthy():
+            # a draining endpoint reads unhealthy to senders but is alive
+            # (it's emptying its queue); don't let the detector fire on it
+            if ep.healthy() or getattr(ep, "draining", False):
                 det.beat(name)
         if self.engine is not None:
             for e in self.engine.metrics()["executors"]:
@@ -347,10 +385,64 @@ class ElasticController(threading.Thread):
                 self._apply(Action("replace_executor", value=idx,
                                    reason=f"{node.name} straggling"))
 
+    # ---- cloud capacity plane -------------------------------------------
+    def _provision_up(self, action: Action) -> Action | None:
+        """Turn a scale_up decision into async node provision requests.
+
+        Capacity already in flight (pending/booting nodes) counts against
+        the request, so a breach that persists through a cold start does
+        not trigger a second wave for the same deficit (flap suppression).
+        """
+        prov = self.provisioner
+        alive = (self.engine.metrics()["alive_executors"]
+                 if self.engine is not None else 0)
+        # a FAILED node is capacity the fleet already decided it wants;
+        # recover it before asking for brand-new nodes
+        recovered = prov.recover()
+        inflight = prov.capacity_in_flight()
+        cls = prov.node_class(self.cfg.node_class)
+        room = self.cfg.max_executors - alive - inflight
+        want = max(action.value or 1, 1)
+        n_nodes = min((want + cls.executors - 1) // cls.executors,
+                      room // cls.executors)
+        if n_nodes <= 0:
+            return (Action("provision", value=0, reason=action.reason)
+                    if recovered else None)
+        for _ in range(n_nodes):
+            prov.request_node(self.cfg.node_class)
+        return Action("provision", value=n_nodes, group=action.group,
+                      reason=action.reason)
+
+    def _provision_down(self, action: Action) -> Action | None:
+        """Turn a scale_down decision into a drain-before-poweroff.
+
+        Only a READY node may be released (never one still booting, never
+        one already draining), and only if losing its executors keeps the
+        fleet at or above min_executors.
+        """
+        prov = self.provisioner
+        alive = (self.engine.metrics()["alive_executors"]
+                 if self.engine is not None else 0)
+        node = prov.pick_poweroff(
+            lambda n: alive - n.node_class.executors >= self.cfg.min_executors)
+        if node is None:
+            return None
+        prov.request_poweroff(node)
+        return Action("drain_node", value=node.node_id,
+                      reason=action.reason)
+
     # ---- actuation -------------------------------------------------------
     def _apply(self, action: Action) -> None:
         try:
-            if action.kind == "scale_up" and self.engine is not None:
+            if action.kind == "scale_up" and self.provisioner is not None:
+                action = self._provision_up(action)
+                if action is None:
+                    return
+            elif action.kind == "scale_down" and self.provisioner is not None:
+                action = self._provision_down(action)
+                if action is None:
+                    return
+            elif action.kind == "scale_up" and self.engine is not None:
                 # hard cap regardless of which policy asked: two policies
                 # deciding from the same (stale) snapshot must not push the
                 # fleet past max_executors
@@ -390,6 +482,10 @@ class ElasticController(threading.Thread):
         deterministically without the thread."""
         if self.engine is None and self.bus.engine is not None:
             self.engine = self.bus.engine        # Session attaches it lazily
+        if self.provisioner is not None:
+            # advance the capacity plane first: boots that completed land
+            # before this tick's policies look at alive_executors
+            self.provisioner.process_pending_tasks()
         self._pump_heartbeats()
         self.detector.scan()
         snap = self.bus.sample()
@@ -432,7 +528,10 @@ class ElasticController(threading.Thread):
         kinds: dict[str, int] = {}
         for _, a in self.actions_log:
             kinds[a.kind] = kinds.get(a.kind, 0) + 1
-        return {"actions": kinds, "apply_errors": self.apply_errors,
-                "n_policies": len(self.policies),
-                "executor_seconds": (self.engine.executor_seconds()
-                                     if self.engine is not None else 0.0)}
+        out = {"actions": kinds, "apply_errors": self.apply_errors,
+               "n_policies": len(self.policies),
+               "executor_seconds": (self.engine.executor_seconds()
+                                    if self.engine is not None else 0.0)}
+        if self.provisioner is not None:
+            out["provisioner"] = self.provisioner.summary()
+        return out

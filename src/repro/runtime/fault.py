@@ -52,6 +52,12 @@ class FailureDetector:
             self.nodes[name] = NodeState(name=name, kind=kind,
                                          last_beat=self.clock.now())
 
+    def remove(self, name: str):
+        """Forget a node: a deliberately powered-off endpoint must not be
+        reported as a failure on the next scan."""
+        with self._lock:
+            self.nodes.pop(name, None)
+
     def beat(self, name: str):
         now = self.clock.now()
         with self._lock:

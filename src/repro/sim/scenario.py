@@ -75,6 +75,12 @@ class Fault:
                              from the latest checkpoint + WAL tail replay
                              (requires delivery="exactly-once" and an
                              ``operators`` factory)
+      ``provision_fail``     the next ``value`` CloudProvisioner power_on
+                             attempts fail (retry/backoff/recover path;
+                             requires elasticity.provision)
+      ``boot_stall``         stretch cold starts by ``value`` s: nodes
+                             currently booting are delayed, else the next
+                             boot is (requires elasticity.provision)
     """
 
     t: float
@@ -85,8 +91,10 @@ class Fault:
 
 _FAULT_KINDS = ("kill_executor", "add_executor", "inject_straggler",
                 "clear_straggler", "fail_endpoint", "recover_endpoint",
-                "drop_frames", "kill_broker", "kill_session")
+                "drop_frames", "kill_broker", "kill_session",
+                "provision_fail", "boot_stall")
 _KILL_KINDS = ("kill_broker", "kill_session")
+_PROVISION_KINDS = ("provision_fail", "boot_stall")
 
 
 @dataclass(frozen=True)
@@ -147,6 +155,13 @@ class Scenario:
                 "kill_broker/kill_session faults and checkpoint_every_s "
                 "require workflow.delivery='exactly-once' (there is nothing "
                 "to replay from in at-most-once mode)")
+        if kinds & set(_PROVISION_KINDS) \
+                and not (self.workflow.elasticity.enabled
+                         and self.workflow.elasticity.provision):
+            raise ValueError(
+                "provision_fail/boot_stall faults require "
+                "workflow.elasticity.enabled and .provision (there is no "
+                "CloudProvisioner to fault otherwise)")
         if ("kill_session" in kinds or self.checkpoint_every_s) \
                 and self.operators is None:
             raise ValueError(
@@ -294,6 +309,10 @@ class ScenarioRunner:
         elif f.kind == "drop_frames":
             sess.endpoints[f.target % len(sess.endpoints)].handle \
                 .drop_next_frames(int(f.value))
+        elif f.kind == "provision_fail":
+            sess.provisioner.inject_provision_failures(int(f.value))
+        elif f.kind == "boot_stall":
+            sess.provisioner.inject_boot_stall(float(f.value))
 
     # ---- the run ---------------------------------------------------------
     def run(self) -> ScenarioTrace:
@@ -350,7 +369,7 @@ class ScenarioRunner:
         # every live reference routes through the box: kill_session swaps
         # the session (and its field handle) under the load loop's feet
         box = {"sess": sess, "handle": None, "actions": [],
-               "recovery_counts": {}, "restores": 0}
+               "recovery_counts": {}, "restores": 0, "prov_events": []}
 
         def absorb_dead(old: Session) -> None:
             # controller actions and recovery events die with a killed
@@ -361,6 +380,8 @@ class ScenarioRunner:
                 for k, v in old.recovery.summary().items():
                     box["recovery_counts"][k] = \
                         box["recovery_counts"].get(k, 0) + v
+            if old.provisioner is not None:
+                box["prov_events"].extend(old.provisioner.events)
 
         def restore_session() -> None:
             old = box["sess"]
@@ -472,6 +493,11 @@ class ScenarioRunner:
             trace.events.append((round(t, 9), "action",
                                  {"kind": a.kind, "value": a.value,
                                   "group": a.group, "reason": a.reason}))
+        prov_events = list(box["prov_events"])
+        if sess.provisioner is not None:
+            prov_events.extend(sess.provisioner.events)
+        for t, d in prov_events:
+            trace.events.append((round(t, 9), "provision", dict(d)))
         for r in sess.results():
             trace.events.append((round(r.t_analyzed, 9), "result",
                                  {"stream": r.stream_key,
@@ -512,6 +538,8 @@ class ScenarioRunner:
             for _, a in actions:
                 act_counts[a.kind] = act_counts.get(a.kind, 0) + 1
             trace.summary["controller_actions"] = act_counts
+        if sess.provisioner is not None:
+            trace.summary["provisioning"] = sess.provisioner.summary()
         if sess.exec_plan is not None:
             trace.summary["windows"] = sess.exec_plan.accounting()
             # content oracle: per-sink, per-key ordered values (no times)

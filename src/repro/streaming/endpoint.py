@@ -27,6 +27,12 @@ class Endpoint:
         self._streams: dict[str, deque] = defaultdict(deque)
         self._lock = threading.Lock()
         self._healthy = True
+        # cloud lifecycle (repro.cloud): draining = unhealthy to *senders*
+        # (nothing new is routed here) but still accepting in-flight frames
+        # and still alive to the failure detector; retired = deliberately
+        # powered off — skipped by heartbeat pumps entirely
+        self._draining = False
+        self._retired = False
         self.bytes_in = 0
         self.records_in = 0
         self.frames_in = 0            # wire frames (batched: frames < records)
@@ -50,13 +56,37 @@ class Endpoint:
 
     # ---- producer side --------------------------------------------------
     def healthy(self) -> bool:
-        return self._healthy
+        return self._healthy and not self._draining
 
     def fail(self):
         self._healthy = False
 
     def recover(self):
         self._healthy = True
+
+    # ---- cloud lifecycle (drain-before-poweroff) -------------------------
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @property
+    def retired(self) -> bool:
+        return self._retired
+
+    def begin_drain(self) -> None:
+        """Stop being a routing target while the buffered backlog empties.
+        ``push`` still accepts frames already in flight — drain is not
+        failure, so nothing is lost on a deliberate scale-in."""
+        self._draining = True
+
+    def end_drain(self) -> None:
+        self._draining = False
+
+    def retire(self) -> None:
+        """Deliberate power-off: unhealthy AND excluded from heartbeats."""
+        self._draining = False
+        self._healthy = False
+        self._retired = True
 
     def drop_next_frames(self, n: int) -> None:
         """Fault injection: the next ``n`` accepted frames vanish after the
@@ -134,7 +164,8 @@ class Endpoint:
 
     def telemetry(self) -> dict:
         """One control-plane sample: ingest rate, pending backlog, totals."""
-        return {"name": self.name, "healthy": self._healthy,
+        return {"name": self.name, "healthy": self.healthy(),
+                "draining": self._draining,
                 "pending": self.pending(), "records_in": self.records_in,
                 "bytes_in": self.bytes_in, "frames_in": self.frames_in,
                 "frames_dropped": self.frames_dropped,
@@ -159,6 +190,37 @@ class Endpoint:
                 setattr(self, f, int(state.get(f, 0)))
 
 
+def make_endpoint(i: int, *, inbound_bw: float | None = None,
+                  base_port: int = 6379, transport: str = "inprocess",
+                  clock: Clock | None = None,
+                  ledger: SeqLedger | None = None):
+    """One CloudEndpoint at fleet slot ``i``.
+
+    Split out of :func:`make_endpoints` so the cloud capacity plane
+    (repro.cloud) can attach endpoints to a *live* Session one at a time;
+    pass the fleet's shared ``ledger`` so exactly-once dedupe spans
+    dynamically provisioned endpoints too."""
+    from repro.core.transport import (CloudEndpoint, LoopbackTransport,
+                                      VirtualLoopbackTransport)
+    clock = ensure_clock(clock)
+    if ledger is None:
+        ledger = SeqLedger()
+    h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port,
+                 clock=clock, ledger=ledger)
+    if transport == "inprocess":
+        return CloudEndpoint(service_ip=f"10.0.0.{i+1}",
+                             service_port=base_port, handle=h)
+    elif transport == "loopback":
+        if clock.virtual:
+            t = VirtualLoopbackTransport(h, clock=clock)
+        else:
+            t = LoopbackTransport(h)
+        return CloudEndpoint(service_ip="127.0.0.1",
+                             service_port=t.port, handle=h, transport=t)
+    raise ValueError(f"unknown transport {transport!r} "
+                     "(expected 'inprocess' or 'loopback')")
+
+
 def make_endpoints(n: int, *, inbound_bw: float | None = None,
                    base_port: int = 6379, transport: str = "inprocess",
                    clock: Clock | None = None,
@@ -176,27 +238,9 @@ def make_endpoints(n: int, *, inbound_bw: float | None = None,
     All endpoints of one fleet share one ``SeqLedger`` (created here when
     not supplied): exactly-once dedupe must recognize a frame replayed onto
     a *different* endpoint after failover."""
-    from repro.core.transport import (CloudEndpoint, LoopbackTransport,
-                                      VirtualLoopbackTransport)
     clock = ensure_clock(clock)
     if ledger is None:
         ledger = SeqLedger()
-    eps = []
-    for i in range(n):
-        h = Endpoint(name=f"ep{i}", inbound_bw=inbound_bw, port=base_port,
-                     clock=clock, ledger=ledger)
-        if transport == "inprocess":
-            eps.append(CloudEndpoint(service_ip=f"10.0.0.{i+1}",
-                                     service_port=base_port, handle=h))
-        elif transport == "loopback":
-            if clock.virtual:
-                t = VirtualLoopbackTransport(h, clock=clock)
-            else:
-                t = LoopbackTransport(h)
-            eps.append(CloudEndpoint(service_ip="127.0.0.1",
-                                     service_port=t.port, handle=h,
-                                     transport=t))
-        else:
-            raise ValueError(f"unknown transport {transport!r} "
-                             "(expected 'inprocess' or 'loopback')")
-    return eps
+    return [make_endpoint(i, inbound_bw=inbound_bw, base_port=base_port,
+                          transport=transport, clock=clock, ledger=ledger)
+            for i in range(n)]

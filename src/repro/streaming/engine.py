@@ -336,10 +336,16 @@ class StreamEngine:
         self.rebalance()
         return ex
 
-    def remove_executor(self):
+    def remove_executor(self, idx: int | None = None):
+        """Graceful scale-in.  ``idx=None`` retires the newest alive
+        executor; an explicit ``idx`` retires that one (the cloud capacity
+        plane drains a *specific* node's executors before poweroff).
+        Queued partitions are reassigned to survivors either way."""
         with self._elock:
             removed = None
-            for ex in reversed(self.executors):
+            cands = (reversed(self.executors) if idx is None
+                     else [self.executors[idx]])
+            for ex in cands:
                 if ex.alive:
                     self._account_locked()
                     ex.alive = False
@@ -350,6 +356,11 @@ class StreamEngine:
         if removed is not None:
             self.rebalance()
         return removed
+
+    def attach_endpoint(self, handle) -> None:
+        """Start draining a freshly provisioned endpoint's streams (cloud
+        capacity plane: list append is atomic, pollers see it next cycle)."""
+        self.endpoints.append(handle)
 
     def kill_executor(self, idx: int):
         """Hard failure; queued partitions are reassigned to survivors."""

@@ -55,6 +55,11 @@ class WorkflowConfig:
     # independently of their neighbors).
     delivery: str = "at-most-once"     # at-most-once | exactly-once
     wal_capacity_bytes: int = 16 << 20 # per-group WAL byte bound
+    # Directory for a disk-backed WAL (runtime.wal.FileWalStore): segments
+    # sync on every checkpoint and at close, and a Session built over the
+    # same directory adopts the surviving log — exactly-once across host
+    # crashes, not just in-process ones.  None keeps the WAL memory-only.
+    wal_dir: str | None = None
     # -- engine (micro-batching + executors) ------------------------------
     trigger_interval: float = 1.0
     min_batch: int = 2
@@ -132,6 +137,9 @@ class WorkflowConfig:
                 raise ValueError(
                     "delivery='exactly-once' requires delta_encode=False "
                     "(replayed frames must decode independently)")
+        if self.wal_dir is not None and self.delivery != "exactly-once":
+            raise ValueError("wal_dir requires delivery='exactly-once' "
+                             "(only the WAL path persists anything)")
         if self.wal_capacity_bytes < (1 << 12):
             raise ValueError("wal_capacity_bytes must be >= 4096")
         self.elasticity.validate()

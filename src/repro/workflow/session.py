@@ -33,9 +33,9 @@ from repro.runtime.controller import ElasticController
 from repro.runtime.fault import FailureDetector
 from repro.runtime.recovery import RecoverySupervisor
 from repro.runtime.telemetry import TelemetryBus
-from repro.runtime.wal import SeqLedger, WalStore
+from repro.runtime.wal import FileWalStore, SeqLedger, WalStore
 from repro.streaming.dag import AnalysisDAG
-from repro.streaming.endpoint import make_endpoints
+from repro.streaming.endpoint import make_endpoint, make_endpoints
 from repro.streaming.engine import StreamEngine
 from repro.streaming.operators import (ExecutionPlan, OperatorPipeline,
                                        lower_dag)
@@ -144,10 +144,20 @@ class Session:
             if ledger is None:
                 ledger = SeqLedger()
             if wal is None:
-                wal = WalStore(capacity_bytes=self.config.wal_capacity_bytes,
-                               queue_capacity=self.config.queue_capacity,
-                               retain="commit" if checkpoints is not None
-                               else "ack")
+                retain = "commit" if checkpoints is not None else "ack"
+                if self.config.wal_dir is not None:
+                    # disk-backed: adopts whatever a previous run synced
+                    # into the directory (torn tails discarded on load)
+                    wal = FileWalStore(
+                        self.config.wal_dir,
+                        capacity_bytes=self.config.wal_capacity_bytes,
+                        queue_capacity=self.config.queue_capacity,
+                        retain=retain)
+                else:
+                    wal = WalStore(
+                        capacity_bytes=self.config.wal_capacity_bytes,
+                        queue_capacity=self.config.queue_capacity,
+                        retain=retain)
         self._ledger = ledger
         self._wal = wal
         self._stats_base: dict[str, int] = {}
@@ -174,6 +184,12 @@ class Session:
         self.telemetry: TelemetryBus | None = None
         self.detector: FailureDetector | None = None
         self.controller: ElasticController | None = None
+        # cloud capacity plane (built with the control plane when
+        # ``elasticity.provision``); _dynamic_eps tracks endpoints attached
+        # to the live session so teardown closes them even when the base
+        # fleet was caller-supplied
+        self.provisioner = None
+        self._dynamic_eps: list = []
         self._fields: dict[tuple, FieldHandle] = {}
         self._closed = False
         try:
@@ -188,6 +204,32 @@ class Session:
     # ---- consumer-side wiring -------------------------------------------
     def _handles(self) -> list:
         return [e.handle for e in self.endpoints]
+
+    def attach_endpoint(self) -> int:
+        """Attach one more endpoint to the LIVE session (cloud capacity
+        plane: a freshly booted node brings its endpoint up mid-run).
+
+        The new endpoint shares the fleet's SeqLedger so exactly-once
+        dedupe spans it, and is registered with the broker (routable on
+        the next send/reroute), the engine (drained next trigger cycle)
+        and the telemetry bus.  Returns the new fleet index."""
+        i = len(self.endpoints)
+        ledger = self._ledger
+        if ledger is None and self.endpoints:
+            ledger = getattr(self.endpoints[0].handle, "ledger", None)
+        ep = make_endpoint(i, inbound_bw=self.config.inbound_bw,
+                           base_port=self.config.base_port,
+                           transport=self.config.transport,
+                           clock=self.clock, ledger=ledger)
+        self.endpoints.append(ep)
+        self._dynamic_eps.append(ep)
+        bidx = self.broker.attach_endpoint(ep)
+        assert bidx == i, f"broker fleet index diverged: {bidx} != {i}"
+        if self.engine is not None:
+            self.engine.attach_endpoint(ep.handle)
+        if self.telemetry is not None:
+            self.telemetry.endpoints.append(ep.handle)
+        return i
 
     def attach_analyzer(self, fn) -> StreamEngine:
         """Point the engine at ``fn(stream_key, records)`` (created lazily
@@ -263,10 +305,22 @@ class Session:
             self.recovery = RecoverySupervisor(broker=self.broker,
                                                engine=self.engine,
                                                clock=self.clock)
+        if el.provision:
+            from repro.cloud import (DEFAULT_CATALOG, CloudProvisioner,
+                                     SessionFabric)
+            if el.node_class not in DEFAULT_CATALOG:
+                raise ValueError(
+                    f"unknown elasticity.node_class {el.node_class!r}; "
+                    f"catalog has {sorted(DEFAULT_CATALOG)}")
+            self.provisioner = CloudProvisioner(
+                SessionFabric(self), clock=self.clock,
+                seed=self.config.clock_seed,
+                retry_limit=el.provision_retry_limit,
+                backoff_s=el.provision_backoff_s)
         self.controller = ElasticController(
             self.telemetry, el, engine=self.engine, broker=self.broker,
             detector=self.detector, clock=self.clock,
-            recovery=self.recovery)
+            recovery=self.recovery, provisioner=self.provisioner)
         self.controller.start()
 
     # ---- producer-side API ----------------------------------------------
@@ -374,6 +428,10 @@ class Session:
         }
         cid = self._ckpt_store.save(state)
         self.broker.commit_wal()
+        if isinstance(self._wal, FileWalStore):
+            # durable cut: the commit frontier (and the tail behind it)
+            # reaches disk, so a *host* crash restores from this checkpoint
+            self._wal.sync()
         return cid
 
     def kill(self) -> None:
@@ -389,11 +447,12 @@ class Session:
         self.broker.kill()
         if self.engine is not None:
             self.engine.kill()
-        if self._owns_endpoints:
-            for ep in self.endpoints:
-                close = getattr(ep, "close", None)
-                if close is not None:
-                    close()
+        closing = list(self.endpoints) if self._owns_endpoints \
+            else list(self._dynamic_eps)
+        for ep in closing:
+            close = getattr(ep, "close", None)
+            if close is not None:
+                close()
         self.clock.detach(self._attached_thread)
 
     def restart_broker(self) -> Broker:
@@ -483,11 +542,18 @@ class Session:
         stats = self._merge_base(self.broker.finalize())
         if self.engine is not None:
             self.engine.drain_and_stop()
-        if self._owns_endpoints:
-            for ep in self.endpoints:
-                close = getattr(ep, "close", None)
-                if close is not None:
-                    close()
+        if self.provisioner is not None:
+            # close the capacity books: any node still booting/ready/
+            # draining is powered off now, so the cost ledger ends closed
+            self.provisioner.shutdown()
+        if isinstance(self._wal, FileWalStore):
+            self._wal.sync()
+        closing = list(self.endpoints) if self._owns_endpoints \
+            else list(self._dynamic_eps)
+        for ep in closing:
+            close = getattr(ep, "close", None)
+            if close is not None:
+                close()
         # leave the virtual schedule: every component thread is joined by
         # now.  Detach the thread __init__ attached (not necessarily the
         # closer) so a cross-thread close can't strand the builder as a

@@ -131,6 +131,51 @@ def test_endpoint_failover_reroutes(mk):
     assert broker.stats.sent == 40
 
 
+def test_reroute_picks_least_loaded_survivor():
+    """Proactive reroute must NOT dogpile the ring-order neighbor: with the
+    primary dead, the group goes to the survivor with the least
+    pending+ingest load, not simply the next index."""
+    eps = make_endpoints(3)
+    plan = GroupPlan(n_producers=3, n_groups=3, executors_per_group=2)
+    broker = Broker(plan, eps, BrokerConfig(retry_limit=3))
+    try:
+        # pile undrained records onto ep1 (group 1's designated endpoint)
+        for step in range(20):
+            broker.write("f", 1, step, np.zeros(4, np.float32))
+        for _ in range(200):
+            if eps[1].handle.records_in >= 20:
+                break
+            time.sleep(0.01)
+        assert eps[1].handle.pending() >= 20
+        eps[0].handle.fail()
+        assert broker.reroute_from_endpoint(0) == 1   # one group moved
+        # group 0 must land on the EMPTY ep2, not the loaded neighbor ep1
+        assert broker.groups_on_endpoint(2) == 2      # its own group 2 + group 0
+        assert broker.groups_on_endpoint(1) == 1
+        assert broker.stats.rerouted == 1
+    finally:
+        eps[0].handle.recover()
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
+def test_reroute_tie_breaks_in_ring_order():
+    eps = make_endpoints(3)
+    plan = GroupPlan(n_producers=3, n_groups=3, executors_per_group=2)
+    broker = Broker(plan, eps, BrokerConfig())
+    try:
+        eps[0].handle.fail()
+        broker.reroute_from_endpoint(0)
+        # all survivors idle -> legacy ring order: next index wins
+        assert broker.groups_on_endpoint(1) == 2
+    finally:
+        eps[0].handle.recover()
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
 def test_paper_api_surface():
     eps = make_endpoints(2)
     broker = broker_connect(eps, n_producers=4)

@@ -1,0 +1,353 @@
+"""Cloud capacity plane: NodeClass catalog, CostLedger, CloudProvisioner
+lifecycle (pending → booting → ready → draining → off), retry/backoff and
+recover, fault injection, and the full Session integration — dynamic
+endpoint attach, drain-before-poweroff with zero loss, and deterministic
+provisioning scenarios under VirtualClock."""
+import pytest
+
+from repro.cloud import (DEFAULT_CATALOG, BOOTING, DRAINING, FAILED, OFF,
+                         PENDING, READY, CloudProvisioner, CostLedger,
+                         NodeClass)
+from repro.runtime.clock import VirtualClock
+from repro.runtime.controller import ElasticityConfig
+from repro.sim.scenario import Fault, LoadPhase, Scenario, run_scenario
+from repro.workflow import WorkflowConfig
+
+
+class FakeFabric:
+    """Records lifecycle calls; drain completion is test-controlled."""
+
+    def __init__(self):
+        self.attached = []
+        self.drains = []
+        self.offs = []
+        self.drained_ids = set()
+
+    def attach_node(self, node):
+        self.attached.append(node)
+        return len(self.attached) - 1, list(range(node.node_class.executors))
+
+    def begin_drain(self, node):
+        self.drains.append(node)
+
+    def node_drained(self, node):
+        return node.node_id in self.drained_ids
+
+    def finish_poweroff(self, node):
+        self.offs.append(node)
+
+
+def _prov(clk, *, catalog=None, seed=0, retry_limit=3, backoff_s=0.5):
+    fab = FakeFabric()
+    prov = CloudProvisioner(fab, catalog=catalog, clock=clk, seed=seed,
+                            retry_limit=retry_limit, backoff_s=backoff_s)
+    return prov, fab
+
+
+FAST = {"fast": NodeClass("fast", executors=2, cold_start_s=1.0,
+                          cold_start_jitter_s=0.0, cost_rate=2.0)}
+
+
+def test_node_lifecycle_happy_path():
+    clk = VirtualClock()
+    clk.attach()
+    prov, fab = _prov(clk, catalog=FAST)
+    node = prov.request_node("fast")
+    assert node.state == PENDING
+    assert prov.capacity_in_flight() == 2
+
+    prov.process_pending_tasks()           # power_on succeeds
+    assert node.state == BOOTING
+    assert prov.ledger.open_count == 1
+
+    prov.process_pending_tasks()           # boot not done yet
+    assert node.state == BOOTING and not fab.attached
+
+    clk.sleep(1.0)                         # past the cold start
+    prov.process_pending_tasks()
+    assert node.state == READY
+    assert node.endpoint_idx == 0 and node.executor_idxs == [0, 1]
+    assert prov.capacity_in_flight() == 0
+
+    prov.request_poweroff(node)
+    assert node.state == DRAINING and fab.drains == [node]
+    prov.process_pending_tasks()           # not drained yet: task re-queued
+    assert node.state == DRAINING and not fab.offs
+
+    fab.drained_ids.add(node.node_id)
+    clk.sleep(0.5)
+    prov.process_pending_tasks()
+    assert node.state == OFF and fab.offs == [node]
+    assert prov.ledger.closed
+    # billed from power_on (t=0) to power_off (t=1.5), at cost_rate 2.0
+    assert prov.ledger.node_seconds() == {"fast": 1.5}
+    assert prov.ledger.total_cost() == pytest.approx(3.0)
+    clk.detach()
+
+
+def test_poweroff_requires_ready():
+    clk = VirtualClock()
+    clk.attach()
+    prov, _ = _prov(clk, catalog=FAST)
+    node = prov.request_node("fast")
+    with pytest.raises(ValueError, match="READY"):
+        prov.request_poweroff(node)
+    clk.detach()
+
+
+def test_retry_backoff_then_failed_then_recover():
+    clk = VirtualClock()
+    clk.attach()
+    prov, fab = _prov(clk, catalog=FAST, retry_limit=2, backoff_s=0.5)
+    prov.inject_provision_failures(3)      # burn all attempts (1 + 2 retries)
+    node = prov.request_node("fast")
+
+    prov.process_pending_tasks()           # attempt 1 fails → retry at +0.5
+    assert node.state == PENDING and node.attempts == 1
+    prov.process_pending_tasks()           # backoff gate: nothing happens
+    assert node.attempts == 1
+    clk.sleep(0.5)
+    prov.process_pending_tasks()           # attempt 2 fails → retry at +1.0
+    assert node.attempts == 2
+    clk.sleep(1.0)
+    prov.process_pending_tasks()           # attempt 3 fails → FAILED
+    assert node.state == FAILED
+    assert prov.ledger.open_count == 0     # never powered on, never billed
+
+    assert prov.recover() == 1             # requeue
+    assert node.state == PENDING
+    prov.process_pending_tasks()           # no injected failures left
+    assert node.state == BOOTING
+    s = prov.summary()
+    assert s["provision_failures"] == 3 and s["retries"] == 2
+    assert s["nodes_failed"] == 1 and s["recovered"] == 1
+    clk.detach()
+
+
+def test_cold_start_jitter_is_seed_deterministic():
+    cat = {"j": NodeClass("j", cold_start_s=1.0, cold_start_jitter_s=0.5)}
+
+    def boots(seed):
+        clk = VirtualClock()
+        clk.attach()
+        prov, _ = _prov(clk, catalog=cat, seed=seed)
+        for _ in range(3):
+            prov.request_node("j")
+        prov.process_pending_tasks()
+        out = [d["boot_s"] for _, d in prov.events if d["event"] == "power_on"]
+        clk.detach()
+        return out
+
+    a, b, c = boots(7), boots(7), boots(8)
+    assert a == b                          # same seed → same jitter draws
+    assert a != c                          # different seed → different boots
+    assert all(1.0 <= x <= 1.5 for x in a)
+
+
+def test_boot_stall_extends_current_and_next_boot():
+    clk = VirtualClock()
+    clk.attach()
+    prov, fab = _prov(clk, catalog=FAST)
+    n1 = prov.request_node("fast")
+    prov.process_pending_tasks()
+    assert n1.state == BOOTING
+    prov.inject_boot_stall(2.0)            # extends the in-flight boot
+    clk.sleep(1.5)                         # past nominal 1.0s cold start
+    prov.process_pending_tasks()
+    assert n1.state == BOOTING
+    clk.sleep(1.5)                         # past 3.0s stalled deadline
+    prov.process_pending_tasks()
+    assert n1.state == READY
+
+    prov.inject_boot_stall(1.0)            # nothing booting: stalls the next
+    n2 = prov.request_node("fast")
+    prov.process_pending_tasks()
+    stall_boot = [d["boot_s"] for _, d in prov.events
+                  if d["event"] == "power_on" and d["node"] == n2.name]
+    assert stall_boot == [2.0]             # 1.0 cold start + 1.0 stall
+    clk.detach()
+
+
+def test_pick_poweroff_newest_ready_respecting_floor():
+    clk = VirtualClock()
+    clk.attach()
+    prov, fab = _prov(clk, catalog=FAST)
+    a = prov.request_node("fast")
+    b = prov.request_node("fast")
+    prov.process_pending_tasks()
+    clk.sleep(1.0)
+    prov.process_pending_tasks()
+    assert a.state == READY and b.state == READY
+    # newest first
+    assert prov.pick_poweroff(lambda n: True) is b
+    # predicate can veto the newest (e.g. min_executors floor)
+    assert prov.pick_poweroff(lambda n: n.node_id == a.node_id) is a
+    assert prov.pick_poweroff(lambda n: False) is None
+    # draining/booting nodes are never candidates
+    prov.request_poweroff(b)
+    assert prov.pick_poweroff(lambda n: True) is a
+    clk.detach()
+
+
+def test_shutdown_closes_ledger_for_inflight_nodes():
+    clk = VirtualClock()
+    clk.attach()
+    prov, fab = _prov(clk, catalog=FAST)
+    prov.request_node("fast")              # will be BOOTING at shutdown
+    prov.process_pending_tasks()
+    pending = prov.request_node("fast")    # never processed: stays PENDING
+    clk.sleep(0.2)
+    prov.shutdown()
+    assert prov.ledger.closed
+    s = prov.summary()
+    assert s["states"].get("off", 0) >= 1
+    assert pending.state == PENDING        # never billed, never powered on
+    assert s["pending_tasks"] == 0
+    clk.detach()
+
+
+def test_ledger_summary_rounds_and_closes():
+    led = CostLedger()
+
+    class N:
+        node_id = 0
+        node_class = DEFAULT_CATALOG["standard"]
+
+    led.power_on(N, 1.0)
+    assert not led.closed
+    led.power_off(N, 3.5)
+    assert led.closed
+    s = led.summary()
+    assert s["node_seconds"] == {"standard": 2.5}
+    assert s["total_cost"] == pytest.approx(2.5 * 1.8)
+    led.power_off(N, 9.0)                  # idempotent: no open record
+    assert led.summary() == s
+
+
+# ---------------------------------------------------------------------------
+# Session integration: the controller drives the provisioner end to end
+# ---------------------------------------------------------------------------
+
+def _provisioned_workflow(delivery="at-most-once", **el_overrides):
+    # target_p99_s is huge on purpose: the engine's latency window is 30
+    # virtual seconds, so spike-era samples would keep a tight p99 target
+    # breached (blocking scale-in) through the whole quiet tail.  Scaling
+    # here is driven by backlog, the leading signal.
+    el = dict(enabled=True, interval_s=0.1, target_p99_s=1000.0,
+              min_executors=1, max_executors=3, scale_up_step=1,
+              backlog_high=8, idle_scale_down_s=0.4, cooldown_s=0.2,
+              adapt_batch=False, heartbeat_timeout_s=0.5,
+              provision=True, node_class="small")
+    el.update(el_overrides)
+    return WorkflowConfig(
+        n_producers=2, n_groups=1, executors_per_group=1,
+        compress="none", backpressure="block", queue_capacity=1024,
+        trigger_interval=0.05, min_batch=1, n_executors=1,
+        flush_timeout_s=60.0, clock="virtual", delivery=delivery,
+        elasticity=ElasticityConfig(**el))
+
+
+def _spike_scenario(workflow, *, faults=(), seed=0, tail_s=4.0):
+    return Scenario(
+        workflow=workflow,
+        phases=(LoadPhase("low", duration_s=1.0, rate_hz=2),
+                LoadPhase("spike", duration_s=3.0, rate_hz=25),
+                LoadPhase("quiet", duration_s=tail_s, rate_hz=1)),
+        faults=tuple(faults), seed=seed, analysis_cost_s=0.03)
+
+
+def test_session_provisions_capacity_and_drains_back():
+    tr = run_scenario(_spike_scenario(_provisioned_workflow()))
+    s = tr.summary
+    prov = s["provisioning"]
+    # the spike forced at least one async provision through to READY
+    assert s["controller_actions"].get("provision", 0) >= 1
+    assert prov["nodes_ready"] >= 1
+    # the quiet tail drained at least one node back off — through the
+    # drain-before-poweroff path, not the shutdown sweeper
+    assert s["controller_actions"].get("drain_node", 0) >= 1
+    assert any(d["event"] == "power_off"
+               for _, d in tr.events_of("provision"))
+    # zero loss across scale-out AND scale-in; cost books closed
+    assert s["analyzed"] == s["written"] > 0
+    assert s["dropped_by_policy"] == 0
+    assert prov["ledger"]["closed"]
+    assert prov["ledger"]["total_node_seconds"] > 0
+    # lifecycle events all landed in the trace
+    events = {d["event"] for _, d in tr.events_of("provision")}
+    assert {"requested", "power_on", "ready", "drain"} <= events
+
+
+def test_session_drains_live_endpoint_before_poweroff():
+    """Force real traffic onto a provisioned endpoint (base endpoint dies),
+    then scale back in: the group must be rerouted off the node and its
+    buffered records analyzed before the node powers off — zero loss.
+    Exactly-once delivery: the endpoint dies before the first node is READY,
+    so the WAL must replay the orphaned tail onto the provisioned one."""
+    faults = (Fault(t=2.2, kind="fail_endpoint", target=0),
+              Fault(t=3.2, kind="recover_endpoint", target=0))
+    tr = run_scenario(_spike_scenario(
+        _provisioned_workflow(delivery="exactly-once"), faults=faults,
+        tail_s=5.0))
+    s = tr.summary
+    # the group really moved onto the dynamic endpoint and back
+    assert s["rerouted"] >= 1
+    dyn_in = [d for _, d in tr.events_of("provision") if d["event"] == "ready"]
+    assert dyn_in, "no node ever became ready"
+    assert s["provisioning"]["ledger"]["closed"]
+    assert s["analyzed"] == s["written"] > 0
+    assert s["dropped_by_policy"] == 0
+
+
+def test_provision_fail_and_boot_stall_faults():
+    faults = (Fault(t=0.9, kind="provision_fail", value=2),
+              Fault(t=1.4, kind="boot_stall", value=0.5))
+    tr = run_scenario(_spike_scenario(
+        _provisioned_workflow(provision_backoff_s=0.2), faults=faults))
+    s = tr.summary
+    assert all(d["ok"] for _, d in tr.events_of("fault"))
+    prov = s["provisioning"]
+    # both injected failures were consumed by power_on attempts, and the
+    # retry/backoff path still delivered the capacity
+    assert prov["provision_failures"] >= 2
+    assert prov["retries"] >= 1
+    assert prov["nodes_ready"] >= 1
+    assert prov["ledger"]["closed"]
+    assert s["analyzed"] == s["written"] > 0
+
+
+def test_provisioning_scenario_is_deterministic():
+    def run():
+        tr = run_scenario(_spike_scenario(
+            _provisioned_workflow(),
+            faults=(Fault(t=0.9, kind="provision_fail", value=1),),
+            seed=3))
+        return tr.to_jsonl()
+
+    assert run() == run()
+
+
+def test_flap_suppression_counts_inflight_capacity():
+    """While a node is still booting, repeated breaches must not request a
+    second wave past max_executors' worth of capacity."""
+    cat_slow = ElasticityConfig(
+        enabled=True, interval_s=0.1, target_p99_s=1000.0, min_executors=1,
+        max_executors=3, scale_up_step=4, backlog_high=8, cooldown_s=0.0,
+        idle_scale_down_s=30.0, adapt_batch=False, heartbeat_timeout_s=0.5,
+        provision=True, node_class="standard")   # 2 execs, 1.2-1.6s boot
+    wf = WorkflowConfig(
+        n_producers=2, n_groups=1, executors_per_group=1, compress="none",
+        backpressure="block", queue_capacity=1024, trigger_interval=0.05,
+        min_batch=1, n_executors=1, flush_timeout_s=60.0, clock="virtual",
+        elasticity=cat_slow)
+    tr = run_scenario(Scenario(
+        workflow=wf,
+        phases=(LoadPhase("spike", duration_s=2.0, rate_hz=30),
+                LoadPhase("cool", duration_s=2.0, rate_hz=1)),
+        seed=0, analysis_cost_s=0.03))
+    prov = tr.summary["provisioning"]
+    # alive=1, max=3, standard=2 execs → exactly ONE node ever fits;
+    # cooldown_s=0 means the breach re-fires every tick during the boot,
+    # but in-flight capacity suppresses every duplicate request
+    assert prov["requests"] == 1
+    assert tr.summary["controller_actions"].get("provision", 0) == 1

@@ -1,0 +1,132 @@
+"""SessionCheckpointStore commit/prune contract and SeqLedger
+snapshot/restore roundtrips — the two durable state carriers behind
+Session.checkpoint()/restore()."""
+import pytest
+
+from repro.checkpoint.session_store import SessionCheckpointStore
+from repro.runtime.wal import SeqLedger
+
+
+# ------------------------------------------------------------ pruning (gc)
+def test_keep_n_prunes_oldest_and_load_returns_latest(tmp_path):
+    store = SessionCheckpointStore(tmp_path, keep=3)
+    for i in range(1, 8):
+        assert store.save({"step": i}) == i
+    # only the newest `keep` survive
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["ckpt_00000005", "ckpt_00000006", "ckpt_00000007"]
+    state, cid = store.load()
+    assert (state, cid) == ({"step": 7}, 7)
+    # pinned loads work for survivors, fail for pruned ids
+    assert store.load(5)[0] == {"step": 5}
+    with pytest.raises(FileNotFoundError):
+        store.load(2)
+
+
+def test_keep_one_always_single_survivor(tmp_path):
+    store = SessionCheckpointStore(tmp_path, keep=1)
+    for i in range(4):
+        store.save({"i": i})
+    assert [p.name for p in tmp_path.iterdir()] == ["ckpt_00000004"]
+    assert store.latest_id() == 4
+
+
+def test_keep_must_be_positive(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        SessionCheckpointStore(tmp_path, keep=0)
+
+
+def test_ids_continue_after_pruning(tmp_path):
+    """gc must never recycle ids: the next save counts from the newest
+    COMMITTED id even when older ones were pruned away."""
+    store = SessionCheckpointStore(tmp_path, keep=1)
+    for _ in range(3):
+        store.save({})
+    # a second store over the same directory continues the sequence
+    again = SessionCheckpointStore(tmp_path, keep=1)
+    assert again.save({}) == 4
+
+
+def test_uncommitted_and_tmp_dirs_are_invisible_and_swept(tmp_path):
+    store = SessionCheckpointStore(tmp_path, keep=2)
+    store.save({"ok": True})
+    # simulate two crash artifacts: a torn stage dir and a renamed dir
+    # that never got its COMMITTED marker
+    (tmp_path / ".tmp_ckpt_00000009").mkdir()
+    torn = tmp_path / "ckpt_00000005"
+    torn.mkdir()
+    (torn / "state.pkl").write_bytes(b"garbage")
+    # neither is loadable...
+    assert store.latest_id() == 1
+    with pytest.raises(FileNotFoundError):
+        store.load(5)
+    # ...and the next save sweeps both
+    store.save({"ok": 2})
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["ckpt_00000001", "ckpt_00000002"]
+
+
+def test_alien_dirnames_are_ignored(tmp_path):
+    (tmp_path / "ckpt_notanumber").mkdir()
+    (tmp_path / "ckpt_notanumber" / "COMMITTED").touch()
+    store = SessionCheckpointStore(tmp_path, keep=2)
+    assert store.latest_id() is None
+    assert store.save({}) == 1               # alien dir never feeds the ids
+
+
+def test_load_empty_store_raises(tmp_path):
+    store = SessionCheckpointStore(tmp_path)
+    with pytest.raises(FileNotFoundError, match="no committed"):
+        store.load()
+
+
+def test_format_mismatch_rejected(tmp_path):
+    import json
+    store = SessionCheckpointStore(tmp_path)
+    cid = store.save({"x": 1})
+    man = tmp_path / f"ckpt_{cid:08d}" / "manifest.json"
+    man.write_text(json.dumps({"id": cid, "format": 99}))
+    with pytest.raises(ValueError, match="format"):
+        store.load(cid)
+
+
+# ------------------------------------------------- SeqLedger snapshot cycle
+def test_empty_ledger_snapshot_roundtrip():
+    led = SeqLedger()
+    snap = led.snapshot()
+    assert snap == {"applied": {}}
+    led2 = SeqLedger()
+    led2.restore(snap)
+    assert led2.applied(0) == 0              # untouched groups read as 0
+    assert led2.admit(0, 1, 3) == 0          # and admit normally afterwards
+
+
+def test_mid_replay_snapshot_restores_identical_dedupe():
+    """Snapshot taken while a replay is half-applied: the restored ledger
+    must dedupe the remaining replay exactly like the original would."""
+    led = SeqLedger()
+    led.admit(0, 1, 4)                       # frames 1..4 applied
+    led.admit(0, 5, 2)                       # ...and 5..6
+    led.admit(1, 1, 1)
+    snap = led.snapshot()
+
+    restored = SeqLedger()
+    restored.restore(snap)
+    for g in (0, 1):
+        assert restored.applied(g) == led.applied(g)
+    # replaying the full history: same skip counts on both ledgers
+    for args in ((0, 1, 4), (0, 5, 2), (0, 7, 3), (1, 1, 1), (1, 2, 2)):
+        assert restored.admit(*args) == led.admit(*args)
+    assert restored.applied(0) == led.applied(0) == 9
+    assert restored.applied(1) == led.applied(1) == 3
+
+
+def test_snapshot_is_a_copy_not_a_view():
+    led = SeqLedger()
+    led.admit(0, 1, 2)
+    snap = led.snapshot()
+    led.admit(0, 3, 2)                       # mutate after snapshot
+    assert snap["applied"][0] == 2           # snapshot frozen at capture time
+    restored = SeqLedger()
+    restored.restore(snap)
+    assert restored.applied(0) == 2
