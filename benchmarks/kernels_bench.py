@@ -20,13 +20,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.dmd import StreamingDMD
+from repro.analysis.dmd import StreamingDMD, batched_window_dmd, window_dmd
 from repro.core.records import StreamRecord, encode, decode, encode_batch, \
     decode_batch
 from repro.kernels import ref
 from repro.models.layers import flash_attention
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_hotpath.json"
+MULTIKEY_JSON = Path(__file__).resolve().parents[1] / "BENCH_multikey.json"
 
 
 def _time(fn, *args, reps=5):
@@ -126,7 +127,8 @@ def bench_dmd():
             ("streaming_dmd_batched_128", us_b, "per-snapshot, batch=20")]
 
 
-def _run_dmd_protocol(snaps, batch: int | None, eigs: bool = True):
+def _run_dmd_protocol(snaps, batch: int | None, eigs: bool = True,
+                      donate: bool = True):
     """Run the update(+eigenvalues) protocol; returns (wall_s, counters).
 
     eigs=False isolates the update path: the full protocol also runs 16x
@@ -134,7 +136,7 @@ def _run_dmd_protocol(snaps, batch: int | None, eigs: bool = True):
     per record), so the update-only numbers are what attribute the win to
     transfer/dispatch batching alone."""
     d = snaps.shape[1]
-    sd = StreamingDMD(n_features=d, window=16, rank=4)
+    sd = StreamingDMD(n_features=d, window=16, rank=4, donate=donate)
     t0 = time.time()
     if batch is None:              # seed protocol: one device round per record
         for s in snaps:
@@ -166,6 +168,17 @@ def bench_hotpath(write_json: bool = True):
     # cadence (the full protocol also amortizes eigenvalues() per batch)
     wall_useq, c_useq = _run_dmd_protocol(snaps, None, eigs=False)
     wall_ubat, c_ubat = _run_dmd_protocol(snaps, batch, eigs=False)
+
+    # d=512 update-only: donation + the no-copy block path at the width the
+    # paper's field snapshots actually arrive at (512 features/rank)
+    d2 = 512
+    snaps2 = rng.randn(total, d2).astype(np.float32)
+    _run_dmd_protocol(snaps2, None, eigs=False)          # warm
+    _run_dmd_protocol(snaps2, batch, eigs=False)
+    _run_dmd_protocol(snaps2, batch, eigs=False, donate=False)
+    w512_seq, c512_seq = _run_dmd_protocol(snaps2, None, eigs=False)
+    w512_bat, c512_bat = _run_dmd_protocol(snaps2, batch, eigs=False)
+    w512_nod, _ = _run_dmd_protocol(snaps2, batch, eigs=False, donate=False)
 
     n_rec = 64
     recs = [StreamRecord("vel", 0, 1, s,
@@ -203,6 +216,15 @@ def bench_hotpath(write_json: bool = True):
                                  c_ubat["device_calls"]],
                 "h2d": [c_useq["h2d"], c_ubat["h2d"]],
             },
+            "update_only_d512": {
+                "per_snapshot_us": w512_seq * 1e6,
+                "batched_us": w512_bat * 1e6,
+                "batched_no_donate_us": w512_nod * 1e6,
+                "speedup": w512_seq / w512_bat,
+                "device_calls": [c512_seq["device_calls"],
+                                 c512_bat["device_calls"]],
+                "h2d": [c512_seq["h2d"], c512_bat["h2d"]],
+            },
         },
         "record_codec": {
             "single_x64_us": us_single,
@@ -222,17 +244,73 @@ def bench_hotpath(write_json: bool = True):
              f"{sd['speedup']:.1f}x"),
             ("hotpath_dmd_update_only_64", sd["update_only"]["batched_us"],
              f"{sd['update_only']['speedup']:.1f}x vs per-snapshot"),
+            ("hotpath_dmd_update_only_d512", sd["update_only_d512"]["batched_us"],
+             f"{sd['update_only_d512']['speedup']:.1f}x vs per-snapshot"),
             ("hotpath_codec_single_x64", us_single, f"{bytes_single}B"),
             ("hotpath_codec_batch_64", us_batch,
              f"{bytes_batch}B {us_single/us_batch:.1f}x")]
 
 
+def bench_multikey(write_json: bool = True):
+    """Per-pane ``window_dmd`` loop vs one vmapped ``batched_window_dmd``
+    dispatch across k co-fired keys (the BatchAggregate fast path).  Pane
+    lengths are ragged on purpose — bucketed padding must still coalesce
+    them into O(distinct buckets) device calls, not O(k)."""
+    rng = np.random.RandomState(0)
+    d, rank = 256, 8
+    lens = (8, 10, 12, 16)        # pads to the {8, 16} column buckets
+    result = {"config": {"d": d, "rank": rank, "pane_lens": list(lens),
+                         "backend": jax.default_backend()}, "k": {}}
+    rows = []
+    for k in (4, 16, 32):
+        panes = [[rng.randn(d).astype(np.float32)
+                  for _ in range(lens[i % len(lens)])] for i in range(k)]
+        for p in panes:                                  # warm per-bucket jit
+            window_dmd(p, rank=rank, n_features=d)
+        batched_window_dmd(panes, rank=rank, n_features=d)
+
+        # best-of-N: scheduler noise only ever ADDS time, and it penalizes
+        # the short batched dispatch disproportionately
+        def _best(fn, trials=7):
+            best = float("inf")
+            for _ in range(trials):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
+            return best * 1e6
+
+        us_loop = _best(lambda: [window_dmd(p, rank=rank, n_features=d)
+                                 for p in panes])
+        us_bat = _best(lambda: batched_window_dmd(panes, rank=rank,
+                                                  n_features=d))
+        result["k"][str(k)] = {"per_pane_us": us_loop, "batched_us": us_bat,
+                               "speedup": us_loop / us_bat}
+        rows.append((f"multikey_dmd_k{k}_d{d}", us_bat,
+                     f"{us_loop / us_bat:.1f}x vs per-pane loop"))
+    if write_json:
+        MULTIKEY_JSON.write_text(json.dumps(result, indent=2) + "\n")
+    return rows
+
+
+def _gate_multikey(min_speedup: float = 3.0):
+    """CI gate: the batched path must hold >= min_speedup at k >= 16."""
+    data = json.loads(MULTIKEY_JSON.read_text())
+    speedups = {int(k): v["speedup"] for k, v in data["k"].items()}
+    bad = {k: round(s, 2) for k, s in speedups.items()
+           if k >= 16 and s < min_speedup}
+    if bad:
+        raise SystemExit(
+            f"multikey gate FAILED: batched speedup < {min_speedup}x at {bad}")
+    print(f"# multikey gate OK: " + ", ".join(
+        f"k={k}: {s:.1f}x" for k, s in sorted(speedups.items())))
+
+
 SECTIONS = {"attention": bench_attention, "gram": bench_gram,
             "ssd": bench_ssd, "codec": bench_codec, "dmd": bench_dmd,
-            "hotpath": bench_hotpath}
+            "hotpath": bench_hotpath, "multikey": bench_multikey}
 
 
-def main(csv=True, only: str | None = None):
+def main(csv=True, only: str | None = None, gate: bool = False):
     want = list(SECTIONS) if not only else only.split(",")
     unknown = [n for n in want if n not in SECTIONS]
     if unknown:
@@ -245,6 +323,8 @@ def main(csv=True, only: str | None = None):
         print("kernel,us_per_call,derived")
         for name, us, d in rows:
             print(f"{name},{us:.1f},{d}")
+    if gate and "multikey" in want:
+        _gate_multikey()
     return rows
 
 
@@ -252,4 +332,7 @@ if __name__ == "__main__":
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma list of: " + ",".join(SECTIONS))
-    main(only=p.parse_args().only)
+    p.add_argument("--gate", action="store_true",
+                   help="fail unless batched multikey DMD >= 3x at k >= 16")
+    args = p.parse_args()
+    main(only=args.only, gate=args.gate)

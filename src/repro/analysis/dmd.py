@@ -1,9 +1,19 @@
 """Dynamic Mode Decomposition in JAX — the paper's Cloud-side analysis.
 
-Two implementations:
+Three implementations:
 
 * ``exact_dmd`` — PyDMD-equivalent batch DMD on a snapshot window
   (SVD -> low-rank operator -> eigenvalues), jitted.
+* ``window_dmd`` / ``batched_window_dmd`` — the stream-operator entry
+  points.  Both route through the *method-of-snapshots* solve
+  ``_masked_window_eigs``: eigenvalues come from the (m, m) snapshot Gram
+  matrix instead of the (d, m) SVD, so a window of d=512 features costs one
+  ``(d, m)·(d, m)`` einsum plus small-matrix eigendecompositions.  Because
+  validity is a mask rather than a shape, panes are zero-padded to
+  power-of-two buckets (features, snapshots, and — for the batched entry —
+  pane count), the jit cache stays O(log) across ragged windows, and
+  ``batched_window_dmd`` vmaps the whole solve across co-fired panes in a
+  single device dispatch.
 * ``StreamingDMD`` — online DMD over unbounded streams: Gram updates
   G += XᵀX, A += YᵀX over snapshot-pair blocks, eigenvalues from the
   Gram-space operator.  This is what each stream's executor runs per
@@ -15,9 +25,13 @@ never round-trip through the host between updates.  The batched entry point
 and issues a single device call per micro-batch — the fused Pallas
 ``gram_pair`` kernel (kernels/gram.py) on TPU, a jitted jnp matmul pair
 elsewhere — instead of one ``G += x xᵀ, A += y xᵀ`` dispatch (plus four
-host↔device transfers) per snapshot.  ``h2d_transfers`` / ``d2h_transfers``
-/ ``device_calls`` counters make the savings measurable
-(benchmarks/kernels_bench.py writes them to BENCH_hotpath.json).
+host↔device transfers) per snapshot.  The update **donates** G/A into the
+jitted accumulator (``donate_argnums``) so XLA updates them in place
+instead of allocating a fresh (d, d) pair per micro-batch, and
+``eigenvalues()`` caches its last solve until the next update lands.
+``h2d_transfers`` / ``d2h_transfers`` / ``device_calls`` counters make the
+savings measurable (benchmarks/kernels_bench.py writes them to
+BENCH_hotpath.json / BENCH_multikey.json).
 """
 from __future__ import annotations
 
@@ -55,8 +69,7 @@ def gram_update(G: jax.Array, A: jax.Array, x: jax.Array, y: jax.Array):
     return G + jnp.outer(x, x), A + jnp.outer(y, x)
 
 
-@jax.jit
-def gram_pair_update(G: jax.Array, A: jax.Array, X: jax.Array, Y: jax.Array):
+def _gram_pair_raw(G: jax.Array, A: jax.Array, X: jax.Array, Y: jax.Array):
     """Batched online-DMD update: G += XᵀX, A += YᵀX over (n, d) pair blocks.
 
     The portable jnp form of the fused Pallas ``gram_pair`` kernel
@@ -64,6 +77,14 @@ def gram_pair_update(G: jax.Array, A: jax.Array, X: jax.Array, Y: jax.Array):
     no-ops in both products, so callers may pad n freely."""
     Xf, Yf = X.astype(F32), Y.astype(F32)
     return G + Xf.T @ Xf, A + Yf.T @ Xf
+
+
+gram_pair_update = jax.jit(_gram_pair_raw)
+# donated flavor: XLA reuses the incoming G/A buffers for the outputs —
+# the hot loop stops allocating a fresh (d, d) pair per micro-batch.
+# Callers must not read the donated arrays afterwards (StreamingDMD
+# rebinds self._G/_A to the results, so nothing ever does).
+gram_pair_update_donated = jax.jit(_gram_pair_raw, donate_argnums=(0, 1))
 
 
 @partial(jax.jit, static_argnames=("rank",))
@@ -88,29 +109,186 @@ def gram_eigs(G: jax.Array, A: jax.Array, rank: int = 8,
     return jnp.where(good, eigs, jnp.nan + 0.0j)
 
 
+def _pad_rows(n: int) -> int:
+    """Round a batch size up to the next power of two so the jitted update
+    compiles O(log n) variants instead of one per micro-batch size."""
+    return 1 << max(0, n - 1).bit_length()
+
+
+def _pad_cols(n: int, minimum: int = 4) -> int:
+    """Power-of-two bucket for a pane's snapshot count (floor ``minimum``
+    so the tiniest legal pane, 3 snapshots, shares a bucket with 4)."""
+    return max(minimum, _pad_rows(n))
+
+
+def _masked_window_eigs(snaps: jax.Array, n_valid: jax.Array,
+                        rank: int, rel_tol: float = 1e-5):
+    """Windowed DMD on a zero-padded (d, m) pane, method of snapshots.
+
+    ``snaps`` holds ``n_valid`` real snapshot columns followed by zero
+    padding; ``rank``/shapes are static, ``n_valid`` is data, so one
+    compiled variant serves every pane in the same (d, m) bucket and the
+    whole thing vmaps across panes.
+
+    ``rel_tol`` applies to s² (the Gram eigenvalues): 1e-5 relative sits
+    safely above the f32 ``eigh`` noise floor (~machine-eps relative, so a
+    rank-deficient pane's junk directions straddle a 1e-7 cutoff and would
+    leak spurious near-zero eigenvalues into the spectrum).
+
+    Exactness: with X = snaps[:, :n-1], Y = snaps[:, 1:n], exact DMD's
+    reduced operator is A~ = Uᵀ Y V S⁻¹ with X = U S Vᵀ.  Substituting
+    Uᵀ = S⁻¹ Vᵀ Xᵀ gives A~' = S⁻¹ Vᵀ (XᵀY) V S⁻¹ — similar to A~ (same
+    eigenvalues), and V/S² are the eigenvectors/eigenvalues of the small
+    (m-1)² Gram XᵀX.  Zero feature rows change neither Gram; zero snapshot
+    columns are removed by masking column ``n_valid - 1`` of X (the one
+    padded position that holds real data) out of both Grams.  Spurious
+    directions (beyond the pane's true pair count or below ``rel_tol``)
+    are zeroed out of the operator — block-triangular, so they contribute
+    exact-zero eigenvalues — then the magnitude-descending sort pushes
+    them last and they are masked to NaN, which consumers already filter.
+    """
+    m = snaps.shape[1]
+    P = snaps.T @ snaps                           # (m, m) snapshot Gram
+    lane = jnp.arange(m - 1)
+    colmask = (lane < n_valid - 1).astype(F32)    # valid X columns
+    mm = colmask[:, None] * colmask[None, :]
+    G = P[:-1, :-1] * mm                          # XᵀX
+    C = P[:-1, 1:] * mm                           # XᵀY
+    s2, V = jnp.linalg.eigh(G)                    # ascending
+    r = min(rank, m - 1)
+    s2_r = s2[-r:][::-1]                          # top-r, descending
+    V_r = V[:, -r:][:, ::-1]
+    good = ((jnp.arange(r) < n_valid - 1)
+            & (s2_r > rel_tol * jnp.maximum(s2_r[0], 1e-30)))
+    sinv = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(s2_r, 1e-30)), 0.0)
+    M = (V_r.T @ C @ V_r) * (sinv[:, None] * sinv[None, :])
+    gm = good.astype(F32)
+    M = M * (gm[:, None] * gm[None, :])
+    eigs = jnp.linalg.eigvals(M)
+    eigs = eigs[jnp.argsort(-jnp.abs(eigs))]
+    return jnp.where(jnp.arange(r) < jnp.sum(good), eigs, jnp.nan + 0.0j)
+
+
+_window_solve = jax.jit(_masked_window_eigs, static_argnames=("rank",))
+
+# one vmapped+jitted solver per rank (rank is a config constant in
+# practice, so this dict stays O(1); the jit cache under each entry stays
+# O(log) thanks to power-of-two (k, d, m) bucketing by the callers)
+_BATCH_SOLVERS: dict[int, object] = {}
+
+
+def _batched_solver(rank: int):
+    fn = _BATCH_SOLVERS.get(rank)
+    if fn is None:
+        fn = jax.jit(jax.vmap(partial(_masked_window_eigs, rank=rank)))
+        _BATCH_SOLVERS[rank] = fn
+    return fn
+
+
+def _pane_rows(snapshots) -> list[np.ndarray]:
+    return [np.asarray(s, np.float32).reshape(-1) for s in snapshots]
+
+
+def _fill_pane(out: np.ndarray, rows: list[np.ndarray], d: int) -> None:
+    """Write a pane's snapshots into the (d_pad, m_pad) zero slab ``out``."""
+    if rows and all(r.size == rows[0].size for r in rows):
+        w = min(rows[0].size, d)        # uniform width: one C-level copy
+        out[:w, : len(rows)] = np.stack(rows, axis=1)[:w]
+        return
+    for j, r in enumerate(rows):
+        r = r[:d]
+        out[: r.size, j] = r
+
+
 def window_dmd(snapshots, rank: int = 8,
                n_features: int | None = None) -> np.ndarray:
     """Batch DMD over one window pane — the stream-operator entry point.
 
     ``snapshots``: iterable of 1-D arrays (a fired window's values, e.g.
     record payloads in step order).  Each is flattened and trimmed /
-    zero-padded to ``n_features`` (default: the longest snapshot), stacked
-    to the ``(d, n)`` matrix ``exact_dmd`` expects.  Windows shorter than 3
+    zero-padded to ``n_features`` (default: the longest snapshot).  The
+    pane is zero-padded to a power-of-two (d, m) bucket before the masked
+    solve, so sliding windows with ragged tails reuse O(log) compiled
+    variants instead of one per pane size.  Windows shorter than 3
     snapshots can't form a snapshot pair worth solving — returns the same
-    zero sentinel ``StreamingDMD.eigenvalues`` uses."""
-    rows = [np.asarray(s, np.float32).reshape(-1) for s in snapshots]
+    zero sentinel ``StreamingDMD.eigenvalues`` uses.  Null/padded
+    directions come back NaN; consumers filter non-finite entries."""
+    rows = _pane_rows(snapshots)
     if len(rows) < 3:
         return np.zeros(1, np.complex64)
     d = max(r.size for r in rows) if n_features is None else int(n_features)
-    rows = [np.pad(r[:d], (0, max(0, d - r[:d].size))) for r in rows]
-    eigs, _energy = exact_dmd(jnp.asarray(np.stack(rows, axis=1)), rank=rank)
+    m = len(rows)
+    pane = np.zeros((_pad_rows(max(d, 1)), _pad_cols(m)), np.float32)
+    _fill_pane(pane, rows, d)
+    eigs = _window_solve(jnp.asarray(pane), jnp.int32(m), rank=rank)
     return np.asarray(eigs)
 
 
-def _pad_rows(n: int) -> int:
-    """Round a batch size up to the next power of two so the jitted update
-    compiles O(log n) variants instead of one per micro-batch size."""
-    return 1 << max(0, n - 1).bit_length()
+def batched_window_dmd(panes, rank: int = 8,
+                       n_features: int | None = None) -> list[np.ndarray]:
+    """Multi-key windowed DMD: solve many co-fired panes in one dispatch.
+
+    ``panes``: sequence of snapshot iterables (one fired pane per key /
+    stream).  Panes are zero-padded into power-of-two (k, d, m) buckets and
+    each bucket goes through one vmapped ``_masked_window_eigs`` call —
+    k ragged panes cost O(distinct m-buckets) dispatches instead of k.
+    Returns one eigenvalue array per pane, in input order; panes shorter
+    than 3 snapshots get the zero sentinel, padding slots inside a bucket
+    are solved as empty panes and discarded."""
+    pane_rows = [_pane_rows(p) for p in panes]
+    out: list[np.ndarray | None] = [None] * len(pane_rows)
+    if n_features is None:
+        sizes = [r.size for rows in pane_rows for r in rows]
+        d = max(sizes) if sizes else 1
+    else:
+        d = int(n_features)
+    buckets: dict[int, list[int]] = {}
+    for i, rows in enumerate(pane_rows):
+        if len(rows) < 3:
+            out[i] = np.zeros(1, np.complex64)
+        else:
+            buckets.setdefault(_pad_cols(len(rows)), []).append(i)
+    # fold buckets one power-of-two level apart into the wider one: the
+    # masked solve makes extra column padding exactly invariant, and one
+    # slightly wider slab beats a whole extra dispatch for the narrow panes
+    grouped: list[tuple[int, list[int]]] = []
+    for mp in sorted(buckets, reverse=True):
+        if grouped and mp * 2 >= grouped[-1][0]:
+            grouped[-1][1].extend(buckets[mp])
+        else:
+            grouped.append((mp, list(buckets[mp])))
+    dp = _pad_rows(max(d, 1))
+    solver = _batched_solver(rank)
+    pending = []                          # dispatch all, then sync once
+    for mp, idxs in grouped:
+        kp = _pad_rows(len(idxs))
+        slab = np.zeros((kp, dp, mp), np.float32)
+        nv = np.zeros(kp, np.int32)       # padding panes solve as empty
+        for slot, i in enumerate(idxs):
+            _fill_pane(slab[slot], pane_rows[i], d)
+            nv[slot] = len(pane_rows[i])
+        pending.append((idxs, solver(jnp.asarray(slab), jnp.asarray(nv))))
+    for idxs, dev_eigs in pending:
+        eigs = np.asarray(dev_eigs)
+        for slot, i in enumerate(idxs):
+            out[i] = eigs[slot]
+    return out   # type: ignore[return-value]
+
+
+def make_dmd_aggregate(rank: int = 8, n_features: int | None = None,
+                       prepare=None):
+    """Build the batch function for a ``BatchAggregate`` window consumer.
+
+    Returns ``fn(items) -> list[np.ndarray]`` with ``items`` a list of
+    ``(key, values)`` pairs (the BatchAggregate contract); ``prepare``
+    (optional) maps a pane's value list to its snapshot iterable first
+    (e.g. ``lambda vals: [r.payload for r in vals]``).  Co-fired panes
+    across keys coalesce into one vmapped device dispatch — wire it as
+    ``BatchAggregate("dmd", make_dmd_aggregate(...))``."""
+    def batch_fn(items):
+        panes = [prepare(v) if prepare is not None else v for _k, v in items]
+        return batched_window_dmd(panes, rank=rank, n_features=n_features)
+    return batch_fn
 
 
 @dataclass
@@ -120,17 +298,24 @@ class StreamingDMD:
     ``use_kernel``: None = auto (fused Pallas kernel on TPU, jnp matmuls
     elsewhere — interpret-mode Pallas is not a hot-path option on CPU);
     True/False forces the choice (tests force True to exercise the kernel).
+    ``donate``: donate G/A buffers into the jitted update so XLA reuses
+    them in place (set False only when holding external references to the
+    internal Gram arrays across updates).
     """
 
     n_features: int
     window: int = 32                 # snapshots kept for exact re-solves
     rank: int = 8
     use_kernel: bool | None = None
+    donate: bool = True
     _buf: list = field(default_factory=list)
     _G: jax.Array | None = None      # (d, d) Gram, lives on device
     _A: jax.Array | None = None      # (d, d) cross-Gram, lives on device
     last_snapshot: np.ndarray | None = None
     n_seen: int = 0
+    # eigensolve cache: valid until the next update lands
+    _eigs_cache: np.ndarray | None = None
+    _eigs_seen: int = -1             # n_seen at the time of the cached solve
     # hot-path accounting (BENCH_hotpath.json scoreboard)
     h2d_transfers: int = 0
     d2h_transfers: int = 0
@@ -141,6 +326,23 @@ class StreamingDMD:
         if x.size < self.n_features:   # short payloads embed zero-padded
             x = np.pad(x, (0, self.n_features - x.size))
         return x
+
+    def _coerce_block(self, snaps) -> np.ndarray:
+        """(n, d) float32 block from any snapshot batch.  A 2-D ndarray of
+        matching width takes the no-copy fast path — the per-row python
+        loop is what BENCH_hotpath's update_only section times at d=512."""
+        if isinstance(snaps, np.ndarray) and snaps.ndim == 2:
+            arr = snaps.astype(np.float32, copy=False)
+            d = self.n_features
+            if arr.shape[1] > d:
+                arr = arr[:, :d]
+            elif arr.shape[1] < d:
+                arr = np.pad(arr, ((0, 0), (0, d - arr.shape[1])))
+            return arr
+        rows = [self._coerce(s) for s in snaps]
+        if not rows:
+            return np.empty((0, self.n_features), np.float32)
+        return np.stack(rows)
 
     def _apply_pair_block(self, X: np.ndarray, Y: np.ndarray) -> None:
         """One device call: G += XᵀX, A += YᵀX for an (n, d) pair block."""
@@ -155,10 +357,12 @@ class StreamingDMD:
                       else jax.default_backend() == "tpu")
         if use_kernel:
             from repro.kernels import ops
-            self._G, self._A = ops.gram_pair_accumulate(Xd, Yd, self._G,
-                                                        self._A)
+            fn = (ops.gram_pair_accumulate_donated if self.donate
+                  else ops.gram_pair_accumulate)
+            self._G, self._A = fn(Xd, Yd, self._G, self._A)
         else:
-            self._G, self._A = gram_pair_update(self._G, self._A, Xd, Yd)
+            fn = gram_pair_update_donated if self.donate else gram_pair_update
+            self._G, self._A = fn(self._G, self._A, Xd, Yd)
 
     def update(self, snapshot: np.ndarray) -> None:
         """Single-snapshot update (legacy per-record path)."""
@@ -169,13 +373,13 @@ class StreamingDMD:
         (each trimmed/zero-padded to ``n_features``).  Forms the shifted
         X = chain[:-1], Y = chain[1:] pair — chaining through the previous
         batch's last snapshot — and applies it in one device call."""
-        rows = [self._coerce(s) for s in snaps]
-        if not rows:
+        block = self._coerce_block(snaps)
+        if block.shape[0] == 0:
             return
         if self.last_snapshot is not None:
-            chain = np.stack([self.last_snapshot] + rows)
+            chain = np.concatenate([self.last_snapshot[None], block])
         else:
-            chain = np.stack(rows)
+            chain = block
         X, Y = chain[:-1], chain[1:]
         n = X.shape[0]
         if n:
@@ -185,22 +389,32 @@ class StreamingDMD:
                 X = np.concatenate([X, pad])
                 Y = np.concatenate([Y, pad])
             self._apply_pair_block(X, Y)
-        self.last_snapshot = chain[-1]
-        self._buf.extend(rows)
+        self.last_snapshot = np.ascontiguousarray(chain[-1])
+        self._buf.extend(block)
         del self._buf[: max(0, len(self._buf) - self.window)]
-        self.n_seen += len(rows)
+        self.n_seen += block.shape[0]
 
     def eigenvalues(self) -> np.ndarray:
+        """Current DMD eigenvalues.  Cached: a second call with no update
+        in between returns the previous solve without touching the device
+        (telemetry re-reads stop re-running ``gram_eigs`` on unchanged
+        G/A — watch ``device_calls`` stand still)."""
+        if self._eigs_cache is not None and self._eigs_seen == self.n_seen:
+            return self._eigs_cache
         if self.n_seen < 3:
-            return np.zeros(1, np.complex64)
-        if self.n_seen <= self.window:
+            eigs = np.zeros(1, np.complex64)
+        elif self.n_seen <= self.window:
             snaps = jnp.asarray(np.stack(self._buf, axis=1))
             self.h2d_transfers += 1
             self.device_calls += 1
-            eigs, _ = exact_dmd(snaps, rank=self.rank)
+            e, _ = exact_dmd(snaps, rank=self.rank)
             self.d2h_transfers += 1
-            return np.asarray(eigs)
-        self.device_calls += 1
-        eigs = gram_eigs(self._G, self._A, rank=self.rank)
-        self.d2h_transfers += 1
-        return np.asarray(eigs)
+            eigs = np.asarray(e)
+        else:
+            self.device_calls += 1
+            e = gram_eigs(self._G, self._A, rank=self.rank)
+            self.d2h_transfers += 1
+            eigs = np.asarray(e)
+        self._eigs_cache = eigs
+        self._eigs_seen = self.n_seen
+        return eigs

@@ -32,6 +32,12 @@ decoder's accumulated value is bitwise the encoder's reconstruction and
 quantization error no longer accumulates along a delta chain (every record's
 error is bounded by its own quantization step).  Legacy ``int8`` batch
 frames (shared blocks over the concatenated buffer) still decode.
+
+The uniform non-delta ``int8s`` rows path can quantize/dequantize through
+the Pallas kernel (kernels/quant.py) instead of host numpy —
+``set_quant_backend("auto"|"numpy"|"pallas")`` — with **byte-identical**
+wire frames in both directions; numpy stays the reference oracle and the
+CPU fallback.
 """
 from __future__ import annotations
 
@@ -51,6 +57,10 @@ except Exception:  # pragma: no cover
     zstd = None
 
 QBLOCK = 256
+# scale = max|block| * (1/127), as an explicit f32 multiply: XLA rewrites
+# division-by-constant into multiply-by-reciprocal, so the kernel and the
+# host path must share the multiply form for byte-identical frames
+_INV127 = np.float32(1.0 / 127.0)
 
 
 @dataclass(frozen=True)
@@ -87,7 +97,7 @@ def quantize_int8(x: np.ndarray) -> dict:
     pad = (-flat.size) % QBLOCK
     padded = np.pad(flat, (0, pad))
     blocks = padded.reshape(-1, QBLOCK)
-    scale = np.maximum(np.abs(blocks).max(axis=1), 1e-20) / 127.0
+    scale = np.maximum(np.abs(blocks).max(axis=1), 1e-20) * _INV127
     q = np.clip(np.round(blocks / scale[:, None]), -127, 127).astype(np.int8)
     return {"q": q.tobytes(), "scale": scale.astype(np.float32).tobytes(),
             "n": int(flat.size), "shape": list(x.shape)}
@@ -107,7 +117,7 @@ def _quantize_stream(flat: np.ndarray) -> tuple[bytes, bytes]:
     n = flat.size
     nb = max(1, (n + QBLOCK - 1) // QBLOCK)
     padded = np.pad(flat, (0, nb * QBLOCK - n)).reshape(nb, QBLOCK)
-    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) / 127.0
+    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) * _INV127
     q = np.clip(np.round(padded / scale[:, None]), -127, 127).astype(np.int8)
     return q.reshape(-1)[:n].tobytes(), scale.astype(np.float32).tobytes()
 
@@ -132,7 +142,7 @@ def _quantize_stream_rows(mat: np.ndarray) -> tuple[bytes, bytes]:
     nb = max(1, (n + QBLOCK - 1) // QBLOCK)
     padded = np.pad(mat, ((0, 0), (0, nb * QBLOCK - n))).reshape(b * nb,
                                                                  QBLOCK)
-    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) / 127.0
+    scale = np.maximum(np.abs(padded).max(axis=1), 1e-20) * _INV127
     q = np.clip(np.round(padded / scale[:, None]), -127, 127).astype(np.int8)
     q = np.ascontiguousarray(q.reshape(b, nb * QBLOCK)[:, :n])
     return q.tobytes(), scale.astype(np.float32).tobytes()
@@ -147,6 +157,84 @@ def _dequantize_stream_rows(qb: bytes, sb: bytes, b: int, n: int) -> np.ndarray:
     scale = np.frombuffer(sb, np.float32, count=b * nb)
     padded = np.pad(q, ((0, 0), (0, nb * QBLOCK - n))).reshape(b * nb, QBLOCK)
     return (padded * scale[:, None]).reshape(b, nb * QBLOCK)[:, :n]
+
+
+# ---- device (Pallas) rows codec -------------------------------------------
+# The uniform non-delta ``int8s`` path — the broker hot path — can run its
+# quantization pass through kernels/quant.py instead of host numpy, so a
+# device-resident producer never round-trips payloads through the host.
+# Backend knob: "numpy" forces the host path, "pallas" forces the kernel
+# (interpret mode off-TPU — what the parity tests pin), "auto" picks the
+# kernel only on native accelerator backends.  The numpy path remains the
+# reference oracle: both directions are **byte-identical** — same block
+# layout, same scale formula (max|block|/127 with a 1e-20 floor), and both
+# np.round and jnp.round round half to even.
+
+_QUANT_BACKENDS = ("auto", "numpy", "pallas")
+_quant_backend = "auto"
+
+
+def set_quant_backend(mode: str) -> str:
+    """Select the rows-codec backend; returns the previous setting."""
+    global _quant_backend
+    if mode not in _QUANT_BACKENDS:
+        raise ValueError(f"quant backend must be one of {_QUANT_BACKENDS}")
+    prev, _quant_backend = _quant_backend, mode
+    return prev
+
+
+def get_quant_backend() -> str:
+    return _quant_backend
+
+
+def _pallas_rows_active() -> bool:
+    if _quant_backend == "numpy":
+        return False
+    if _quant_backend == "pallas":
+        return True
+    import jax     # lazy: records must import without touching jax
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def _quantize_stream_rows_pallas(mat: np.ndarray) -> tuple[bytes, bytes]:
+    """``_quantize_stream_rows`` through the Pallas quant kernel.  Same
+    (b·nb, QBLOCK) row layout, byte-identical output."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    b, n = mat.shape
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    padded = np.pad(mat, ((0, 0), (0, nb * QBLOCK - n))).reshape(b * nb,
+                                                                 QBLOCK)
+    q, scale = ops.quantize(jnp.asarray(padded), block_rows=QBLOCK)
+    q = np.asarray(q).reshape(b, nb * QBLOCK)[:, :n]
+    return (np.ascontiguousarray(q).tobytes(),
+            np.asarray(scale).astype(np.float32, copy=False).tobytes())
+
+
+def _dequantize_stream_rows_pallas(qb: bytes, sb: bytes, b: int,
+                                   n: int) -> np.ndarray:
+    """``_dequantize_stream_rows`` through the Pallas dequant kernel."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    nb = max(1, (n + QBLOCK - 1) // QBLOCK)
+    q = np.zeros((b, nb * QBLOCK), np.int8)
+    q[:, :n] = np.frombuffer(qb, np.int8, count=b * n).reshape(b, n)
+    scale = np.frombuffer(sb, np.float32, count=b * nb)
+    x = ops.dequantize(jnp.asarray(q.reshape(b * nb, QBLOCK)),
+                       jnp.asarray(scale), block_rows=QBLOCK)
+    return np.asarray(x).reshape(b, nb * QBLOCK)[:, :n]
+
+
+def _quant_rows(mat: np.ndarray) -> tuple[bytes, bytes]:
+    if _pallas_rows_active():
+        return _quantize_stream_rows_pallas(mat)
+    return _quantize_stream_rows(mat)
+
+
+def _dequant_rows(qb: bytes, sb: bytes, b: int, n: int) -> np.ndarray:
+    if _pallas_rows_active():
+        return _dequantize_stream_rows_pallas(qb, sb, b, n)
+    return _dequantize_stream_rows(qb, sb, b, n)
 
 
 def encode(rec: StreamRecord, *, compress: str = "zstd") -> bytes:
@@ -218,7 +306,7 @@ def encode_batch(recs: list[StreamRecord], *, compress: str = "zstd",
         if not delta and len(sizes) == 1:
             # uniform non-delta batch (the broker hot path): one vectorized
             # quantization pass over all records at once
-            qb, sb = _quantize_stream_rows(np.stack(flats))
+            qb, sb = _quant_rows(np.stack(flats))
             flags = [0] * len(recs)
             payload: Any = {"q": qb, "scale": sb}
         else:
@@ -297,8 +385,7 @@ def decode_batch(data: bytes) -> list[StreamRecord]:
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
     rows = None
     if per_stream and not any(flags) and len(set(sizes)) == 1:
-        rows = _dequantize_stream_rows(msg["p"]["q"], msg["p"]["scale"],
-                                       n, sizes[0])
+        rows = _dequant_rows(msg["p"]["q"], msg["p"]["scale"], n, sizes[0])
     out: list[StreamRecord] = []
     off = q_off = s_off = 0
     prev_flat = None

@@ -4,9 +4,19 @@ On TPU the kernels compile natively; on the CPU host (this container, CI)
 they execute in ``interpret=True`` mode so every test exercises the *same*
 kernel bodies.  ``attention`` also handles the model-side layout:
 (B,S,H,D) <-> (B,H,S,D) and GQA head expansion.
+
+Block sizes resolve through a per-backend **config registry** so native
+TPU/GPU deployments can retune tiling without touching call sites:
+``get_block_config(op)`` returns the active sizes, ``set_block_config``
+overrides them, and ``autotune(op, candidates, make_args)`` times the
+candidates on the current backend and installs the winner.  Explicit
+keyword arguments at a call site always beat the registry.  Interpret
+mode stays the CI oracle — autotune on CPU just picks among interpreted
+runs, which is why CI pins the defaults instead of autotuning.
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -19,10 +29,68 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# --- block-size config registry -------------------------------------------
+# op -> {param: size}.  Defaults match the shipped kernels; native backends
+# override via set_block_config / autotune at process start.
+_DEFAULT_BLOCKS: dict[str, dict[str, int]] = {
+    "gram_pair": {"block_d": 128, "block_n": 128},
+    "quant": {"block_rows": 256},
+    "attention": {"block_q": 128, "block_k": 128},
+}
+_BLOCKS: dict[str, dict[str, int]] = {k: dict(v)
+                                      for k, v in _DEFAULT_BLOCKS.items()}
+
+
+def get_block_config(op: str) -> dict[str, int]:
+    """Active block sizes for ``op`` ('gram_pair', 'quant', 'attention')."""
+    return dict(_BLOCKS[op])
+
+
+def set_block_config(op: str, **sizes: int) -> None:
+    """Override block sizes for ``op`` (unknown params rejected).  Pass no
+    sizes to reset the op to its shipped defaults."""
+    if op not in _BLOCKS:
+        raise KeyError(f"unknown op {op!r}; have {sorted(_BLOCKS)}")
+    if not sizes:
+        _BLOCKS[op] = dict(_DEFAULT_BLOCKS[op])
+        return
+    bad = set(sizes) - set(_BLOCKS[op])
+    if bad:
+        raise KeyError(f"unknown block params {sorted(bad)} for op {op!r}")
+    _BLOCKS[op].update({k: int(v) for k, v in sizes.items()})
+
+
+def autotune(op: str, candidates, make_args, *, repeats: int = 3) -> dict:
+    """Time ``candidates`` (iterable of block-size dicts) for ``op`` on the
+    current backend and install the fastest via ``set_block_config``.
+
+    ``make_args`` builds the positional argument tuple for one call (fresh
+    per candidate, so donation-style aliasing can't skew timings).  Returns
+    ``{"op", "best", "timings_us"}``.  On CPU this times interpret-mode
+    runs — useful for smoke-testing the hook, not for picking TPU tiles.
+    """
+    runner = {"gram_pair": gram_pair_accumulate,
+              "quant": quantize,
+              "attention": attention}[op]
+    timings: list[tuple[float, dict]] = []
+    for cand in candidates:
+        args = make_args()
+        jax.block_until_ready(runner(*args, **cand))   # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = runner(*args, **cand)
+        jax.block_until_ready(out)
+        timings.append(((time.perf_counter() - t0) / repeats * 1e6,
+                        dict(cand)))
+    timings.sort(key=lambda t: t[0])
+    best = timings[0][1]
+    set_block_config(op, **best)
+    return {"op": op, "best": best,
+            "timings_us": [{"us": round(us, 1), **c} for us, c in timings]}
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
-def attention(q, k, v, *, causal: bool = True, window: int | None = None,
-              block_q: int = 128, block_k: int = 128):
-    """Flash attention, model layout: q (B,S,H,D), k/v (B,T,Kh,D), Kh | H."""
+def _attention(q, k, v, *, causal, window, block_q, block_k):
     H, Kh = q.shape[2], k.shape[2]
     if Kh != H:
         k = jnp.repeat(k, H // Kh, axis=2)
@@ -36,6 +104,15 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
     return jnp.transpose(ot, (0, 2, 1, 3))
 
 
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              block_q: int | None = None, block_k: int | None = None):
+    """Flash attention, model layout: q (B,S,H,D), k/v (B,T,Kh,D), Kh | H."""
+    cfg = _BLOCKS["attention"]
+    return _attention(q, k, v, causal=causal, window=window,
+                      block_q=block_q or cfg["block_q"],
+                      block_k=block_k or cfg["block_k"])
+
+
 @partial(jax.jit, static_argnames=("block_d", "block_n"))
 def gram_accumulate(x, g, *, block_d: int = 128, block_n: int = 128):
     """G += XᵀX.  x: (n, d); g: (d, d)."""
@@ -43,23 +120,58 @@ def gram_accumulate(x, g, *, block_d: int = 128, block_n: int = 128):
                                 interpret=_interpret())
 
 
-@partial(jax.jit, static_argnames=("block_d", "block_n"))
-def gram_pair_accumulate(x, y, g, a, *, block_d: int = 128,
-                         block_n: int = 128):
-    """Fused G += XᵀX, A += YᵀX in one kernel.  x, y: (n, d); g, a: (d, d)."""
+def _gram_pair_raw(x, y, g, a, *, block_d, block_n):
     return gram.gram_pair_accumulate(x, y, g, a, block_d=block_d,
                                      block_n=block_n, interpret=_interpret())
 
 
+_gram_pair_jit = jax.jit(_gram_pair_raw,
+                         static_argnames=("block_d", "block_n"))
+# donated flavor for the streaming hot loop: g/a buffers are reused for
+# the outputs, so the per-micro-batch (d, d) pair allocation disappears.
+# Callers must rebind to the results and drop the donated references
+# (StreamingDMD does).
+_gram_pair_jit_donated = jax.jit(_gram_pair_raw,
+                                 static_argnames=("block_d", "block_n"),
+                                 donate_argnums=(2, 3))
+
+
+def gram_pair_accumulate(x, y, g, a, *, block_d: int | None = None,
+                         block_n: int | None = None):
+    """Fused G += XᵀX, A += YᵀX in one kernel.  x, y: (n, d); g, a: (d, d)."""
+    cfg = _BLOCKS["gram_pair"]
+    return _gram_pair_jit(x, y, g, a, block_d=block_d or cfg["block_d"],
+                          block_n=block_n or cfg["block_n"])
+
+
+def gram_pair_accumulate_donated(x, y, g, a, *, block_d: int | None = None,
+                                 block_n: int | None = None):
+    """``gram_pair_accumulate`` with g/a donated (in-place accumulate)."""
+    cfg = _BLOCKS["gram_pair"]
+    return _gram_pair_jit_donated(x, y, g, a,
+                                  block_d=block_d or cfg["block_d"],
+                                  block_n=block_n or cfg["block_n"])
+
+
 @partial(jax.jit, static_argnames=("block_rows",))
-def quantize(x, *, block_rows: int = 256):
+def _quantize(x, *, block_rows):
     return quant.quantize(x, block_rows=block_rows, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("block_rows",))
-def dequantize(q, s, *, block_rows: int = 256):
+def _dequantize(q, s, *, block_rows):
     return quant.dequantize(q, s, block_rows=block_rows,
                             interpret=_interpret())
+
+
+def quantize(x, *, block_rows: int | None = None):
+    return _quantize(x, block_rows=block_rows
+                     or _BLOCKS["quant"]["block_rows"])
+
+
+def dequantize(q, s, *, block_rows: int | None = None):
+    return _dequantize(q, s, block_rows=block_rows
+                       or _BLOCKS["quant"]["block_rows"])
 
 
 @jax.jit

@@ -19,7 +19,10 @@ F32 = jnp.float32
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(F32)                       # (bn, Q)
-    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-20) / 127.0
+    # explicit multiply by 1/127: XLA rewrites division-by-constant into
+    # multiply-by-reciprocal anyway, and the host codec (core.records)
+    # must share the exact form for byte-identical wire frames
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-20) * (1.0 / 127.0)
     q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale

@@ -61,10 +61,28 @@ def ssd_intra_ref(cb, cum, bmat, xdt):
 
 def quant_ref(x: jax.Array):
     """Blockwise int8 over rows.  x: (nb, q) f32 -> (int8 (nb,q), f32 (nb,))."""
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(F32)), axis=1), 1e-20) / 127.0
+    scale = (jnp.maximum(jnp.max(jnp.abs(x.astype(F32)), axis=1), 1e-20)
+             * (1.0 / 127.0))
     data = jnp.clip(jnp.round(x.astype(F32) / scale[:, None]), -127, 127)
     return data.astype(jnp.int8), scale
 
 
 def dequant_ref(data: jax.Array, scale: jax.Array) -> jax.Array:
     return data.astype(F32) * scale[:, None]
+
+
+def window_eigs_ref(snaps: jax.Array, n_valid: int, rank: int) -> jax.Array:
+    """Oracle for ``analysis.dmd._masked_window_eigs``: SVD-route exact DMD
+    on the *valid slice* of a zero-padded (d, m) pane, eigenvalues sorted
+    by descending magnitude.  Host-side only (``n_valid`` must be concrete;
+    the masked solve exists precisely to avoid this dynamic slice)."""
+    X = snaps[:, : n_valid - 1].astype(F32)
+    Y = snaps[:, 1:n_valid].astype(F32)
+    U, S, Vt = jnp.linalg.svd(X, full_matrices=False)
+    r = min(rank, S.shape[0])
+    U, S, Vt = U[:, :r], S[:r], Vt[:r]
+    good = S > 1e-7 * jnp.maximum(S[0], 1e-30)
+    Sinv = jnp.where(good, 1.0 / jnp.maximum(S, 1e-30), 0.0)
+    Atilde = (U.T @ Y @ Vt.T * Sinv[None, :]) * good[:, None] * good[None, :]
+    eigs = jnp.linalg.eigvals(Atilde)
+    return eigs[jnp.argsort(-jnp.abs(eigs))]

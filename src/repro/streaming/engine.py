@@ -632,8 +632,10 @@ class StreamEngine:
         with self._rlock:
             lats = sorted(lat for t, lat in self._recent_lat if t >= cut)
             n_results = len(self.results)
+        batch_agg = self.plan.batch_stats() if self.plan is not None else {}
         return {"executors": execs,
                 "alive_executors": sum(1 for e in execs if e["alive"]),
+                "batch_agg": batch_agg,
                 "queued": sum(e["queue_depth"] for e in execs if e["alive"]),
                 "queued_records": sum(e["queued_records"] for e in execs),
                 "held_records": held,

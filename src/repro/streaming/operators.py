@@ -32,7 +32,7 @@ today's exactly-sequenced guarantee.  ``lower_dag`` compiles a legacy
 stages ordered, batch granularity), which is how the old ``Pipeline`` API
 keeps working unchanged.
 
-Window state lives in the plan (shared across executors, per-operator
+Window state lives in the plan (shared across executors, striped per-key
 locks), NOT in any executor thread — so elasticity-driven steals,
 ``replace_executor``, and rebalances never drop a pane.  ``snapshot()`` /
 ``restore()`` serialize that state for migration across engines or
@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import copy
 import threading
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -192,6 +193,59 @@ class Aggregate(Operator):
         return [Element(elem.key, out, elem.t_event)]
 
 
+class BatchAggregate(Operator):
+    """An :class:`Aggregate` that consumes **co-emitted elements in one
+    call**: ``fn(items) -> outputs`` where ``items`` is a list of
+    ``(key, values)`` pairs and ``outputs`` the same-length list of results
+    (None filters that slot).  When an upstream window fires panes for many
+    keys at the same watermark advance, the plan hands all of them to
+    :meth:`process_many` at once — which is what lets a batched solver
+    (e.g. ``analysis.dmd.batched_window_dmd``) collapse k per-pane device
+    dispatches into one vmapped call.  ``process`` (single element) simply
+    delegates, so the operator composes anywhere an Aggregate does.
+
+    ``batch_stats()`` reports how much coalescing actually happened:
+    ``batches`` (calls), ``items`` (elements across calls), ``max_batch``.
+    """
+
+    def __init__(self, name: str, fn: Callable[[list], list], *,
+                 ordering: str = KEYED, parallelism: int | None = None):
+        super().__init__(name, ordering=ordering, parallelism=parallelism)
+        self.fn = fn
+        self._stats_lock = threading.Lock()
+        self.batches = 0
+        self.items = 0
+        self.max_batch = 0
+
+    def process(self, elem: Element) -> list[Element]:
+        return self.process_many([elem])
+
+    def process_many(self, elems: list[Element]) -> list[Element]:
+        if not elems:
+            return []
+        items = []
+        for e in elems:
+            v = e.value
+            values = list(v.values) if isinstance(v, WindowPane) else list(v)
+            items.append((e.key, values))
+        outs = self.fn(items)
+        if len(outs) != len(elems):
+            raise ValueError(
+                f"BatchAggregate {self.name!r}: fn returned {len(outs)} "
+                f"results for {len(elems)} items")
+        with self._stats_lock:
+            self.batches += 1
+            self.items += len(elems)
+            self.max_batch = max(self.max_batch, len(elems))
+        return [Element(e.key, o, e.t_event)
+                for e, o in zip(elems, outs) if o is not None]
+
+    def batch_stats(self) -> dict:
+        with self._stats_lock:
+            return {"batches": self.batches, "items": self.items,
+                    "max_batch": self.max_batch}
+
+
 class Sink(Operator):
     """Terminal collection point: appends ``(key, value, t)`` with the
     session clock's now() — never wall time — and passes the element through
@@ -233,10 +287,14 @@ class Sink(Operator):
             self._results = list(state["results"])
 
 
+_COUNTER_NAMES = ("records_in", "late_dropped", "assigned", "assignments",
+                  "panes_fired", "fired_inserts")
+
+
 class _Window(Operator):
-    """Shared machinery for event-time windows: per-key panes under one
-    operator lock, an operator-level watermark, loss ledger, and
-    snapshot/restore.
+    """Shared machinery for event-time windows: per-key panes under
+    **striped** per-key locks, an operator-level watermark, loss ledger,
+    and snapshot/restore.
 
     The watermark does NOT follow raw processing order.  Under plan-aware
     parallel dispatch, micro-batches of one stream run concurrently on many
@@ -250,28 +308,57 @@ class _Window(Operator):
     event times are monotone per stream, so a record can never be late with
     respect to its own stream's frontier; records pooled across *different*
     streams (KeyBy) can still race each other's frontiers, which is what
-    ``allowed_lateness_s`` is for."""
+    ``allowed_lateness_s`` is for.
+
+    Locking: keys hash (stable crc32) onto ``stripes`` locks, so parallel
+    keyed dispatch of different keys no longer serializes on one operator
+    mutex — only same-stripe keys contend.  ``advance_watermark`` publishes
+    the new watermark under ``_wmlock`` *before* popping each stripe under
+    its stripe lock; because every pop and every insert for a stripe is
+    totally ordered by that stripe's lock, an ingest that runs after the
+    pop observes the already-raised watermark and classifies its element
+    against it — a popped pane can never be re-created ("reborn") behind
+    the watermark, and no pane fires twice.  Lock order everywhere is
+    ``_wmlock`` then stripes ascending (snapshot/flush/accounting take all
+    of them; the hot paths take exactly one)."""
 
     stateful = True
 
     def __init__(self, name: str, *, allowed_lateness_s: float = 0.0,
-                 parallelism: int | None = None):
+                 parallelism: int | None = None, stripes: int = 16):
         super().__init__(name, ordering=KEYED, parallelism=parallelism)
         if allowed_lateness_s < 0:
             raise ValueError("allowed_lateness_s must be >= 0")
+        if stripes < 1:
+            raise ValueError("stripes must be >= 1")
         self.allowed_lateness_s = float(allowed_lateness_s)
-        self._lock = threading.Lock()
+        self.n_stripes = int(stripes)
+        self._wmlock = threading.Lock()
         self._watermark = float("-inf")
-        # key -> {(start, end): [values]}
-        self._panes: dict[str, dict[tuple[float, float], list]] = {}
-        # loss ledger (see accounting())
-        self.records_in = 0
-        self.late_dropped = 0
-        self.assigned = 0            # records that entered >= 1 pane
-        self.assignments = 0         # pane insertions (can exceed assigned
-        #                              for sliding windows)
-        self.panes_fired = 0
-        self.fired_inserts = 0       # sum of fired pane sizes
+        self._stripe_locks = [threading.Lock() for _ in range(self.n_stripes)]
+        # stripe -> key -> {(start, end): [values]}
+        self._stripe_panes: list[dict[str, dict[tuple[float, float], list]]] \
+            = [{} for _ in range(self.n_stripes)]
+        # loss ledger, sharded per stripe (see accounting()); the public
+        # ``records_in`` etc. read as summing properties below
+        self._counters = [dict.fromkeys(_COUNTER_NAMES, 0)
+                          for _ in range(self.n_stripes)]
+
+    def _stripe_of(self, key: str) -> int:
+        """Stable key -> stripe hash (crc32, not PYTHONHASHSEED-dependent
+        ``hash``) so stripe layout — and with it any contention pattern —
+        is deterministic across runs."""
+        return zlib.crc32(key.encode()) % self.n_stripes
+
+    def _counter_sum(self, name: str) -> int:
+        return sum(c[name] for c in self._counters)
+
+    records_in = property(lambda self: self._counter_sum("records_in"))
+    late_dropped = property(lambda self: self._counter_sum("late_dropped"))
+    assigned = property(lambda self: self._counter_sum("assigned"))
+    assignments = property(lambda self: self._counter_sum("assignments"))
+    panes_fired = property(lambda self: self._counter_sum("panes_fired"))
+    fired_inserts = property(lambda self: self._counter_sum("fired_inserts"))
 
     # subclass: event time -> [(start, end), ...] pane memberships
     def _assign(self, t: float) -> list[tuple[float, float]]:
@@ -279,41 +366,60 @@ class _Window(Operator):
 
     def ingest(self, elem: Element) -> None:
         """Insert-only half: bucket the element into its live panes (order-
-        insensitive, safe to call from any executor at any time)."""
-        with self._lock:
-            self.records_in += 1
-            # a pane is live until the watermark passes end + lateness
+        insensitive, safe to call from any executor at any time).  Takes
+        only the element's stripe lock."""
+        si = self._stripe_of(elem.key)
+        ctr = self._counters[si]
+        with self._stripe_locks[si]:
+            ctr["records_in"] += 1
+            # a pane is live until the watermark passes end + lateness;
+            # the stripe lock orders this read against the stripe's pops
+            wm = self._watermark
             live = [(s, e) for s, e in self._assign(elem.t_event)
-                    if e + self.allowed_lateness_s > self._watermark]
+                    if e + self.allowed_lateness_s > wm]
             if not live:
-                self.late_dropped += 1
+                ctr["late_dropped"] += 1
                 if self._plan is not None:
                     self._plan.emit_event("late_drop", op=self.name,
                                           key=elem.key, t_event=elem.t_event)
                 return
-            self.assigned += 1
-            panes = self._panes.setdefault(elem.key, {})
+            ctr["assigned"] += 1
+            panes = self._stripe_panes[si].setdefault(elem.key, {})
             for span in live:
                 panes.setdefault(span, []).append(elem.value)
-                self.assignments += 1
+                ctr["assignments"] += 1
+
+    def _pop_fired(self, si: int, threshold: float | None,
+                   fired: list) -> None:
+        """Pop every pane of stripe ``si`` past ``threshold`` (None = all)
+        into ``fired``.  Caller holds the stripe lock."""
+        ctr = self._counters[si]
+        stripe = self._stripe_panes[si]
+        for key in list(stripe):
+            panes = stripe[key]
+            for span in sorted(panes):
+                if threshold is None or span[1] + self.allowed_lateness_s \
+                        <= threshold:
+                    values = panes.pop(span)
+                    ctr["panes_fired"] += 1
+                    ctr["fired_inserts"] += len(values)
+                    fired.append((key, span[0], span[1], tuple(values)))
 
     def advance_watermark(self, t: float) -> list[Element]:
         """Firing half: move the watermark forward (monotone) and pop every
-        pane it passed, keys and spans in sorted order for determinism.
+        pane it passed, emitted in (key, span) sorted order for determinism.
         Called by the plan with in-order frontier times only."""
-        fired: list[tuple[str, float, float, tuple]] = []
-        with self._lock:
+        with self._wmlock:
             if t <= self._watermark:
                 return []
+            # publish BEFORE popping: any ingest that loses a stripe-lock
+            # race to a pop will already see the raised watermark
             self._watermark = t
-            for key in sorted(self._panes):
-                panes = self._panes[key]
-                for span in sorted(panes):
-                    if span[1] + self.allowed_lateness_s <= self._watermark:
-                        values = panes.pop(span)
-                        self.panes_fired += 1
-                        self.fired_inserts += len(values)
-                        fired.append((key, span[0], span[1], tuple(values)))
+        fired: list[tuple[str, float, float, tuple]] = []
+        for si in range(self.n_stripes):
+            with self._stripe_locks[si]:
+                self._pop_fired(si, t, fired)
+        fired.sort()
         return [self._emit(k, s, e, v) for k, s, e, v in fired]
 
     def process(self, elem: Element) -> list[Element]:
@@ -329,63 +435,86 @@ class _Window(Operator):
         return Element(key, WindowPane(key, start, end, values), end)
 
     def flush(self) -> list[Element]:
-        """Fire every open pane (drain path), keys and panes in sorted order
+        """Fire every open pane (drain path) in (key, span) sorted order
         so flush emission is deterministic."""
-        fired = []
-        with self._lock:
-            for key in sorted(self._panes):
-                panes = self._panes[key]
-                for span in sorted(panes):
-                    values = panes.pop(span)
-                    self.panes_fired += 1
-                    self.fired_inserts += len(values)
-                    fired.append((key, span[0], span[1], tuple(values)))
+        fired: list[tuple[str, float, float, tuple]] = []
+        with self._wmlock:
+            for si in range(self.n_stripes):
+                with self._stripe_locks[si]:
+                    self._pop_fired(si, None, fired)
+        fired.sort()
         return [self._emit(k, s, e, v) for k, s, e, v in fired]
+
+    def _merged_panes(self) -> dict:
+        """key -> {span: values} across stripes (callers hold all locks)."""
+        merged: dict[str, dict[tuple[float, float], list]] = {}
+        for stripe in self._stripe_panes:
+            for key, panes in stripe.items():
+                if panes:
+                    merged[key] = panes
+        return merged
 
     # ---- keyed-state migration hooks ------------------------------------
     def snapshot(self) -> dict:
         """Deep-copied keyed state + ledger — enough to rebuild the operator
-        mid-window on another engine/session (elasticity migration)."""
-        with self._lock:
-            return copy.deepcopy({
-                "watermark": self._watermark,
-                "panes": self._panes,
-                "counters": {
-                    "records_in": self.records_in,
-                    "late_dropped": self.late_dropped,
-                    "assigned": self.assigned,
-                    "assignments": self.assignments,
-                    "panes_fired": self.panes_fired,
-                    "fired_inserts": self.fired_inserts}})
+        mid-window on another engine/session (elasticity migration).  The
+        format is stripe-agnostic (one merged panes dict), so snapshots
+        move between operators with different stripe counts."""
+        with self._wmlock:
+            for lk in self._stripe_locks:
+                lk.acquire()
+            try:
+                return copy.deepcopy({
+                    "watermark": self._watermark,
+                    "panes": self._merged_panes(),
+                    "counters": {n: self._counter_sum(n)
+                                 for n in _COUNTER_NAMES}})
+            finally:
+                for lk in reversed(self._stripe_locks):
+                    lk.release()
 
     def restore(self, state: dict) -> None:
-        with self._lock:
-            snap = copy.deepcopy(state)
-            self._watermark = snap["watermark"]
-            self._panes = snap["panes"]
-            for k, v in snap["counters"].items():
-                setattr(self, k, v)
+        with self._wmlock:
+            for lk in self._stripe_locks:
+                lk.acquire()
+            try:
+                snap = copy.deepcopy(state)
+                self._watermark = snap["watermark"]
+                self._stripe_panes = [{} for _ in range(self.n_stripes)]
+                for key, panes in snap["panes"].items():
+                    self._stripe_panes[self._stripe_of(key)][key] = panes
+                # ledger totals land on stripe 0 (only sums are observable)
+                self._counters = [dict.fromkeys(_COUNTER_NAMES, 0)
+                                  for _ in range(self.n_stripes)]
+                self._counters[0].update(snap["counters"])
+            finally:
+                for lk in reversed(self._stripe_locks):
+                    lk.release()
 
     def accounting(self) -> dict:
         """The loss ledger.  ``closed`` is the record-conservation identity:
         every record that entered either joined >= 1 pane or was counted as
         a late drop, and every pane insertion is either fired or still open."""
-        with self._lock:
-            open_inserts = sum(len(v) for panes in self._panes.values()
-                               for v in panes.values())
-            open_panes = sum(len(panes) for panes in self._panes.values())
-            return {
-                "records_in": self.records_in,
-                "late_dropped": self.late_dropped,
-                "assigned": self.assigned,
-                "assignments": self.assignments,
-                "panes_fired": self.panes_fired,
-                "fired_inserts": self.fired_inserts,
+        with self._wmlock:
+            for lk in self._stripe_locks:
+                lk.acquire()
+            try:
+                open_inserts = sum(
+                    len(v) for stripe in self._stripe_panes
+                    for panes in stripe.values() for v in panes.values())
+                open_panes = sum(len(panes) for stripe in self._stripe_panes
+                                 for panes in stripe.values())
+                c = {n: self._counter_sum(n) for n in _COUNTER_NAMES}
+            finally:
+                for lk in reversed(self._stripe_locks):
+                    lk.release()
+        return {**c,
                 "open_inserts": open_inserts,
                 "open_panes": open_panes,
-                "closed": (self.records_in == self.assigned + self.late_dropped
-                           and self.assignments
-                           == self.fired_inserts + open_inserts)}
+                "closed": (c["records_in"]
+                           == c["assigned"] + c["late_dropped"]
+                           and c["assignments"]
+                           == c["fired_inserts"] + open_inserts)}
 
 
 class TumblingWindow(_Window):
@@ -593,9 +722,27 @@ class ExecutionPlan:
         if defer_fire and isinstance(op, _Window):
             op.ingest(elem)
             return
-        for out in op.process(elem):
-            for d in self.down[name]:
-                self._feed(d, out, allowed, boundary, defer_fire)
+        self._fan_out(name, op.process(elem), allowed, boundary, defer_fire)
+
+    def _fan_out(self, name: str, outs: list, allowed: set | None,
+                 boundary: list | None, defer_fire: bool = False) -> None:
+        """Feed one stage's output elements downstream.  When a stage emits
+        several elements at once (a window firing panes across keys) and a
+        downstream stage is a :class:`BatchAggregate`, all of them go down
+        in ONE ``process_many`` call — the multi-key coalescing hook.  For
+        every other downstream, elements flow one at a time in emission
+        order, exactly as the plain DFS did."""
+        if not outs:
+            return
+        for d in self.down[name]:
+            dop = self.ops[d]
+            if (len(outs) > 1 and isinstance(dop, BatchAggregate)
+                    and (allowed is None or d in allowed)):
+                self._fan_out(d, dop.process_many(outs), allowed, boundary,
+                              defer_fire)
+            else:
+                for out in outs:
+                    self._feed(d, out, allowed, boundary, defer_fire)
 
     def _commit(self, stream: str, seq: int | None, batch_max: float) -> float:
         """Record one batch's max event time on its stream's frontier.
@@ -658,9 +805,8 @@ class ExecutionPlan:
         for name in self._pre:
             op = self.ops[name]
             if isinstance(op, _Window):
-                for out in op.advance_watermark(w):
-                    for d in self.down[name]:
-                        self._feed(d, out, allowed, boundary, defer_fire=True)
+                self._fan_out(name, op.advance_watermark(w), allowed,
+                              boundary, defer_fire=True)
         return _PreOut(boundary, primary)
 
     def run_post(self, key: str, pre_out: _PreOut | None, records: list):
@@ -712,11 +858,11 @@ class ExecutionPlan:
 
     def flush(self) -> None:
         """Drain path (single-threaded, after executors stop): fire every
-        open window pane through the rest of the graph, topo order."""
+        open window pane through the rest of the graph, topo order.  Like
+        the watermark path, co-fired panes coalesce into a downstream
+        :class:`BatchAggregate`."""
         for name in self._topo:
-            for out in self.ops[name].flush():
-                for d in self.down[name]:
-                    self._feed(d, out, None, None)
+            self._fan_out(name, self.ops[name].flush(), None, None)
 
     # ---- observability / state migration --------------------------------
     def sinks(self) -> list[str]:
@@ -773,6 +919,12 @@ class ExecutionPlan:
                   if isinstance(op, _Window)}
         return {"windows": per_op,
                 "closed": all(a["closed"] for a in per_op.values())}
+
+    def batch_stats(self) -> dict:
+        """Coalescing scoreboard: per-BatchAggregate call/item/max-batch
+        counts (how many device dispatches the multi-key fast path saved)."""
+        return {n: op.batch_stats() for n, op in self.ops.items()
+                if isinstance(op, BatchAggregate)}
 
     def __repr__(self):
         return (f"ExecutionPlan(contract={self.contract!r}, "
@@ -863,22 +1015,29 @@ class OperatorPipeline:
         return self.add(KeyBy(name, key_fn), after=after)
 
     def tumbling_window(self, name: str, size_s: float, *,
-                        allowed_lateness_s: float = 0.0,
+                        allowed_lateness_s: float = 0.0, stripes: int = 16,
                         after: str | None = None):
         return self.add(TumblingWindow(name, size_s,
-                                       allowed_lateness_s=allowed_lateness_s),
+                                       allowed_lateness_s=allowed_lateness_s,
+                                       stripes=stripes),
                         after=after)
 
     def sliding_window(self, name: str, size_s: float, slide_s: float, *,
-                       allowed_lateness_s: float = 0.0,
+                       allowed_lateness_s: float = 0.0, stripes: int = 16,
                        after: str | None = None):
         return self.add(SlidingWindow(name, size_s, slide_s,
-                                      allowed_lateness_s=allowed_lateness_s),
+                                      allowed_lateness_s=allowed_lateness_s,
+                                      stripes=stripes),
                         after=after)
 
     def aggregate(self, name: str, fn, *, ordering: str = KEYED,
                   after: str | None = None):
         return self.add(Aggregate(name, fn, ordering=ordering), after=after)
+
+    def batch_aggregate(self, name: str, fn, *, ordering: str = KEYED,
+                        after: str | None = None):
+        return self.add(BatchAggregate(name, fn, ordering=ordering),
+                        after=after)
 
     def sink(self, name: str, *, ordering: str = UNORDERED,
              after: str | None = None):

@@ -2,6 +2,8 @@
 windows with keyed state, plan-aware engine dispatch (intra-stream
 parallelism), snapshot/restore migration, and the legacy Pipeline/
 AnalysisDAG compat shim compiling onto the same machinery."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -10,9 +12,9 @@ from repro.runtime.clock import VirtualClock
 from repro.sim.scenario import LoadPhase, Scenario, ScenarioRunner
 from repro.streaming.dag import AnalysisDAG, Stage
 from repro.streaming.operators import (KEYED, ORDERED, UNORDERED, Aggregate,
-                                       Element, ExecutionPlan, Filter, KeyBy,
-                                       Map, OperatorPipeline, Sink,
-                                       SlidingWindow, TumblingWindow,
+                                       BatchAggregate, Element, ExecutionPlan,
+                                       Filter, KeyBy, Map, OperatorPipeline,
+                                       Sink, SlidingWindow, TumblingWindow,
                                        WindowPane, lower_dag)
 from repro.workflow import Pipeline, Session, WorkflowConfig
 
@@ -639,3 +641,170 @@ def test_windowpane_repr_fields():
     assert isinstance(Filter("f", lambda k, v: True), Filter)
     assert KeyBy("kb", lambda k, v: k).ordering == KEYED
     assert Sink("s").ordering == UNORDERED
+
+
+# -------------------------------------------------- lock striping / batching
+def _keys_by_stripe(win):
+    """Find (anchor, same-stripe, different-stripe) keys deterministically."""
+    anchor = "k0"
+    si = win._stripe_of(anchor)
+    same = diff = None
+    i = 1
+    while same is None or diff is None:
+        k = f"k{i}"
+        if win._stripe_of(k) == si and same is None and k != anchor:
+            same = k
+        elif win._stripe_of(k) != si and diff is None:
+            diff = k
+        i += 1
+    return anchor, same, diff
+
+
+def test_window_lock_striping_contention():
+    """Different-stripe keys ingest concurrently; only same-stripe keys
+    serialize.  Holding one stripe's lock must not block the others."""
+    win = TumblingWindow("w", 1.0, stripes=8)
+    anchor, same, diff = _keys_by_stripe(win)
+    done = []
+
+    def ing(key):
+        win.ingest(Element(key, 1.0, 0.2))
+        done.append(key)
+
+    with win._stripe_locks[win._stripe_of(anchor)]:
+        t_diff = threading.Thread(target=ing, args=(diff,), daemon=True)
+        t_diff.start()
+        t_diff.join(timeout=5.0)
+        assert done == [diff], "different stripe must not contend"
+        t_same = threading.Thread(target=ing, args=(same,), daemon=True)
+        t_same.start()
+        t_same.join(timeout=0.2)
+        assert same not in done, "same stripe must serialize on its lock"
+    t_same.join(timeout=5.0)
+    assert sorted(done) == sorted([diff, same])
+    assert win.records_in == 2 and win.accounting()["closed"]
+
+
+def test_window_striping_keyed_fire_parity():
+    """A striped window fires the same panes in the same order as the
+    single-lock semantics: (key, span) sorted emission, closed ledger."""
+    def build(stripes):
+        return (OperatorPipeline()
+                .key_by("kb", lambda k, rec: f"r{rec.rank}")
+                .tumbling_window("win", 1.0, stripes=stripes)
+                .aggregate("agg", lambda k, vals: sorted(r.step for r in vals))
+                .sink("out")
+                .compile())
+
+    outs = []
+    for stripes in (1, 4, 16):
+        plan = build(stripes)
+        for seq, batch in enumerate(
+                [[_rec(s, 0.3 * s + 0.1, rank=s % 3) for s in range(4)],
+                 [_rec(s, 0.3 * s + 0.1, rank=s % 3) for s in range(4, 8)]]):
+            plan.run_pre("f/g0/r0", batch, seq=seq)
+        plan.flush()
+        acct = plan.accounting()
+        assert acct["closed"] and acct["windows"]["win"]["late_dropped"] == 0
+        outs.append([(k, v) for k, v, _t in plan.results("out")])
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_tumbling_window_stripes_validation():
+    with pytest.raises(ValueError, match="stripes"):
+        TumblingWindow("w", 1.0, stripes=0)
+
+
+def test_batch_aggregate_coalesces_cofired_panes():
+    """Panes fired for many keys at one watermark advance reach the
+    BatchAggregate in a single process_many call."""
+    seen = []
+
+    def fn(items):
+        seen.append(len(items))
+        return [sum(float(r.payload[0]) for r in vals) for _k, vals in items]
+
+    plan = (OperatorPipeline()
+            .key_by("kb", lambda k, rec: f"r{rec.rank}")
+            .tumbling_window("win", 1.0)
+            .batch_aggregate("agg", fn)
+            .sink("out")
+            .compile())
+    plan.run_pre("f/g0/r0",
+                 [_rec(1, 0.2, rank=r, val=r) for r in range(4)], seq=0)
+    plan.run_pre("f/g0/r0", [_rec(2, 1.5, rank=0, val=9)], seq=1)
+    out = plan.results("out")
+    assert sorted((k, v) for k, v, _t in out) \
+        == [("r0", 0.0), ("r1", 1.0), ("r2", 2.0), ("r3", 3.0)]
+    assert max(seen) == 4, "all four co-fired panes must batch into one call"
+    stats = plan.batch_stats()["agg"]
+    assert stats["max_batch"] == 4 and stats["items"] == 4
+
+
+def test_batch_aggregate_matches_plain_aggregate():
+    def per_key(k, vals):
+        return round(sum(r.step for r in vals), 6)
+
+    def batched(items):
+        return [round(sum(r.step for r in vals), 6) for _k, vals in items]
+
+    def feed(plan):
+        for seq, batch in enumerate(
+                [[_rec(s, 0.4 * s, rank=s % 3) for s in range(6)],
+                 [_rec(9, 3.0, rank=0)]]):
+            plan.run_pre("f/g0/r0", batch, seq=seq)
+        plan.flush()
+        return sorted((k, v) for k, v, _t in plan.results("out"))
+
+    base = (OperatorPipeline()
+            .key_by("kb", lambda k, rec: f"r{rec.rank}")
+            .tumbling_window("win", 1.0)
+            .aggregate("agg", per_key)
+            .sink("out").compile())
+    fast = (OperatorPipeline()
+            .key_by("kb", lambda k, rec: f"r{rec.rank}")
+            .tumbling_window("win", 1.0)
+            .batch_aggregate("agg", batched)
+            .sink("out").compile())
+    assert feed(base) == feed(fast)
+
+
+def test_batch_aggregate_single_and_mismatch():
+    agg = BatchAggregate("b", lambda items: [len(v) for _k, v in items])
+    [out] = agg.process(Element("k", [1, 2, 3], 0.0))
+    assert out.value == 3 and agg.batch_stats()["batches"] == 1
+    bad = BatchAggregate("b", lambda items: [])
+    with pytest.raises(ValueError, match="returned 0 results for 1"):
+        bad.process(Element("k", [1], 0.0))
+
+
+def test_batch_aggregate_e2e_virtual_clock_metrics():
+    """Keyed end-to-end on VirtualClock: coalescing shows up in the engine's
+    metrics() snapshot and the window ledger stays closed."""
+    clock = VirtualClock(seed=0)
+    clock.attach()
+    cfg = WorkflowConfig(n_producers=2, n_groups=1, executors_per_group=2,
+                         compress="none", trigger_interval=0.05, min_batch=2,
+                         clock="virtual", clock_seed=0)
+    pipeline = (OperatorPipeline()
+                .key_by("kb", lambda k, rec: f"r{rec.rank}")
+                .tumbling_window("win", 0.5, allowed_lateness_s=0.5)
+                .batch_aggregate("agg", lambda items: [len(v)
+                                                       for _k, v in items])
+                .sink("out"))
+    sess = Session(cfg, pipeline=pipeline, clock=clock)
+    h = sess.open_field("f", shape=(4,))
+    for step in range(60):
+        for rank in range(2):
+            h.write(step, np.full(4, float(step), np.float32), rank=rank)
+        clock.sleep(0.05)
+    sess.flush(timeout=60.0)
+    m = sess.engine.metrics()
+    stats = sess.exec_plan.batch_stats()["agg"]
+    acct = sess.exec_plan.accounting()
+    sess.close()
+    assert m["batch_agg"]["agg"] == stats
+    assert stats["items"] >= 4 and stats["max_batch"] >= 2
+    assert acct["closed"]
+    counted = sum(v for _k, v, _t in sess.exec_plan.results("out"))
+    assert counted == 120
