@@ -40,6 +40,19 @@ class SessionFabric:
         for ex_idx in node.executor_idxs:
             sess.engine.remove_executor(ex_idx)
 
+    def fail_node(self, node) -> None:
+        """Hard node death (no drain): the endpoint starts refusing pushes
+        — in-flight frames error and reroute/replay onto survivors — and
+        the node's executors die with their queues (the engine reassigns
+        their runs).  One atomic step so no window exists where the dead
+        node's executors keep pulling from a dead endpoint."""
+        sess = self.session
+        ep = sess.endpoints[node.endpoint_idx]
+        ep.handle.fail()
+        sess.broker.reroute_from_endpoint(node.endpoint_idx)
+        for ex_idx in node.executor_idxs:
+            sess.engine.kill_executor(ex_idx)
+
     def node_drained(self, node) -> bool:
         sess = self.session
         ep = sess.endpoints[node.endpoint_idx]

@@ -174,6 +174,25 @@ class CloudProvisioner:
                 return node
         return None
 
+    def fail_node(self, node: CloudNode) -> None:
+        """Hard-fail a READY node (chaos ``kill_node``): its endpoint and
+        executors die atomically via the fabric, its billing record closes
+        (a crashed node stops costing money the instant it dies — the cost
+        books must still balance), and the node lands in FAILED so
+        :meth:`recover` can requeue replacement capacity."""
+        with self._lock:
+            if node.state != READY:
+                raise ValueError(
+                    f"can only kill READY nodes, {node.name} is {node.state}")
+            now = self.clock.now()
+            node.state = FAILED
+            node.t_off = now
+            self.ledger.power_off(node, now)
+            self._c.nodes_failed += 1
+            self.fabric.fail_node(node)
+            self._event(now, "node_failed", node,
+                        node_seconds=round(now - node.t_power_on, 9))
+
     def recover(self) -> int:
         """Requeue FAILED nodes for another round of power_on attempts."""
         with self._lock:

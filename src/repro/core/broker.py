@@ -67,6 +67,11 @@ class BrokerConfig:
     # backpressure="block" (a drop policy contradicts the guarantee).
     delivery: str = "at-most-once"    # at-most-once | exactly-once
     wal_capacity_bytes: int = 16 << 20  # per-group WAL byte bound
+    # Sharded fan-in: the broker splits into this many group-owning shards
+    # (group g lives on shard g % n_shards), each with its own endpoint
+    # ring, WAL segments, and sender stats, behind a thin routing layer.
+    # 1 keeps the paper's single fan-in.  Clamped to n_groups.
+    n_shards: int = 1
 
 
 @dataclass
@@ -154,6 +159,14 @@ class _GroupSender(threading.Thread):
         # by the elasticity controller (seeded from the static config)
         self.batch_cap = max(1, cfg.max_batch_records)
         self.q: queue.Queue = queue.Queue(maxsize=cfg.queue_capacity)
+        # record-accurate backlog: q.qsize() counts queue ITEMS, but a
+        # submit_batch item is a whole record list — telemetry reading
+        # qsize() under-reports by the batch width (a "depth 2" queue can
+        # hide hundreds of records), which starves the controller's
+        # backlog/shard signals.  This counter tracks records admitted and
+        # not yet sent (including the chunk the sender is pacing out).
+        self._q_records = 0
+        self._q_lock = threading.Lock()
         # NB: must not be named `_stop` — that would shadow Thread._stop(),
         # which threading.join() calls on finished threads
         self._stop_evt = threading.Event()
@@ -186,6 +199,10 @@ class _GroupSender(threading.Thread):
         self.batch_cap = max(1, int(cap))
         return self.batch_cap
 
+    def _q_add(self, n: int) -> None:
+        with self._q_lock:
+            self._q_records += n
+
     def _sample_tick(self) -> bool:
         """1-of-N admission under `sample` pressure, race-free."""
         with self._sample_lock:
@@ -200,7 +217,9 @@ class _GroupSender(threading.Thread):
             evicted = self.q.get_nowait()
         except queue.Empty:
             return False
-        self.stats.add(dropped=len(evicted) if isinstance(evicted, list) else 1)
+        n = len(evicted) if isinstance(evicted, list) else 1
+        self._q_add(-n)
+        self.stats.add(dropped=n)
         return True
 
     def _submit_eo(self, recs: list[StreamRecord]) -> int:
@@ -229,18 +248,21 @@ class _GroupSender(threading.Thread):
         if self._exactly_once:
             return self._submit_eo([rec]) == 1
         self.stats.add(written=1)
-        self.stats.observe_depth(self.q.qsize())
+        self.stats.observe_depth(self.backlog())
         if self.cfg.backpressure == "block":
             self.clock.queue_put(self.q, rec)
+            self._q_add(1)
             return True
         try:
             self.q.put_nowait(rec)
+            self._q_add(1)
             return True
         except queue.Full:
             if self.cfg.backpressure == "drop_oldest":
                 self._evict_one()
                 try:
                     self.q.put_nowait(rec)
+                    self._q_add(1)
                     return True
                 except queue.Full:
                     self.stats.add(dropped=1)
@@ -250,6 +272,7 @@ class _GroupSender(threading.Thread):
                 if self._evict_one():
                     try:
                         self.q.put_nowait(rec)
+                        self._q_add(1)
                         return True
                     except queue.Full:
                         pass
@@ -266,19 +289,22 @@ class _GroupSender(threading.Thread):
         if self._exactly_once:
             return self._submit_eo(list(recs))
         self.stats.add(written=len(recs))
-        self.stats.observe_depth(self.q.qsize())
+        self.stats.observe_depth(self.backlog())
         item = list(recs)
         if self.cfg.backpressure == "block":
             self.clock.queue_put(self.q, item)
+            self._q_add(len(item))
             return len(item)
         try:
             self.q.put_nowait(item)
+            self._q_add(len(item))
             return len(item)
         except queue.Full:
             if self.cfg.backpressure == "drop_oldest":
                 self._evict_one()
                 try:
                     self.q.put_nowait(item)
+                    self._q_add(len(item))
                     return len(item)
                 except queue.Full:
                     pass
@@ -287,6 +313,7 @@ class _GroupSender(threading.Thread):
                 if self._sample_tick() and self._evict_one():
                     try:
                         self.q.put_nowait(item)
+                        self._q_add(len(item))
                         return len(item)
                     except queue.Full:
                         pass
@@ -336,7 +363,13 @@ class _GroupSender(threading.Thread):
                 else:
                     blob = encode_batch(chunk, compress=self.cfg.compress,
                                         delta=self.cfg.delta_encode)
-                if self._send(blob):
+                sent = self._send(blob)
+                # decremented only now: records stay on the backlog while
+                # the sender paces the frame out through the endpoint's
+                # bandwidth model — that wait IS the congestion the
+                # controller's backlog signals are meant to see
+                self._q_add(-len(chunk))
+                if sent:
                     self.stats.add(sent=len(chunk), frames_sent=1,
                                    bytes_sent=len(blob))
                 else:
@@ -476,9 +509,14 @@ class _GroupSender(threading.Thread):
         return best
 
     def backlog(self) -> int:
-        """Records admitted but not yet handed to the wire."""
-        return self.wal.unshipped_count() if self._exactly_once \
-            else self.q.qsize()
+        """Records admitted but not yet handed to the wire.  Counted in
+        RECORDS, not queue items: ``q.qsize()`` would report a whole
+        ``submit_batch`` list as depth 1, hiding the real backlog from the
+        controller's ``backlog_high`` / ``shard_backlog_high`` signals."""
+        if self._exactly_once:
+            return self.wal.unshipped_count()
+        with self._q_lock:
+            return self._q_records
 
     def stats_snapshot(self) -> dict:
         snap = self.stats.snapshot()
@@ -509,8 +547,81 @@ class _GroupSender(threading.Thread):
         self.clock.join(self, timeout=5.0)
 
 
+class _BrokerShard:
+    """One group-owning shard of the sharded fan-in.
+
+    A shard runs the :class:`_GroupSender` threads for its groups against
+    its OWN endpoint ring (a shard-local list: senders size their failover
+    ring from it, and :meth:`attach_endpoint` grows it independently), and
+    owns its groups' WAL segments and per-sender stats.  The :class:`Broker`
+    above it is a thin routing layer — ``write``/``write_batch`` route by
+    ``group % n_shards`` — so no producer ever funnels through a single
+    fan-in lock or sender set."""
+
+    def __init__(self, shard_id: int, groups: list[int],
+                 endpoints: list[Transport], cfg: BrokerConfig,
+                 clock: Clock, *, wal: WalStore | None,
+                 go: threading.Event):
+        self.shard_id = shard_id
+        self.cfg = cfg
+        # shard-local ring: a copy, so each shard's failover surface and
+        # dynamic attaches are its own (the router fans attaches out to
+        # every shard in fleet order, keeping indices aligned)
+        self.endpoints = list(endpoints)
+        self.senders: dict[int, _GroupSender] = {}
+        for g in groups:
+            s = _GroupSender(g, self.endpoints, g % len(self.endpoints),
+                             cfg, clock,
+                             wal=wal.segment(g) if wal else None,
+                             go=go)
+            clock.thread_started(s)
+            s.start()
+            self.senders[g] = s
+
+    def attach_endpoint(self, ep: Transport) -> int:
+        """Grow this shard's ring; returns the new shard-local index (equal
+        to the fleet index when the router fans out in order)."""
+        self.endpoints.append(ep)
+        return len(self.endpoints) - 1
+
+    def reroute_from_endpoint(self, endpoint_idx: int) -> int:
+        """Re-point every one of this shard's groups whose primary is the
+        dead endpoint.  Returns #groups rerouted."""
+        n = 0
+        for s in self.senders.values():
+            if s.primary == endpoint_idx and s.reroute() is not None:
+                n += 1
+        return n
+
+    def groups_on_endpoint(self, endpoint_idx: int) -> int:
+        return sum(1 for s in self.senders.values()
+                   if s.primary == endpoint_idx)
+
+    def backlog(self) -> int:
+        return sum(s.backlog() for s in self.senders.values())
+
+    def telemetry(self) -> dict:
+        """Shard-level control-plane rollup — one row per shard in
+        ``TelemetrySnapshot.shards``."""
+        row = dict.fromkeys(_COUNTER_FIELDS, 0)
+        depth = 0
+        for s in self.senders.values():
+            snap = s.stats_snapshot()
+            for f in _COUNTER_FIELDS:
+                row[f] += snap[f]
+            depth += s.backlog()
+        row.update(shard=self.shard_id, groups=len(self.senders),
+                   queue_depth=depth, endpoints=len(self.endpoints))
+        return row
+
+
 class Broker:
-    """Producer-side broker: one per job, shared by all local ranks."""
+    """Producer-side broker: one per job, shared by all local ranks.
+
+    Internally sharded (``cfg.n_shards``): group-owning :class:`_BrokerShard`
+    objects run the senders; this class is the routing layer that preserves
+    the original single-broker surface (stats merge, group telemetry,
+    flush/finalize/kill, WAL bookkeeping) on top of them."""
 
     def __init__(self, plan: GroupPlan, endpoints: list[Transport],
                  cfg: BrokerConfig | None = None, *,
@@ -542,17 +653,29 @@ class Broker:
         self._go = threading.Event()
         if not paused:
             self._go.set()
-        self._senders: dict[int, _GroupSender] = {}
-        for g in range(plan.n_groups):
-            # senders share the broker's OWN endpoint list (not the caller's)
-            # so a dynamically attached endpoint is immediately routable
-            s = _GroupSender(g, self.endpoints, g % len(self.endpoints),
-                             self.cfg, self.clock,
-                             wal=self.wal.segment(g) if self.wal else None,
-                             go=self._go)
-            self.clock.thread_started(s)
-            s.start()
-            self._senders[g] = s
+        self.n_shards = max(1, min(int(self.cfg.n_shards), plan.n_groups))
+        self.shards: list[_BrokerShard] = []
+        for sid in range(self.n_shards):
+            groups = [g for g in range(plan.n_groups)
+                      if g % self.n_shards == sid]
+            self.shards.append(_BrokerShard(
+                sid, groups, self.endpoints, self.cfg, self.clock,
+                wal=self.wal, go=self._go))
+
+    def shard_of(self, group: int) -> int:
+        return group % self.n_shards
+
+    def _sender(self, group: int) -> _GroupSender:
+        return self.shards[group % self.n_shards].senders[group]
+
+    @property
+    def _senders(self) -> dict[int, _GroupSender]:
+        """Merged group->sender view across shards (observability, tests,
+        and whole-fleet operations; routing uses :meth:`_sender`)."""
+        out: dict[int, _GroupSender] = {}
+        for shard in self.shards:
+            out.update(shard.senders)
+        return out
 
     def release(self) -> None:
         """Open the sender gate of a ``paused=True`` broker (replay starts)."""
@@ -579,11 +702,19 @@ class Broker:
         rows = []
         for g, s in sorted(self._senders.items()):
             row = s.stats_snapshot()
-            row.update(group=g, queue_depth=s.backlog(),
+            row.update(group=g, shard=self.shard_of(g),
+                       queue_depth=s.backlog(),
                        queue_capacity=self.cfg.queue_capacity,
                        batch_cap=s.batch_cap, primary=s.primary)
             rows.append(row)
         return rows
+
+    def shard_telemetry(self) -> list[dict]:
+        """Per-shard control-plane rollup (one row per shard, ascending):
+        queue depth, sender counters, ring size — the sharded fan-in's
+        contribution to ``TelemetrySnapshot.shards``, which is what lets
+        the controller see one hot shard inside an otherwise calm fleet."""
+        return [shard.telemetry() for shard in self.shards]
 
     # ---- control-plane actuators ----------------------------------------
     def set_batch_cap(self, cap: int, group: int | None = None) -> None:
@@ -591,39 +722,43 @@ class Broker:
         bigger frames to amortize, shallow queue ⇒ small frames for
         latency).  ``group=None`` applies to every sender."""
         targets = self._senders.values() if group is None \
-            else [self._senders[group]]
+            else [self._sender(group)]
         for s in targets:
             s.set_batch_cap(cap)
 
     def reroute_group(self, group: int) -> int | None:
         """Move one group's primary to the next healthy endpoint."""
-        return self._senders[group].reroute()
+        return self._sender(group).reroute()
 
     def reroute_from_endpoint(self, endpoint_idx: int) -> int:
-        """Detector-driven failover: every group whose primary is the dead
-        endpoint is proactively re-pointed.  Returns #groups rerouted."""
-        n = 0
-        for s in self._senders.values():
-            if s.primary == endpoint_idx and s.reroute() is not None:
-                n += 1
-        return n
+        """Detector-driven failover, fanned out shard by shard: every group
+        whose primary is the dead endpoint is proactively re-pointed on its
+        owning shard.  Returns #groups rerouted."""
+        return sum(shard.reroute_from_endpoint(endpoint_idx)
+                   for shard in self.shards)
 
     def groups_on_endpoint(self, endpoint_idx: int) -> int:
         """#groups whose primary currently targets this endpoint — the
         cloud capacity plane's drain gate (a node may only power off once
         this reaches zero and its endpoint queue is empty)."""
-        return sum(1 for s in self._senders.values()
-                   if s.primary == endpoint_idx)
+        return sum(shard.groups_on_endpoint(endpoint_idx)
+                   for shard in self.shards)
 
     def attach_endpoint(self, ep: Transport) -> int:
-        """Register a freshly provisioned endpoint with every sender.
-
-        Appending to the shared list is enough: senders size their
-        failover ring from ``len(self.endpoints)`` per call, so the new
-        slot becomes routable on the next send/reroute.  Returns the new
-        endpoint's fleet index."""
+        """Register a freshly provisioned endpoint fleet-wide: append to the
+        router's list and fan out to every shard's ring in order, so the
+        shard-local index equals the fleet index on all of them.  Senders
+        size their failover ring from their shard's list per call, so the
+        new slot becomes routable on the next send/reroute.  Returns the
+        new endpoint's fleet index."""
         self.endpoints.append(ep)
-        return len(self.endpoints) - 1
+        fleet_idx = len(self.endpoints) - 1
+        for shard in self.shards:
+            idx = shard.attach_endpoint(ep)
+            assert idx == fleet_idx, (
+                f"shard {shard.shard_id} ring diverged: local idx {idx} != "
+                f"fleet idx {fleet_idx}")
+        return fleet_idx
 
     # -- the paper's three-call API surface lives in core.api ------------
     def register(self, schema: FieldSchema) -> None:
@@ -640,7 +775,7 @@ class Broker:
                            step=step, payload=np.asarray(payload),
                            t_generated=self.clock.now() if t is None
                            else float(t))
-        return self._senders[g].submit(rec)
+        return self._sender(g).submit(rec)
 
     def write_batch(self, field_name: str, ranks, steps, payloads, *,
                     t: float | None = None) -> int:
@@ -657,7 +792,7 @@ class Broker:
                 StreamRecord(field_name=field_name, group_id=g, rank=rank,
                              step=step, payload=np.asarray(payload),
                              t_generated=now))
-        return sum(self._senders[g].submit_batch(recs)
+        return sum(self._sender(g).submit_batch(recs)
                    for g, recs in by_group.items())
 
     def flush(self, timeout: float | None = None) -> None:

@@ -8,7 +8,22 @@ outbound per-producer bandwidth vs inbound per-endpoint bandwidth.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
+
+
+def partition_of(key: str, n: int) -> int:
+    """Stable partition for a record key: crc32, never ``hash``.
+
+    This is the single hash family for every keyed routing decision —
+    the shuffle stage, the broker shard map, and the window stripe locks
+    all call it, so a key's state and its records can never disagree on
+    ownership.  crc32 is stable across processes and Python versions
+    (``hash`` is salted per-process and would break replay determinism).
+    """
+    if n <= 0:
+        raise ValueError(f"need n >= 1 partitions, got {n}")
+    return zlib.crc32(key.encode()) % n
 
 
 @dataclass(frozen=True)
@@ -23,7 +38,22 @@ class GroupPlan:
         return rank % self.n_groups     # round-robin keeps groups balanced
 
     def ranks_in(self, group: int) -> list[int]:
-        return [r for r in range(self.n_producers) if self.group_of(r) == group]
+        if not (0 <= group < self.n_groups):
+            raise ValueError(f"group {group} out of range [0,{self.n_groups})")
+        return list(self._membership[group])
+
+    @property
+    def _membership(self) -> tuple[tuple[int, ...], ...]:
+        # Built once per plan: rescanning all n_producers per ranks_in()
+        # call is quadratic when enumerating every group at 1k-10k streams.
+        cached = getattr(self, "_members", None)
+        if cached is None:
+            members: list[list[int]] = [[] for _ in range(self.n_groups)]
+            for r in range(self.n_producers):
+                members[self.group_of(r)].append(r)
+            cached = tuple(tuple(m) for m in members)
+            object.__setattr__(self, "_members", cached)
+        return cached
 
     @property
     def n_executors(self) -> int:

@@ -43,6 +43,11 @@ class ElasticityConfig:
     max_executors: int = 64
     scale_up_step: int = 2            # executors added per breach
     backlog_high: int = 64            # records pending anywhere ⇒ breach
+    # per-shard breach: one broker shard holding more than this many
+    # unsent records triggers scale-up even while the fleet-wide backlog
+    # is under backlog_high — a hot shard hides inside a calm total.
+    # None disables the shard signal (unsharded brokers report no shards).
+    shard_backlog_high: int | None = None
     idle_scale_down_s: float = 3.0    # sustained quiet before scale-in
     cooldown_s: float = 1.0           # min gap between scale actions
     adapt_batch: bool = True          # drive per-sender batch_cap from depth
@@ -88,6 +93,8 @@ class ElasticityConfig:
                 f"{self.min_executors}..{self.max_executors}")
         if self.scale_up_step < 1:
             raise ValueError("scale_up_step must be >= 1")
+        if self.shard_backlog_high is not None and self.shard_backlog_high < 1:
+            raise ValueError("shard_backlog_high must be >= 1 (or None)")
         if not (1 <= self.batch_cap_min <= self.batch_cap_max):
             raise ValueError("need 1 <= batch_cap_min <= batch_cap_max")
         if self.idle_scale_down_s < 0 or self.cooldown_s < 0:
@@ -125,7 +132,12 @@ class Action:
 
 class LatencyScalePolicy:
     """Scale executors from the QoS signal: out on p99/backlog breach (with
-    cooldown), in after ``idle_scale_down_s`` of empty pipeline."""
+    cooldown), in after ``idle_scale_down_s`` of empty pipeline.
+
+    With ``cfg.shard_backlog_high`` set, the per-shard rows of a sharded
+    broker (``TelemetrySnapshot.shards``) are a third breach source: one
+    shard's queue depth crossing the per-shard threshold scales the fleet
+    out even when the fleet-wide backlog still reads calm."""
 
     def __init__(self, cfg: ElasticityConfig):
         self.cfg = cfg
@@ -141,15 +153,26 @@ class LatencyScalePolicy:
         p99_breach = (snap.latency_n > 0
                       and snap.latency_p99 > cfg.target_p99_s)
         backlog_breach = snap.backlog > cfg.backlog_high
-        if p99_breach or backlog_breach:
+        hot_shard = None
+        if cfg.shard_backlog_high is not None and snap.shards:
+            worst = max(snap.shards, key=lambda s: s.queue_depth)
+            if worst.queue_depth > cfg.shard_backlog_high:
+                hot_shard = worst
+        if p99_breach or backlog_breach or hot_shard is not None:
             self._quiet_since = None
             if (now - self._last_scale >= cfg.cooldown_s
                     and snap.alive_executors < cfg.max_executors):
                 step = min(cfg.scale_up_step,
                            cfg.max_executors - snap.alive_executors)
                 self._last_scale = now
-                why = (f"p99={snap.latency_p99:.3f}s>target"
-                       if p99_breach else f"backlog={snap.backlog}")
+                if p99_breach:
+                    why = f"p99={snap.latency_p99:.3f}s>target"
+                elif backlog_breach:
+                    why = f"backlog={snap.backlog}"
+                else:
+                    why = (f"shard{hot_shard.shard} backlog="
+                           f"{hot_shard.queue_depth}>"
+                           f"{cfg.shard_backlog_high}")
                 return [Action("scale_up", value=step, reason=why)]
             return []
         quiet = snap.backlog == 0 and snap.queued_partitions == 0

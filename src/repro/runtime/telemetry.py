@@ -48,6 +48,23 @@ class GroupTelemetry:
 
 
 @dataclass(frozen=True)
+class ShardTelemetry:
+    """One broker shard (group-owning slice of the sharded fan-in),
+    sampled: how much backlog and traffic its groups carry together."""
+
+    shard: int
+    groups: int
+    queue_depth: int
+    written: int
+    sent: int
+    dropped: int
+    send_errors: int
+    rerouted: int
+    endpoints: int
+    send_rate: float = 0.0        # delivered records/s since previous sample
+
+
+@dataclass(frozen=True)
 class EndpointTelemetry:
     name: str
     healthy: bool
@@ -72,6 +89,7 @@ class TelemetrySnapshot:
 
     t: float
     groups: tuple[GroupTelemetry, ...] = ()
+    shards: tuple[ShardTelemetry, ...] = ()
     endpoints: tuple[EndpointTelemetry, ...] = ()
     executors: tuple[ExecutorTelemetry, ...] = ()
     held_records: int = 0         # engine hold-buffer backlog
@@ -103,6 +121,12 @@ class _GroupPrev:
     sent: int = 0
 
 
+@dataclass
+class _ShardPrev:
+    t: float = 0.0
+    sent: int = 0
+
+
 class TelemetryBus:
     """Samples broker + endpoints + engine into TelemetrySnapshots, keeps a
     bounded history, and fans snapshots out to subscribers.
@@ -122,6 +146,7 @@ class TelemetryBus:
         self.history: deque[TelemetrySnapshot] = deque(maxlen=history)
         self._subs: list = []
         self._prev: dict[int, _GroupPrev] = {}
+        self._shard_prev: dict[int, _ShardPrev] = {}
         self._lock = threading.Lock()
 
     def attach_engine(self, engine) -> None:
@@ -163,6 +188,29 @@ class TelemetryBus:
                 send_rate=send_rate))
         return tuple(out)
 
+    def _sample_shards(self, now: float) -> tuple[ShardTelemetry, ...]:
+        """Per-shard rollups from a sharded broker (``shard_telemetry()``);
+        () for brokers without shards — policies treat that as 'no shard
+        signal' and fall back to fleet-level thresholds."""
+        shard_fn = getattr(self.broker, "shard_telemetry", None)
+        if shard_fn is None:
+            return ()
+        out = []
+        for row in shard_fn():
+            sid = row["shard"]
+            prev = self._shard_prev.get(sid)
+            dt = (now - prev.t) if prev else 0.0
+            send_rate = (row["sent"] - prev.sent) / dt \
+                if prev and dt > 1e-6 else 0.0
+            self._shard_prev[sid] = _ShardPrev(t=now, sent=row["sent"])
+            out.append(ShardTelemetry(
+                shard=sid, groups=row["groups"],
+                queue_depth=row["queue_depth"], written=row["written"],
+                sent=row["sent"], dropped=row["dropped"],
+                send_errors=row["send_errors"], rerouted=row["rerouted"],
+                endpoints=row["endpoints"], send_rate=send_rate))
+        return tuple(out)
+
     def _sample_endpoints(self) -> tuple[EndpointTelemetry, ...]:
         out = []
         for ep in self.endpoints:
@@ -177,6 +225,7 @@ class TelemetryBus:
         now = self.clock.now()
         with self._lock:
             groups = self._sample_groups(now)
+            shards = self._sample_shards(now)
         endpoints = self._sample_endpoints()
         executors: tuple[ExecutorTelemetry, ...] = ()
         held = queued = alive = lat_n = 0
@@ -196,7 +245,8 @@ class TelemetryBus:
             lat_n = m["latency_window_n"]
             exec_secs = m["executor_seconds"]
         snap = TelemetrySnapshot(
-            t=now, groups=groups, endpoints=endpoints, executors=executors,
+            t=now, groups=groups, shards=shards,
+            endpoints=endpoints, executors=executors,
             held_records=held, queued_partitions=queued,
             alive_executors=alive, latency_p50=p50, latency_p99=p99,
             latency_n=lat_n, executor_seconds=exec_secs)

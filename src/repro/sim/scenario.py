@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.checkpoint.session_store import SessionCheckpointStore
+from repro.cloud.nodes import READY
 from repro.runtime.clock import VirtualClock
 from repro.runtime.wal import WalStore
 from repro.streaming.engine import percentile_sorted
@@ -81,6 +82,11 @@ class Fault:
       ``boot_stall``         stretch cold starts by ``value`` s: nodes
                              currently booting are delayed, else the next
                              boot is (requires elasticity.provision)
+      ``kill_node``          hard-fail the ``target``-th READY cloud node:
+                             its endpoint and executors die atomically, its
+                             cost-ledger record closes at death, and the
+                             node lands in FAILED for provisioner.recover()
+                             (requires elasticity.provision)
     """
 
     t: float
@@ -92,9 +98,9 @@ class Fault:
 _FAULT_KINDS = ("kill_executor", "add_executor", "inject_straggler",
                 "clear_straggler", "fail_endpoint", "recover_endpoint",
                 "drop_frames", "kill_broker", "kill_session",
-                "provision_fail", "boot_stall")
+                "provision_fail", "boot_stall", "kill_node")
 _KILL_KINDS = ("kill_broker", "kill_session")
-_PROVISION_KINDS = ("provision_fail", "boot_stall")
+_PROVISION_KINDS = ("provision_fail", "boot_stall", "kill_node")
 
 
 @dataclass(frozen=True)
@@ -159,7 +165,7 @@ class Scenario:
                 and not (self.workflow.elasticity.enabled
                          and self.workflow.elasticity.provision):
             raise ValueError(
-                "provision_fail/boot_stall faults require "
+                "provision_fail/boot_stall/kill_node faults require "
                 "workflow.elasticity.enabled and .provision (there is no "
                 "CloudProvisioner to fault otherwise)")
         if ("kill_session" in kinds or self.checkpoint_every_s) \
@@ -313,6 +319,11 @@ class ScenarioRunner:
             sess.provisioner.inject_provision_failures(int(f.value))
         elif f.kind == "boot_stall":
             sess.provisioner.inject_boot_stall(float(f.value))
+        elif f.kind == "kill_node":
+            ready = sess.provisioner.nodes_in_state(READY)
+            if not ready:
+                raise LookupError("no READY cloud node to kill")
+            sess.provisioner.fail_node(ready[f.target % len(ready)])
 
     # ---- the run ---------------------------------------------------------
     def run(self) -> ScenarioTrace:

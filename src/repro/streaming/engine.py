@@ -198,7 +198,8 @@ class StreamEngine:
     def __init__(self, endpoints: list, analyze_fn: Callable,
                  n_executors: int, *, trigger_interval: float = 3.0,
                  min_batch: int = 2, clock: Clock | None = None,
-                 order_wait_s: float = _ORDER_WAIT_S):
+                 order_wait_s: float = _ORDER_WAIT_S,
+                 shuffle_partitions: int | None = None):
         """endpoints: Endpoint handles (drain API).  analyze_fn(key, records).
 
         ``min_batch``: a stream's drained records are held until at least
@@ -210,13 +211,21 @@ class StreamEngine:
         ``clock``: every timestamp, sleep, and blocking wait goes through it
         (default wall time); a ``VirtualClock`` makes the whole engine —
         driver, executors, ordering waits, latency accounting — run on
-        deterministic simulated time."""
+        deterministic simulated time.
+
+        ``shuffle_partitions``: when set and the attached plan compiles to
+        a shuffle edge (source ``KeyBy`` at record granularity), dispatch
+        re-partitions records ACROSS producer streams by the KeyBy's output
+        key: micro-batches become key partitions (``part:NNNN``), sticky
+        partition->executor ownership replaces producer-stream ownership,
+        and ordering tickets are issued per partition."""
         self.endpoints = endpoints
         self.analyze_fn = analyze_fn
         self.plan = None               # compiled operator ExecutionPlan
         self.trigger_interval = trigger_interval
         self.min_batch = min_batch
         self.order_wait_s = order_wait_s
+        self.shuffle_partitions = shuffle_partitions
         self.clock = ensure_clock(clock)
         self.results: list[Result] = []
         self._recent_lat: deque = deque(maxlen=512)  # rolling latency window
@@ -259,7 +268,9 @@ class StreamEngine:
         return cls(endpoints, analyze_fn, n_executors=n_exec,
                    trigger_interval=cfg.trigger_interval,
                    min_batch=cfg.min_batch, clock=clock,
-                   order_wait_s=getattr(cfg, "order_wait_s", _ORDER_WAIT_S))
+                   order_wait_s=getattr(cfg, "order_wait_s", _ORDER_WAIT_S),
+                   shuffle_partitions=getattr(cfg, "shuffle_partitions",
+                                              None))
 
     def attach_dag(self, dag: Callable) -> None:
         """Session-driven rewiring: route every micro-batch through an
@@ -280,7 +291,15 @@ class StreamEngine:
         Attaching mid-run aligns the plan's watermark frontier with the
         engine's continuing per-stream seq counters — a fresh frontier
         expecting seq 0 would park every future batch as pending and stall
-        window firing until drain."""
+        window firing until drain.
+
+        With ``shuffle_partitions`` configured, a plan that compiles to a
+        shuffle edge (source KeyBy, record granularity) switches to keyed-
+        shuffle dispatch; plans without one keep producer partitioning."""
+        enable = getattr(plan, "enable_shuffle", None)
+        if (self.shuffle_partitions is not None and enable is not None
+                and getattr(plan, "shuffle_op", None) is not None):
+            enable(self.shuffle_partitions)
         seed = getattr(plan, "seed_frontier", None)
         if seed is not None:
             with self._tlock:
@@ -514,10 +533,12 @@ class StreamEngine:
             if mb is _POISON:          # dying executor: hand it back
                 victim.q.put(_POISON)
                 continue
-            if self.plan is not None and self.plan.parallel_dispatch:
+            if (self.plan is not None and self.plan.parallel_dispatch
+                    and not getattr(self.plan, "shuffled", False)):
                 # parallel-dispatch plans have no sticky run to migrate:
                 # batches of one stream are already spread, so steal just
-                # the head partition
+                # the head partition.  Shuffled plans DO have sticky runs
+                # (partition ownership) and fall through to run migration.
                 return mb
             key = mb.stream_key
             # extract the rest of this stream's queued run, preserving order
@@ -547,16 +568,34 @@ class StreamEngine:
         self.clock.detach()    # exit the schedule without a watchdog stall
 
     def trigger_once(self, force: bool = False) -> int:
-        """Drain endpoints into per-stream hold buffers and dispatch every
-        stream that is ripe: >= min_batch records held, the first held
-        record is older than one trigger interval, or ``force``."""
+        """Drain endpoints into hold buffers and dispatch every buffer that
+        is ripe: >= min_batch records held, the first held record is older
+        than one trigger interval, or ``force``.
+
+        Hold buffers are per producer stream by default.  Under keyed
+        shuffle (``plan.shuffled``) they are per key **partition**: each
+        drained record is routed to ``part:NNNN`` by the plan's shuffle
+        edge, pooling co-keyed records from many streams into one partition
+        and spreading one hot stream's keys over all partitions.  Shuffled
+        partitions dispatch with sticky partition->executor ownership (the
+        partition, not the producer stream, is the unit the fleet owns),
+        and seq tickets are issued per partition."""
         n = 0
         now = self.clock.now()
+        plan = self.plan
+        shuffled = plan is not None and getattr(plan, "shuffled", False)
         with self._tlock:
             for ep in self.endpoints:
                 for key in ep.stream_keys():
                     recs = ep.drain(key)
-                    if recs:
+                    if not recs:
+                        continue
+                    if shuffled:
+                        for r in recs:
+                            pkey = f"part:{plan.shuffle_partition(r):04d}"
+                            self._hold.setdefault(pkey, []).append(r)
+                            self._hold_t.setdefault(pkey, now)
+                    else:
                         self._hold.setdefault(key, []).extend(recs)
                         self._hold_t.setdefault(key, now)
             for key in list(self._hold):
@@ -565,7 +604,8 @@ class StreamEngine:
                         or now - self._hold_t[key] >= self.trigger_interval)
                 if not ripe:
                     continue
-                parallel = self.plan is not None and self.plan.parallel_dispatch
+                parallel = (not shuffled and plan is not None
+                            and plan.parallel_dispatch)
                 ex = self._pick_parallel() if parallel \
                     else self._pick_executor(key)
                 if ex is None:
@@ -633,7 +673,11 @@ class StreamEngine:
             lats = sorted(lat for t, lat in self._recent_lat if t >= cut)
             n_results = len(self.results)
         batch_agg = self.plan.batch_stats() if self.plan is not None else {}
+        shuffle_n = self.plan.shuffle_partitions \
+            if self.plan is not None and getattr(self.plan, "shuffled", False) \
+            else None
         return {"executors": execs,
+                "shuffle_partitions": shuffle_n,
                 "alive_executors": sum(1 for e in execs if e["alive"]),
                 "batch_agg": batch_agg,
                 "queued": sum(e["queue_depth"] for e in execs if e["alive"]),

@@ -44,10 +44,10 @@ from __future__ import annotations
 
 import copy
 import threading
-import zlib
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from repro.core.grouping import partition_of
 from repro.runtime.clock import Clock, ensure_clock
 
 ORDERED = "ordered"
@@ -347,8 +347,10 @@ class _Window(Operator):
     def _stripe_of(self, key: str) -> int:
         """Stable key -> stripe hash (crc32, not PYTHONHASHSEED-dependent
         ``hash``) so stripe layout — and with it any contention pattern —
-        is deterministic across runs."""
-        return zlib.crc32(key.encode()) % self.n_stripes
+        is deterministic across runs.  Same hash family as the shuffle
+        stage's routing (:func:`repro.core.grouping.partition_of`), so a
+        key's window state and its shuffled records agree on ownership."""
+        return partition_of(key, self.n_stripes)
 
     def _counter_sum(self, name: str) -> int:
         return sum(c[name] for c in self._counters)
@@ -621,6 +623,10 @@ class ExecutionPlan:
         self._flock = threading.Lock()
         self._frontier: dict[str, dict] = {}
         self._committed_max = float("-inf")
+        # keyed shuffle (set by the engine via enable_shuffle()): when
+        # active, micro-batches are key partitions, not producer streams,
+        # and source elements carry each record's own stream key
+        self._shuffle_n: int | None = None
         for op in self.ops.values():
             op.open(self)
 
@@ -691,6 +697,45 @@ class ExecutionPlan:
                  if self.ops[n].parallelism is not None]
         return min(hints) if hints else None
 
+    @property
+    def shuffle_op(self) -> "KeyBy | None":
+        """The shuffle edge this plan compiles to: a record-granularity
+        graph whose SOURCE is a :class:`KeyBy` re-partitions records across
+        streams — the engine may dispatch by the KeyBy's output key instead
+        of by producer stream.  None when the plan has no shuffle edge."""
+        op = self.ops[self.source]
+        if self.granularity == "record" and isinstance(op, KeyBy):
+            return op
+        return None
+
+    @property
+    def shuffled(self) -> bool:
+        return self._shuffle_n is not None
+
+    @property
+    def shuffle_partitions(self) -> int | None:
+        return self._shuffle_n
+
+    def enable_shuffle(self, n_partitions: int) -> None:
+        """Switch the plan to keyed-shuffle dispatch over ``n_partitions``
+        partitions.  Engine-called at attach time; requires a shuffle edge."""
+        if self.shuffle_op is None:
+            raise ValueError(
+                "plan has no shuffle edge (source must be a KeyBy on a "
+                "record-granularity graph)")
+        if n_partitions < 1:
+            raise ValueError(f"need >= 1 partitions, got {n_partitions}")
+        self._shuffle_n = int(n_partitions)
+
+    def shuffle_partition(self, record) -> int:
+        """Partition owning ``record`` under the shuffle edge: the KeyBy's
+        output key hashed with the shared stable :func:`partition_of` —
+        crc32, same family as the window stripe hash, so co-keyed records
+        from different producer streams always land together."""
+        kb = self.shuffle_op
+        key = str(kb.key_fn(record.key(), record))
+        return partition_of(key, self._shuffle_n)
+
     def bind_clock(self, clock: Clock | None) -> None:
         """Adopt the Session's clock (operators read it through the plan, so
         a rebind covers every sink/window timestamp)."""
@@ -707,6 +752,12 @@ class ExecutionPlan:
             tmin = min((r.t_generated for r in records),
                        default=self.clock.now())
             return [Element(key, records, tmin)]
+        if self._shuffle_n is not None:
+            # shuffled micro-batches pool records of many producer streams
+            # under one partition key; each element keeps its own record's
+            # stream key so the source KeyBy re-keys exactly as it would
+            # have under producer-partitioned dispatch
+            return [Element(r.key(), r, r.t_generated) for r in records]
         return [Element(key, r, r.t_generated) for r in records]
 
     def _feed(self, name: str, elem: Element, allowed: set | None,

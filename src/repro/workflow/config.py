@@ -55,6 +55,20 @@ class WorkflowConfig:
     # independently of their neighbors).
     delivery: str = "at-most-once"     # at-most-once | exactly-once
     wal_capacity_bytes: int = 16 << 20 # per-group WAL byte bound
+    # -- sharded data plane ------------------------------------------------
+    # broker_shards > 1 splits the broker into that many group-owning
+    # shards behind a thin routing layer (group g -> shard g % n): per-shard
+    # endpoint rings, WAL segments, sender stats, and TelemetrySnapshot
+    # rows.  Clamped to the effective group count.  1 = the paper's single
+    # fan-in.
+    broker_shards: int = 1
+    # shuffle_partitions re-partitions records ACROSS producer streams at
+    # dispatch when the attached plan compiles to a shuffle edge (source
+    # KeyBy at record granularity): micro-batches become key partitions
+    # (part:NNNN via the stable crc32 partition_of), owned sticky by
+    # executors, with per-partition ordering tickets.  None keeps
+    # producer-stream partitioning.
+    shuffle_partitions: int | None = None
     # Directory for a disk-backed WAL (runtime.wal.FileWalStore): segments
     # sync on every checkpoint and at close, and a Session built over the
     # same directory adopts the surviving log — exactly-once across host
@@ -142,6 +156,12 @@ class WorkflowConfig:
                              "(only the WAL path persists anything)")
         if self.wal_capacity_bytes < (1 << 12):
             raise ValueError("wal_capacity_bytes must be >= 4096")
+        if self.broker_shards < 1:
+            raise ValueError(f"broker_shards must be >= 1, "
+                             f"got {self.broker_shards}")
+        if self.shuffle_partitions is not None and self.shuffle_partitions < 1:
+            raise ValueError(f"shuffle_partitions must be >= 1 (or None), "
+                             f"got {self.shuffle_partitions}")
         self.elasticity.validate()
         return self
 
@@ -166,7 +186,8 @@ class WorkflowConfig:
                             max_batch_records=self.max_batch_records,
                             delta_encode=self.delta_encode,
                             delivery=self.delivery,
-                            wal_capacity_bytes=self.wal_capacity_bytes)
+                            wal_capacity_bytes=self.wal_capacity_bytes,
+                            n_shards=self.broker_shards)
 
     @property
     def endpoint_count(self) -> int:

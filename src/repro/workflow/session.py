@@ -43,6 +43,45 @@ from repro.workflow.config import WorkflowConfig
 from repro.workflow.pipeline import Pipeline
 
 
+class RestoreTopologyError(ValueError):
+    """A checkpoint's topology disagrees with the live ``WorkflowConfig``
+    handed to :meth:`Session.restore`.
+
+    Per-group WAL segments, the receive-side seq ledger, and the endpoint
+    audit counters are all keyed by the checkpointed group/endpoint layout;
+    silently rebuilding them under a different ``n_groups``/endpoint count
+    would map replayed records to the wrong groups (or truncate the
+    endpoint state zip) and corrupt the exactly-once guarantee.  Restore
+    with a matching topology, or omit ``config`` to adopt the
+    checkpointed one."""
+
+
+def _check_restore_topology(ckpt_cfg: WorkflowConfig,
+                            live_cfg: WorkflowConfig) -> None:
+    """Raise :class:`RestoreTopologyError` on any mismatch that changes how
+    checkpointed per-group/per-endpoint state maps onto the new session."""
+    old_plan, new_plan = ckpt_cfg.group_plan(), live_cfg.group_plan()
+    mismatches = []
+    if old_plan.n_producers != new_plan.n_producers:
+        mismatches.append(f"n_producers {old_plan.n_producers} -> "
+                          f"{new_plan.n_producers}")
+    if old_plan.n_groups != new_plan.n_groups:
+        mismatches.append(f"n_groups {old_plan.n_groups} -> "
+                          f"{new_plan.n_groups}")
+    if ckpt_cfg.endpoint_count != live_cfg.endpoint_count:
+        mismatches.append(f"endpoint_count {ckpt_cfg.endpoint_count} -> "
+                          f"{live_cfg.endpoint_count}")
+    if ckpt_cfg.delivery != live_cfg.delivery:
+        mismatches.append(f"delivery {ckpt_cfg.delivery!r} -> "
+                          f"{live_cfg.delivery!r}")
+    if mismatches:
+        raise RestoreTopologyError(
+            "checkpointed topology does not match the live config "
+            f"({'; '.join(mismatches)}): per-group WAL/ledger state cannot "
+            "be adopted across a topology change — restore with the "
+            "checkpointed topology (or pass config=None to adopt it)")
+
+
 class FieldHandle:
     """Typed handle for one streamed field (all ranks of the job).
 
@@ -502,6 +541,9 @@ class Session:
                 raise ValueError("no checkpoint and no config: cannot "
                                  "reconstruct the workflow")
             config = WorkflowConfig.from_dict(state["config"])
+        elif state is not None:
+            _check_restore_topology(
+                WorkflowConfig.from_dict(state["config"]), config)
         ledger = SeqLedger()
         if state is not None:
             ledger.restore(state["ledger"])

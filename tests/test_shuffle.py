@@ -1,0 +1,466 @@
+"""Keyed shuffle + sharded fan-in: the stable partition hash (property
+tests), shuffle-edge plan semantics, broker shard routing/telemetry (incl.
+the record-vs-item backlog regression), restore topology gating, and the
+``kill_node`` chaos fault."""
+import zlib
+
+import numpy as np
+import pytest
+
+try:        # hypothesis gates only the property tests, not the whole module
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.cloud import (FAILED, PENDING, READY, CloudProvisioner, NodeClass)
+from repro.core.broker import Broker, BrokerConfig
+from repro.core.grouping import GroupPlan, partition_of
+from repro.core.records import StreamRecord
+from repro.runtime.clock import VirtualClock
+from repro.sim.scenario import Fault, LoadPhase, Scenario, run_scenario
+from repro.streaming.endpoint import make_endpoints
+from repro.streaming.operators import OperatorPipeline
+from repro.workflow import ElasticityConfig, WorkflowConfig
+
+
+# ------------------------------------------------------- partition_of (hash)
+def test_partition_golden_values():
+    """Pinned crc32 outputs: the routing hash must never drift (a drift
+    silently re-owns every key's shuffle partition, shard, and window
+    stripe, breaking replay against recorded traces)."""
+    assert zlib.crc32(b"hot0") == 4057399475
+    assert partition_of("hot0", 64) == 51
+    assert partition_of("cold42", 64) == 59
+    assert partition_of("velocity_x/g0/r7", 64) == 25
+    assert partition_of("", 64) == 0
+
+
+def test_partition_rejects_nonpositive_n():
+    with pytest.raises(ValueError, match="partitions"):
+        partition_of("k", 0)
+    with pytest.raises(ValueError, match="partitions"):
+        partition_of("k", -3)
+
+
+def test_partition_uniform_at_10k_keys():
+    """10k distinct keys over 64 partitions stay within 30% of the ideal
+    per-bucket load — no pathological clumping from the hash."""
+    n = 64
+    loads = [0] * n
+    for i in range(10_000):
+        loads[partition_of(f"stream-{i}/field", n)] += 1
+    expected = 10_000 / n
+    assert min(loads) >= 0.7 * expected
+    assert max(loads) <= 1.3 * expected
+    assert sum(loads) == 10_000
+
+
+if HAS_HYPOTHESIS:
+    @given(key=st.text(max_size=64), n=st.integers(1, 4096))
+    @settings(max_examples=120, deadline=None)
+    def test_partition_is_stable_crc32_never_hash(key, n):
+        p = partition_of(key, n)
+        assert 0 <= p < n
+        # crc32 by definition — i.e. process-stable, PYTHONHASHSEED-free
+        assert p == zlib.crc32(key.encode()) % n
+        assert p == partition_of(key, n)          # idempotent
+
+
+def test_partition_consistent_with_window_stripes_and_shuffle():
+    """One hash family for every keyed ownership decision: the window's
+    stripe index and the plan's shuffle partition agree with partition_of
+    for the same key and modulus."""
+    plan = (OperatorPipeline()
+            .key_by("k", lambda sk, rec: sk.split("/")[-1])
+            .tumbling_window("win", 1.0)
+            .sink("out")).compile()
+    win = plan.ops["win"]
+    for key in ("r0", "r7", "hot3", "a/b/c", ""):
+        assert win._stripe_of(key) == partition_of(key, win.n_stripes)
+    plan.enable_shuffle(16)
+    rec = StreamRecord(field_name="f", group_id=2, rank=7, step=0,
+                       payload=np.zeros(2, dtype=np.float32))
+    # stream key "f/g2/r7" -> KeyBy output "r7"
+    assert plan.shuffle_partition(rec) == partition_of("r7", 16)
+
+
+# ------------------------------------------------------------- shuffle edge
+def test_record_keyby_source_compiles_to_shuffle_edge():
+    plan = (OperatorPipeline()
+            .key_by("k", lambda sk, rec: "x")
+            .tumbling_window("win", 1.0)
+            .sink("out")).compile()
+    assert plan.shuffle_op is not None
+    assert not plan.shuffled                      # off until enabled
+    plan.enable_shuffle(8)
+    assert plan.shuffled and plan.shuffle_partitions == 8
+    with pytest.raises(ValueError, match="partitions"):
+        plan.enable_shuffle(0)
+
+
+def test_enable_shuffle_requires_keyby_source():
+    plan = (OperatorPipeline()
+            .map("m", lambda k, rec: rec.step)
+            .sink("out")).compile()
+    assert plan.shuffle_op is None
+    with pytest.raises(ValueError, match="shuffle edge"):
+        plan.enable_shuffle(8)
+
+
+# --------------------------------------------------------- sharded fan-in
+def _sharded_broker(n_groups=6, n_shards=4, n_producers=12, paused=False,
+                    **cfg_kw):
+    eps = make_endpoints(n_groups, transport="inprocess")
+    plan = GroupPlan(n_producers=n_producers, n_groups=n_groups,
+                     executors_per_group=1)
+    cfg = BrokerConfig(compress="none", n_shards=n_shards, **cfg_kw)
+    return Broker(plan, eps, cfg, paused=paused), eps
+
+
+def test_groups_land_on_owning_shard():
+    broker, eps = _sharded_broker()
+    try:
+        assert broker.n_shards == 4
+        for shard in broker.shards:
+            for g in shard.senders:
+                assert g % broker.n_shards == shard.shard_id
+        # the routing layer and the shards agree, and cover every group
+        assert sorted(broker._senders) == list(range(6))
+        for g in range(6):
+            assert broker._sender(g) is \
+                broker.shards[g % 4].senders[g]
+    finally:
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
+def test_shard_telemetry_rolls_up_per_shard():
+    broker, eps = _sharded_broker(backpressure="block")
+    try:
+        for rank in range(12):
+            broker.write("f", rank, step=0,
+                         payload=np.arange(4, dtype=np.float32))
+        broker.flush()
+        rows = broker.shard_telemetry()
+        assert [r["shard"] for r in rows] == [0, 1, 2, 3]
+        assert sum(r["groups"] for r in rows) == 6
+        assert sum(r["sent"] for r in rows) == 12
+        assert all(r["queue_depth"] == 0 for r in rows)   # drained
+        # group rows carry their owning shard id
+        assert all(r["shard"] == r["group"] % 4
+                   for r in broker.group_telemetry())
+    finally:
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
+def test_backlog_counts_records_not_queue_items():
+    """Regression: a submit_batch list is ONE queue item; backlog/telemetry
+    must still report the records inside it, or batched producers hide an
+    arbitrarily deep backlog from the controller's shard signal."""
+    broker, eps = _sharded_broker(n_groups=4, n_shards=2,
+                                  backpressure="block", paused=True)
+    try:
+        ranks = [0, 4, 8]                    # rank % 4 == 0: all group 0
+        n = broker.write_batch("f", ranks, [1] * 3,
+                               [np.zeros(4, dtype=np.float32)] * 3)
+        assert n == 3
+        sender = broker._sender(0)
+        assert sender.q.qsize() == 1         # one coalesced item...
+        assert sender.backlog() == 3         # ...but three records of backlog
+        shard0 = broker.shards[broker.shard_of(0)]
+        assert shard0.telemetry()["queue_depth"] == 3
+        broker.release()
+        broker.flush()
+        assert sender.backlog() == 0
+        assert broker.stats.sent == 3
+    finally:
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
+def test_backlog_counts_paced_inflight_chunk():
+    """Records the sender has popped but not yet pushed through a slow
+    endpoint still count as backlog — they are exactly the congestion the
+    shard signal exists to see."""
+    broker, eps = _sharded_broker(n_groups=1, n_shards=1, n_producers=2,
+                                  backpressure="block", paused=True,
+                                  max_batch_records=4)
+    try:
+        broker.write_batch("f", [0, 1], [0, 0],
+                           [np.zeros(4, dtype=np.float32)] * 2)
+        assert broker.shards[0].backlog() == 2
+        broker.release()
+        broker.flush()
+        assert broker.shards[0].backlog() == 0
+    finally:
+        broker.finalize()
+        for e in eps:
+            e.close()
+
+
+def test_attach_endpoint_keeps_shard_rings_aligned():
+    broker, eps = _sharded_broker()
+    extra = make_endpoints(1, transport="inprocess")
+    try:
+        idx = broker.attach_endpoint(extra[0])
+        assert idx == len(eps)
+        for shard in broker.shards:
+            assert len(shard.endpoints) == len(eps) + 1
+            assert shard.endpoints[idx] is extra[0]
+    finally:
+        broker.finalize()
+        for e in [*eps, *extra]:
+            e.close()
+
+
+# ----------------------------------------- end-to-end digest equivalence
+def _shuffle_pipeline():
+    def factory():
+        return (OperatorPipeline()
+                .key_by("k", lambda sk, rec: f"b{rec.rank % 5}")
+                .tumbling_window("win", 0.5, allowed_lateness_s=5.0)
+                .aggregate("agg", lambda k, vals: sorted(
+                    (r.rank, r.step,
+                     round(float(np.asarray(r.payload,
+                                            np.float64).sum()), 6))
+                    for r in vals))
+                .sink("out"))
+    return factory
+
+
+def _shuffle_wf(sharded):
+    base = dict(n_producers=24, compress="none", backpressure="block",
+                queue_capacity=1024, max_batch_records=8,
+                trigger_interval=0.05, min_batch=2, n_executors=4,
+                clock="virtual", flush_timeout_s=60.0)
+    if not sharded:
+        return WorkflowConfig(n_groups=1, n_endpoints=1, **base)
+    return WorkflowConfig(n_groups=4, n_endpoints=4, broker_shards=2,
+                          shuffle_partitions=16, **base)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sharded_shuffle_preserves_sink_digest(seed):
+    """Same seed, two topologies (single fan-in vs sharded+shuffled): the
+    sink must see identical panes with identical contents — re-partitioning
+    records across streams may change WHERE work runs, never the results."""
+    phases = (LoadPhase("steady", 1.0, 8.0), LoadPhase("drain", 0.5, 0.0))
+    traces = {}
+    for sharded in (False, True):
+        sc = Scenario(workflow=_shuffle_wf(sharded), phases=phases,
+                      seed=seed, operators=_shuffle_pipeline(),
+                      payload_elems=8)
+        traces[sharded] = run_scenario(sc)
+    a, b = traces[False].summary, traces[True].summary
+    assert a["written"] == b["written"] > 0
+    assert a["dropped_by_policy"] == b["dropped_by_policy"] == 0
+    assert a["sink_digest"] == b["sink_digest"]
+
+
+def test_sharded_shuffle_replays_byte_identical():
+    sc = Scenario(workflow=_shuffle_wf(True),
+                  phases=(LoadPhase("steady", 1.0, 8.0),
+                          LoadPhase("drain", 0.5, 0.0)),
+                  seed=3, operators=_shuffle_pipeline(), payload_elems=8)
+    assert run_scenario(sc).digest() == run_scenario(sc).digest()
+
+
+# -------------------------------------------------- restore topology gate
+def _eo_wf(**kw):
+    base = dict(n_producers=4, n_groups=2, executors_per_group=2,
+                compress="none", backpressure="block", queue_capacity=4096,
+                trigger_interval=0.05, min_batch=4, n_executors=2,
+                max_batch_records=8, delivery="exactly-once",
+                clock="virtual", flush_timeout_s=60.0)
+    base.update(kw)
+    return WorkflowConfig(**base)
+
+
+def _ckpt_pipe():
+    return (OperatorPipeline()
+            .map("norm", lambda k, rec: rec.step)
+            .sink("out"))
+
+
+def _checkpointed_session(tmp_path):
+    from repro.checkpoint.session_store import SessionCheckpointStore
+    from repro.runtime.wal import WalStore
+    from repro.workflow.session import Session
+
+    cfg = _eo_wf()
+    store = SessionCheckpointStore(tmp_path / "ckpts")
+    wal = WalStore(capacity_bytes=cfg.wal_capacity_bytes,
+                   queue_capacity=cfg.queue_capacity, retain="commit")
+    sess = Session(cfg, pipeline=_ckpt_pipe(), wal=wal, checkpoints=store)
+    h = sess.open_field("f", shape=(4,))
+    for s in range(10):
+        h.write_batch(s, [np.full(4, s, dtype=np.float32)] * 4,
+                      ranks=[0, 1, 2, 3], t=s * 0.05)
+        sess.clock.sleep(0.05)
+    sess.checkpoint(timeout=60.0)
+    sess.kill()
+    return cfg, store, wal
+
+
+def test_restore_rejects_topology_mismatch(tmp_path):
+    from repro.workflow.session import RestoreTopologyError, Session
+
+    cfg, store, wal = _checkpointed_session(tmp_path)
+    mismatched = _eo_wf(n_groups=1, executors_per_group=4)
+    with pytest.raises(RestoreTopologyError, match="n_groups"):
+        Session.restore(mismatched, checkpoints=store, wal=wal,
+                        pipeline=_ckpt_pipe())
+    # the error names every divergent axis, not just the first
+    wider = _eo_wf(n_producers=8, n_groups=4, n_endpoints=6)
+    with pytest.raises(RestoreTopologyError) as ei:
+        Session.restore(wider, checkpoints=store, wal=wal,
+                        pipeline=_ckpt_pipe())
+    msg = str(ei.value)
+    assert ("n_producers" in msg and "n_groups" in msg
+            and "endpoint_count" in msg)
+    # RestoreTopologyError is a ValueError: legacy callers that guard
+    # restore with `except ValueError` keep working
+    assert isinstance(ei.value, ValueError)
+
+
+def test_restore_accepts_matching_or_adopted_topology(tmp_path):
+    from repro.workflow.session import Session
+
+    cfg, store, wal = _checkpointed_session(tmp_path)
+    # same topology, explicitly passed: fine
+    sess = Session.restore(_eo_wf(), checkpoints=store, wal=wal,
+                           pipeline=_ckpt_pipe())
+    sess.close()
+
+
+def test_restore_adopts_checkpointed_config(tmp_path):
+    from repro.workflow.session import Session
+
+    cfg, store, wal = _checkpointed_session(tmp_path)
+    sess = Session.restore(config=None, checkpoints=store, wal=wal,
+                           pipeline=_ckpt_pipe())
+    assert sess.config.n_groups == cfg.n_groups
+    sess.close()
+
+
+# ------------------------------------------------------- kill_node fault
+class _FakeFabric:
+    def __init__(self):
+        self.attached, self.drains, self.failed, self.offs = [], [], [], []
+        self.drained_ids = set()
+
+    def attach_node(self, node):
+        self.attached.append(node)
+        return len(self.attached) - 1, [len(self.attached) - 1]
+
+    def begin_drain(self, node):
+        self.drains.append(node)
+
+    def fail_node(self, node):
+        self.failed.append(node)
+
+    def node_drained(self, node):
+        return node.node_id in self.drained_ids
+
+    def finish_poweroff(self, node):
+        self.offs.append(node)
+
+
+_FAST = {"fast": NodeClass("fast", executors=1, cold_start_s=1.0,
+                           cold_start_jitter_s=0.0, cost_rate=2.0)}
+
+
+def test_fail_node_closes_books_and_recovers():
+    clk = VirtualClock()
+    clk.attach()
+    try:
+        fab = _FakeFabric()
+        prov = CloudProvisioner(fab, catalog=_FAST, clock=clk)
+        node = prov.request_node("fast")
+        with pytest.raises(ValueError, match="READY"):
+            prov.fail_node(node)              # only READY nodes can die
+        prov.process_pending_tasks()
+        clk.sleep(1.0)
+        prov.process_pending_tasks()
+        assert node.state == READY
+
+        clk.sleep(0.5)
+        prov.fail_node(node)
+        assert node.state == FAILED
+        assert fab.failed == [node]           # endpoint+executors died once
+        # billing closed AT death, not at session teardown
+        assert prov.ledger.closed
+        assert prov.ledger.node_seconds() == {"fast": 1.5}
+        assert prov.summary()["nodes_failed"] == 1
+        # a second kill is rejected (no double ledger close, no re-fail)
+        with pytest.raises(ValueError, match="READY"):
+            prov.fail_node(node)
+
+        # recover() requeues the node; the reboot gets a FRESH attachment
+        assert prov.recover() == 1
+        assert node.state == PENDING
+        prov.process_pending_tasks()
+        clk.sleep(1.0)
+        prov.process_pending_tasks()
+        assert node.state == READY
+        assert node.endpoint_idx == 1         # new endpoint, not the corpse
+        # the reboot opened a NEW billing record
+        assert prov.ledger.open_count == 1
+    finally:
+        clk.detach()
+
+
+def _provisioned_wf(**el_overrides):
+    el = dict(enabled=True, interval_s=0.1, target_p99_s=1000.0,
+              min_executors=1, max_executors=3, scale_up_step=1,
+              backlog_high=8, idle_scale_down_s=0.4, cooldown_s=0.2,
+              adapt_batch=False, heartbeat_timeout_s=0.5,
+              provision=True, node_class="small")
+    el.update(el_overrides)
+    return WorkflowConfig(
+        n_producers=2, n_groups=1, executors_per_group=1,
+        compress="none", backpressure="block", queue_capacity=1024,
+        trigger_interval=0.05, min_batch=1, n_executors=1,
+        flush_timeout_s=60.0, clock="virtual",
+        elasticity=ElasticityConfig(**el))
+
+
+def test_kill_node_requires_provisioning():
+    sc = Scenario(workflow=_eo_wf(),
+                  phases=(LoadPhase("x", 1.0, 5.0),),
+                  faults=(Fault(t=0.5, kind="kill_node"),))
+    with pytest.raises(ValueError, match="kill_node"):
+        sc.validate()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kill_node_chaos_recovers_without_loss(seed):
+    """Hard-kill a READY cloud node mid-spike: its endpoint and executors
+    die atomically, the ledger closes the node's billing at death, traffic
+    reroutes to survivors, and the loss ledger still closes."""
+    sc = Scenario(
+        workflow=_provisioned_wf(),
+        phases=(LoadPhase("low", 1.0, 2.0), LoadPhase("spike", 3.0, 25.0),
+                LoadPhase("quiet", 4.0, 1.0)),
+        faults=(Fault(t=3.0, kind="kill_node", target=0),),
+        seed=seed, analysis_cost_s=0.03)
+    tr = run_scenario(sc)
+    s = tr.summary
+    kills = [d for _, d in tr.events_of("fault") if d["fault"] == "kill_node"]
+    assert len(kills) == 1 and kills[0]["ok"], \
+        f"kill_node did not land: {kills}"
+    prov = s["provisioning"]
+    assert prov["nodes_failed"] >= 1
+    assert any(d["event"] == "node_failed"
+               for _, d in tr.events_of("provision"))
+    # cost books balance even though the node died instead of draining
+    assert prov["ledger"]["closed"]
+    assert prov["ledger"]["total_node_seconds"] > 0
+    # survivors absorbed the work: nothing silently lost
+    assert s["analyzed"] == s["written"] - s["dropped_by_policy"] > 0
+    assert s["order_timeouts"] == 0
