@@ -76,6 +76,30 @@ class CostLedger:
             )
         return round(cost, 9)
 
+    def attribute(self, shares: dict[str, float]) -> dict[str, float]:
+        """Split total closed cost across tenants proportionally to
+        ``shares`` (e.g. records analyzed per tenant).  The split is exact:
+        the rounded per-tenant costs are adjusted so they sum back to
+        :meth:`total_cost` — cost attribution must close like the loss
+        ledger does.  All-zero shares split evenly (cost happened; someone
+        owns it)."""
+        cost = self.total_cost()
+        names = sorted(shares)
+        if not names:
+            return {}
+        total_share = float(sum(max(0.0, shares[n]) for n in names))
+        out: dict[str, float] = {}
+        if total_share <= 0.0:
+            frac = 1.0 / len(names)
+            out = {n: round(cost * frac, 9) for n in names}
+        else:
+            out = {n: round(cost * max(0.0, shares[n]) / total_share, 9)
+                   for n in names}
+        drift = round(cost - sum(out.values()), 9)
+        if drift and names:
+            out[names[-1]] = round(out[names[-1]] + drift, 9)
+        return out
+
     def summary(self) -> dict:
         with self._lock:
             n = len(self._records)

@@ -40,6 +40,34 @@ from repro.cloud.nodes import (
 from repro.runtime.clock import ensure_clock
 
 
+def pack_nodes(want: int, classes: list[NodeClass]) -> list[NodeClass]:
+    """Greedy heterogeneous bin-packing of ``want`` executor slots.
+
+    Big classes first (ties broken by cheaper cost_rate, then name) absorb
+    the bulk of the deficit; the remainder is covered by the smallest class
+    that still covers it — so a 5-slot spike over {large:4, small:1} packs
+    as ``[large, small]`` instead of two larges.  Deterministic: same
+    inputs, same pack.  The caller clamps to available room; this function
+    only decides the mix.  Returns [] for want <= 0 or an empty catalog
+    slice."""
+    if want <= 0 or not classes:
+        return []
+    order = sorted(classes,
+                   key=lambda c: (-c.executors, c.cost_rate, c.name))
+    picked: list[NodeClass] = []
+    rem = int(want)
+    for cls in order:
+        while rem >= cls.executors:
+            picked.append(cls)
+            rem -= cls.executors
+    if rem > 0:
+        # smallest class that covers the remainder (least overshoot)
+        trim = min((c for c in order), key=lambda c: (c.executors, c.cost_rate,
+                                                      c.name))
+        picked.append(trim)
+    return picked
+
+
 @dataclass
 class _Task:
     kind: str                 # "power_on" | "power_off"
@@ -162,14 +190,19 @@ class CloudProvisioner:
             self.fabric.begin_drain(node)
 
     def pick_poweroff(self, can_release) -> CloudNode | None:
-        """Newest READY node whose release `can_release(node)` allows.
+        """Best READY node to release, or None if `can_release` vetoes all.
 
-        Never returns a booting or draining node — scale-in must not race
-        a cold start or double-drain.
+        Smallest node class first (scale-in is a *trim*: shedding a small
+        node keeps more of the fleet's bulk capacity than shedding a big
+        one), newest within a class — so homogeneous fleets keep the
+        classic newest-READY-first behavior.  Never returns a booting or
+        draining node — scale-in must not race a cold start or
+        double-drain.
         """
         with self._lock:
             ready = [n for n in self.nodes if n.state == READY]
-        for node in sorted(ready, key=lambda n: n.node_id, reverse=True):
+        for node in sorted(ready,
+                           key=lambda n: (n.node_class.executors, -n.node_id)):
             if can_release(node):
                 return node
         return None

@@ -33,7 +33,8 @@ from __future__ import annotations
 import queue
 import threading
 import warnings
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -43,6 +44,7 @@ from repro.core.records import (FieldSchema, StreamRecord, decode, encode,
 from repro.core.transport import Transport
 from repro.runtime.clock import Clock, ensure_clock
 from repro.runtime.wal import WalSegment, WalStore
+from repro.tenancy import TenantAdmission, TenantRegistry, merge_counts
 
 
 @dataclass
@@ -72,6 +74,15 @@ class BrokerConfig:
     # ring, WAL segments, and sender stats, behind a thin routing layer.
     # 1 keeps the paper's single fan-in.  Clamped to n_groups.
     n_shards: int = 1
+    # ---- multi-tenant QoS admission ------------------------------------
+    # Active only when the Broker is built with a TenantRegistry (and the
+    # backpressure policy is not "block"); plain deployments are untouched.
+    # Parking starts when a shard's queued records cross high_water_frac of
+    # its aggregate queue capacity; parked traffic re-admits once the
+    # sender's own queue falls to low_water_frac of its capacity.
+    high_water_frac: float = 0.75
+    low_water_frac: float = 0.25
+    park_capacity: int | None = None  # parked records/sender (None: queue_capacity)
 
 
 @dataclass
@@ -100,6 +111,9 @@ class BrokerStats:
     # make that visible (planned != effective ⇒ mis-sized deployment).
     planned_groups: int = 0
     effective_groups: int = 0
+    # per-tenant loss ledger (tenant -> counters, see repro.tenancy.ledger);
+    # empty unless the broker was built with a TenantRegistry
+    tenants: dict = field(default_factory=dict)
 
 
 _COUNTER_FIELDS = ("written", "sent", "frames_sent", "dropped", "rerouted",
@@ -114,18 +128,28 @@ class _SenderStats:
 
     __slots__ = ("lock", "written", "sent", "frames_sent", "dropped",
                  "rerouted", "bytes_sent", "send_errors", "frames_abandoned",
-                 "frames_replayed", "records_replayed", "queue_high_water")
+                 "frames_replayed", "records_replayed", "queue_high_water",
+                 "tenants")
 
     def __init__(self):
         self.lock = threading.Lock()
         for f in _COUNTER_FIELDS:
             setattr(self, f, 0)
         self.queue_high_water = 0
+        # tenant -> counter dict (repro.tenancy.ledger.TENANT_COUNTERS);
+        # stays empty unless the QoS plane is active
+        self.tenants: dict[str, dict[str, int]] = {}
 
     def add(self, **deltas: int) -> None:
         with self.lock:
             for name, d in deltas.items():
                 setattr(self, name, getattr(self, name) + d)
+
+    def add_tenant(self, tenant: str, **deltas: int) -> None:
+        with self.lock:
+            c = self.tenants.setdefault(tenant, {})
+            for name, d in deltas.items():
+                c[name] = c.get(name, 0) + d
 
     def observe_depth(self, depth: int) -> None:
         with self.lock:
@@ -138,6 +162,10 @@ class _SenderStats:
             out["queue_high_water"] = self.queue_high_water
             return out
 
+    def tenant_snapshot(self) -> dict[str, dict[str, int]]:
+        with self.lock:
+            return {n: dict(c) for n, c in self.tenants.items()}
+
 
 class _GroupSender(threading.Thread):
     """One background sender per producer group (paper: one TCP stream per
@@ -146,13 +174,23 @@ class _GroupSender(threading.Thread):
     def __init__(self, group_id: int, endpoints: list[Transport], primary: int,
                  cfg: BrokerConfig, clock: Clock | None = None, *,
                  wal: WalSegment | None = None,
-                 go: threading.Event | None = None):
+                 go: threading.Event | None = None,
+                 tenants: TenantRegistry | None = None):
         super().__init__(daemon=True, name=f"broker-g{group_id}")
         self.group_id = group_id
         self.endpoints = endpoints            # anything satisfying Transport
         self.primary = primary
         self.cfg = cfg
         self.clock = ensure_clock(clock)
+        # QoS plane: with a registry, admission becomes priority-aware —
+        # parkable tenants hold out of the shared queue under backlog
+        # pressure and eviction sheds the lowest priority class first
+        self.tenants = tenants
+        self._shard: _BrokerShard | None = None   # set by the owning shard
+        self._park: deque = deque()               # parked items, FIFO
+        self._park_records = 0
+        self._park_tenants: dict[str, int] = {}   # currently parked, per tenant
+        self._q_tenants: dict[str, int] = {}      # currently queued, per tenant
         # each sender owns its counters; Broker.stats merges them on read
         self.stats = _SenderStats()
         # mutable wire-aggregation cap, adapted at runtime from queue depth
@@ -199,9 +237,44 @@ class _GroupSender(threading.Thread):
         self.batch_cap = max(1, int(cap))
         return self.batch_cap
 
-    def _q_add(self, n: int) -> None:
+    def _q_add(self, n: int, tenant: str | None = None) -> None:
         with self._q_lock:
             self._q_records += n
+            if tenant is not None and self.tenants is not None:
+                self._q_tenants[tenant] = self._q_tenants.get(tenant, 0) + n
+
+    def _q_sub_chunk(self, recs: list[StreamRecord]) -> None:
+        """Decrement the record backlog for a sent/abandoned chunk, split by
+        tenant when the QoS plane is active (a coalesced chunk can mix
+        tenants across queue items)."""
+        if self.tenants is None:
+            self._q_add(-len(recs))
+            return
+        counts: dict[str, int] = {}
+        for r in recs:
+            counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        with self._q_lock:
+            self._q_records -= len(recs)
+            for t, m in counts.items():
+                self._q_tenants[t] = self._q_tenants.get(t, 0) - m
+
+    def queued_records(self) -> int:
+        """Records in the shared queue only (parked records excluded) —
+        the high-water signal that drives parking."""
+        with self._q_lock:
+            return self._q_records
+
+    def _count_chunk_tenants(self, recs: list[StreamRecord],
+                             counter: str) -> None:
+        """Per-tenant accounting for a whole outbound chunk (no-op without
+        the QoS plane)."""
+        if self.tenants is None:
+            return
+        counts: dict[str, int] = {}
+        for r in recs:
+            counts[r.tenant] = counts.get(r.tenant, 0) + 1
+        for t, m in counts.items():
+            self.stats.add_tenant(t, **{counter: m})
 
     def _sample_tick(self) -> bool:
         """1-of-N admission under `sample` pressure, race-free."""
@@ -222,6 +295,136 @@ class _GroupSender(threading.Thread):
         self.stats.add(dropped=n)
         return True
 
+    # ---- QoS admission (active only with a TenantRegistry) -------------
+    @staticmethod
+    def _item_meta(item) -> tuple[int, str]:
+        """(record count, tenant) of a queue item — items are single records
+        or single-tenant submit_batch lists."""
+        if isinstance(item, list):
+            return len(item), item[0].tenant
+        return 1, item.tenant
+
+    def _over_high_water(self) -> bool:
+        """Shard-level pressure signal: queued records (across the owning
+        shard's senders) at or past high_water_frac of aggregate capacity."""
+        if self._shard is not None:
+            depth = self._shard.queue_records()
+            n_senders = len(self._shard.senders)
+        else:
+            depth, n_senders = self.queued_records(), 1
+        return depth >= self.cfg.high_water_frac * \
+            self.cfg.queue_capacity * max(1, n_senders)
+
+    def _evict_for(self, priority: int) -> bool:
+        """Evict the oldest queue item of the LOWEST evictable priority class
+        (<= the incoming record's class).  Never touches a higher-priority
+        tenant: if only higher classes are queued, the caller's record is the
+        one that gets dropped."""
+        with self.q.mutex:
+            best_i: int | None = None
+            best_pr: int | None = None
+            for i, it in enumerate(self.q.queue):
+                _, t = self._item_meta(it)
+                pr = self.tenants.priority(t)
+                if pr <= priority and (best_pr is None or pr < best_pr):
+                    best_i, best_pr = i, pr
+            if best_i is None:
+                return False
+            victim = self.q.queue[best_i]
+            del self.q.queue[best_i]
+            self.q.not_full.notify()
+        n, vt = self._item_meta(victim)
+        self._q_add(-n, vt)
+        self.stats.add(dropped=n)
+        self.stats.add_tenant(vt, evicted=n)
+        return True
+
+    def _park_item(self, item, n: int, tenant: str) -> None:
+        """Admit a parkable tenant's item into the bounded side-park instead
+        of the shared queue.  Overflow evicts the oldest parked item —
+        counted per tenant, never silent."""
+        cap = self.cfg.park_capacity or self.cfg.queue_capacity
+        evictions: list[tuple[str, int]] = []
+        with self._q_lock:
+            self._park.append(item)
+            self._park_records += n
+            self._park_tenants[tenant] = self._park_tenants.get(tenant, 0) + n
+            while self._park_records > cap and len(self._park) > 1:
+                old = self._park.popleft()
+                m, ot = self._item_meta(old)
+                self._park_records -= m
+                self._park_tenants[ot] = self._park_tenants.get(ot, 0) - m
+                evictions.append((ot, m))
+        self.stats.add_tenant(tenant, admitted=n, parked_total=n)
+        for ot, m in evictions:
+            self.stats.add(dropped=m)
+            self.stats.add_tenant(ot, evicted=m)
+
+    def _maybe_unpark(self) -> None:
+        """Re-admit parked items (oldest first) once the sender's own queue
+        has fallen to the low-water mark — or unconditionally during a
+        stop-drain, so parked records flush rather than strand."""
+        if self._park_records == 0:
+            return
+        low = self.cfg.low_water_frac * self.cfg.queue_capacity
+        draining = self._stop_evt.is_set()
+        while True:
+            with self._q_lock:
+                if not self._park:
+                    return
+                if not draining and self._q_records > low:
+                    return
+                item = self._park[0]
+                try:
+                    self.q.put_nowait(item)
+                except queue.Full:
+                    return
+                self._park.popleft()
+                n, t = self._item_meta(item)
+                self._park_records -= n
+                self._park_tenants[t] = self._park_tenants.get(t, 0) - n
+                self._q_records += n
+                self._q_tenants[t] = self._q_tenants.get(t, 0) + n
+            self.stats.add_tenant(t, unparked=n)
+
+    def _submit_qos(self, item, n: int, tenant: str) -> int:
+        """Priority-aware admission, replacing the anonymous drop policy when
+        the QoS plane is active: parkable tenants side-park under shard
+        backlog pressure, and on a full queue the lowest priority class at or
+        below the incoming record's is evicted first."""
+        st = self.stats
+        if self.cfg.backpressure == "block":
+            # block semantics keep their no-shed guarantee; only account
+            self.clock.queue_put(self.q, item)
+            self._q_add(n, tenant)
+            st.add_tenant(tenant, admitted=n)
+            return n
+        if self.tenants.parks(tenant) and (
+                self._park_tenants.get(tenant, 0) > 0
+                or self._over_high_water()):
+            # once a tenant has parked records, later ones park too —
+            # re-admission is FIFO, so per-stream order is preserved
+            self._park_item(item, n, tenant)
+            return n
+        try:
+            self.q.put_nowait(item)
+            self._q_add(n, tenant)
+            st.add_tenant(tenant, admitted=n)
+            return n
+        except queue.Full:
+            pass
+        if self._evict_for(self.tenants.priority(tenant)):
+            try:
+                self.q.put_nowait(item)
+                self._q_add(n, tenant)
+                st.add_tenant(tenant, admitted=n)
+                return n
+            except queue.Full:
+                pass
+        st.add(dropped=n)
+        st.add_tenant(tenant, dropped=n)
+        return 0
+
     def _submit_eo(self, recs: list[StreamRecord]) -> int:
         """Exactly-once admission: log each record to the WAL before it can
         ship.  Blocks (bounded-WAL backpressure) until space frees.  A
@@ -241,6 +444,10 @@ class _GroupSender(threading.Thread):
                     break
                 self.clock.sleep(0.005)       # WAL full: bounded backpressure
             self.stats.observe_depth(self.wal.unshipped_count())
+            if self.tenants is not None:
+                # counted at append: try_append is atomic, so the per-tenant
+                # admitted count is exact across broker incarnations
+                self.stats.add_tenant(rec.tenant, admitted=1)
             n += 1
         return n
 
@@ -249,6 +456,8 @@ class _GroupSender(threading.Thread):
             return self._submit_eo([rec]) == 1
         self.stats.add(written=1)
         self.stats.observe_depth(self.backlog())
+        if self.tenants is not None:
+            return self._submit_qos(rec, 1, rec.tenant) == 1
         if self.cfg.backpressure == "block":
             self.clock.queue_put(self.q, rec)
             self._q_add(1)
@@ -291,6 +500,19 @@ class _GroupSender(threading.Thread):
         self.stats.add(written=len(recs))
         self.stats.observe_depth(self.backlog())
         item = list(recs)
+        if self.tenants is not None:
+            # queue items must be single-tenant for priority eviction and
+            # park accounting; mixed batches split (rare — FieldHandle and
+            # Broker.write_batch are single-tenant per call)
+            if len({r.tenant for r in item}) == 1:
+                return self._submit_qos(item, len(item), item[0].tenant)
+            total = 0
+            by_tenant: dict[str, list[StreamRecord]] = {}
+            for r in item:
+                by_tenant.setdefault(r.tenant, []).append(r)
+            for tname, sub in by_tenant.items():
+                total += self._submit_qos(sub, len(sub), tname)
+            return total
         if self.cfg.backpressure == "block":
             self.clock.queue_put(self.q, item)
             self._q_add(len(item))
@@ -344,7 +566,10 @@ class _GroupSender(threading.Thread):
         record lists (``submit_batch``); an oversized list is chunked at the
         cap."""
         while not self._killed \
-                and (not self._stop_evt.is_set() or not self.q.empty()):
+                and (not self._stop_evt.is_set() or not self.q.empty()
+                     or self._park_records > 0):
+            if self.tenants is not None:
+                self._maybe_unpark()
             cap = max(1, self.batch_cap)
             item = self.clock.queue_get(self.q, timeout=0.05)
             if item is None:
@@ -368,14 +593,16 @@ class _GroupSender(threading.Thread):
                 # the sender paces the frame out through the endpoint's
                 # bandwidth model — that wait IS the congestion the
                 # controller's backlog signals are meant to see
-                self._q_add(-len(chunk))
+                self._q_sub_chunk(chunk)
                 if sent:
                     self.stats.add(sent=len(chunk), frames_sent=1,
                                    bytes_sent=len(blob))
+                    self._count_chunk_tenants(chunk, "sent")
                 else:
                     # retries exhausted: the frame is gone.  Loudly — silent
                     # loss is indistinguishable from a broken pipeline.
                     self.stats.add(dropped=len(chunk), frames_abandoned=1)
+                    self._count_chunk_tenants(chunk, "evicted")
                     warnings.warn(
                         f"broker group {self.group_id}: abandoned a frame of "
                         f"{len(chunk)} record(s) after {self.cfg.retry_limit} "
@@ -427,6 +654,10 @@ class _GroupSender(threading.Thread):
                     if replayed else {}
                 self.stats.add(sent=n, frames_sent=1, bytes_sent=len(wire),
                                **extra)
+                if self.tenants is not None:
+                    self._count_chunk_tenants(
+                        [e.rec if e.rec is not None else decode(e.blob)
+                         for e in entries], "sent")
                 return True
             if self._killed:
                 return False
@@ -436,6 +667,10 @@ class _GroupSender(threading.Thread):
                 elif self.clock.now() >= deadline:
                     self.wal.ack(last)        # consume so teardown can exit
                     self.stats.add(dropped=n, frames_abandoned=1)
+                    if self.tenants is not None:
+                        self._count_chunk_tenants(
+                            [e.rec if e.rec is not None else decode(e.blob)
+                             for e in entries], "evicted")
                     warnings.warn(
                         f"broker group {self.group_id}: abandoned a frame of "
                         f"{n} record(s) at shutdown — no endpoint recovered "
@@ -516,7 +751,15 @@ class _GroupSender(threading.Thread):
         if self._exactly_once:
             return self.wal.unshipped_count()
         with self._q_lock:
-            return self._q_records
+            # parked records are admitted-but-unsent: they belong on the
+            # backlog (flush() must wait for the park to drain)
+            return self._q_records + self._park_records
+
+    def tenant_backlog(self) -> tuple[dict[str, int], dict[str, int]]:
+        """(queued, parked) records per tenant — live gauges for telemetry
+        and ledger-closure checks."""
+        with self._q_lock:
+            return dict(self._q_tenants), dict(self._park_tenants)
 
     def stats_snapshot(self) -> dict:
         snap = self.stats.snapshot()
@@ -561,7 +804,8 @@ class _BrokerShard:
     def __init__(self, shard_id: int, groups: list[int],
                  endpoints: list[Transport], cfg: BrokerConfig,
                  clock: Clock, *, wal: WalStore | None,
-                 go: threading.Event):
+                 go: threading.Event,
+                 tenants: TenantRegistry | None = None):
         self.shard_id = shard_id
         self.cfg = cfg
         # shard-local ring: a copy, so each shard's failover surface and
@@ -573,7 +817,8 @@ class _BrokerShard:
             s = _GroupSender(g, self.endpoints, g % len(self.endpoints),
                              cfg, clock,
                              wal=wal.segment(g) if wal else None,
-                             go=go)
+                             go=go, tenants=tenants)
+            s._shard = self      # backref for the shard-level park signal
             clock.thread_started(s)
             s.start()
             self.senders[g] = s
@@ -599,6 +844,11 @@ class _BrokerShard:
 
     def backlog(self) -> int:
         return sum(s.backlog() for s in self.senders.values())
+
+    def queue_records(self) -> int:
+        """Aggregate queued records across this shard's senders, excluding
+        parks — the shard backlog that triggers QoS parking."""
+        return sum(s.queued_records() for s in self.senders.values())
 
     def telemetry(self) -> dict:
         """Shard-level control-plane rollup — one row per shard in
@@ -626,7 +876,8 @@ class Broker:
     def __init__(self, plan: GroupPlan, endpoints: list[Transport],
                  cfg: BrokerConfig | None = None, *,
                  clock: Clock | None = None, wal: WalStore | None = None,
-                 paused: bool = False):
+                 paused: bool = False,
+                 tenants: TenantRegistry | None = None):
         assert len(endpoints) >= plan.n_groups, (
             f"{plan.n_groups} groups need >= that many endpoints, "
             f"got {len(endpoints)}")
@@ -638,6 +889,12 @@ class Broker:
         self.effective_groups = plan.n_groups
         self.schemas: dict[str, FieldSchema] = {}
         self.wal = wal
+        # ---- multi-tenant QoS plane ------------------------------------
+        self.tenants = tenants
+        self._quota = TenantAdmission(tenants, self.clock) \
+            if tenants is not None and tenants.has_quota else None
+        self._quota_lock = threading.Lock()
+        self._quota_rejected: dict[str, int] = {}
         if self.cfg.delivery == "exactly-once":
             if self.cfg.backpressure != "block":
                 raise ValueError(
@@ -660,7 +917,7 @@ class Broker:
                       if g % self.n_shards == sid]
             self.shards.append(_BrokerShard(
                 sid, groups, self.endpoints, self.cfg, self.clock,
-                wal=self.wal, go=self._go))
+                wal=self.wal, go=self._go, tenants=tenants))
 
     def shard_of(self, group: int) -> int:
         return group % self.n_shards
@@ -693,6 +950,14 @@ class Broker:
                 setattr(out, f, getattr(out, f) + snap[f])
             out.queue_high_water = max(out.queue_high_water,
                                        snap["queue_high_water"])
+            if self.tenants is not None:
+                merge_counts(out.tenants, s.stats.tenant_snapshot())
+        if self.tenants is not None:
+            with self._quota_lock:
+                rejected = dict(self._quota_rejected)
+            merge_counts(out.tenants,
+                         {t: {"quota_rejected": n}
+                          for t, n in rejected.items()})
         return out
 
     def group_telemetry(self) -> list[dict]:
@@ -715,6 +980,31 @@ class Broker:
         contribution to ``TelemetrySnapshot.shards``, which is what lets
         the controller see one hot shard inside an otherwise calm fleet."""
         return [shard.telemetry() for shard in self.shards]
+
+    def tenant_telemetry(self) -> dict[str, dict]:
+        """Per-tenant QoS rollup (counters + live queued/parked gauges) —
+        the broker's contribution to ``TelemetrySnapshot.tenants``.  Empty
+        without a TenantRegistry."""
+        if self.tenants is None:
+            return {}
+        out: dict[str, dict] = {
+            name: {"backlog": 0, "parked": 0} for name in self.tenants.names()}
+        merged: dict[str, dict[str, int]] = {}
+        for s in self._senders.values():
+            merge_counts(merged, s.stats.tenant_snapshot())
+            queued, parked = s.tenant_backlog()
+            for t, m in queued.items():
+                out.setdefault(t, {"backlog": 0, "parked": 0})["backlog"] += m
+            for t, m in parked.items():
+                row = out.setdefault(t, {"backlog": 0, "parked": 0})
+                row["backlog"] += m
+                row["parked"] += m
+        with self._quota_lock:
+            merge_counts(merged, {t: {"quota_rejected": n}
+                                  for t, n in self._quota_rejected.items()})
+        for t, counts in merged.items():
+            out.setdefault(t, {"backlog": 0, "parked": 0}).update(counts)
+        return out
 
     # ---- control-plane actuators ----------------------------------------
     def set_batch_cap(self, cap: int, group: int | None = None) -> None:
@@ -764,34 +1054,62 @@ class Broker:
     def register(self, schema: FieldSchema) -> None:
         self.schemas[f"{schema.field_name}/g{schema.group_id}"] = schema
 
+    def _check_tenant(self, tenant: str) -> str:
+        if self.tenants is not None and tenant not in self.tenants:
+            raise ValueError(f"unknown tenant {tenant!r}: declare it in the "
+                             "TenantRegistry before writing")
+        return tenant
+
+    def _quota_take(self, tenant: str, n: int) -> int:
+        """Front-door rate quota: grant up to n admission tokens; the
+        rejected remainder is counted per tenant, never silent."""
+        if self._quota is None:
+            return n
+        granted = self._quota.take(tenant, n)
+        if granted < n:
+            with self._quota_lock:
+                self._quota_rejected[tenant] = \
+                    self._quota_rejected.get(tenant, 0) + (n - granted)
+        return granted
+
     def write(self, field_name: str, rank: int, step: int,
-              payload: np.ndarray, *, t: float | None = None) -> bool:
+              payload: np.ndarray, *, t: float | None = None,
+              tenant: str = "default") -> bool:
         """``t`` overrides the event timestamp (default: the clock's now).
         Producers that know their simulation time should pass it — event
         time then survives backpressure stalls and crash-recovery delays,
-        keeping window membership identical across replays."""
+        keeping window membership identical across replays.  ``tenant``
+        tags the record with its QoS class (repro.tenancy)."""
+        self._check_tenant(tenant)
+        if self._quota_take(tenant, 1) < 1:
+            return False
         g = self.plan.group_of(rank)
         rec = StreamRecord(field_name=field_name, group_id=g, rank=rank,
                            step=step, payload=np.asarray(payload),
                            t_generated=self.clock.now() if t is None
-                           else float(t))
+                           else float(t), tenant=tenant)
         return self._sender(g).submit(rec)
 
     def write_batch(self, field_name: str, ranks, steps, payloads, *,
-                    t: float | None = None) -> int:
+                    t: float | None = None, tenant: str = "default") -> int:
         """Submit many records at once, one aggregated queue item per group,
         so each group ships the batch as (at most) one wire frame.  ``ranks``,
         ``steps`` and ``payloads`` are aligned sequences; returns #records
         accepted (backpressure may drop whole per-group batches).  ``t``:
-        explicit event timestamp, as in :meth:`write`."""
+        explicit event timestamp, as in :meth:`write`.  ``tenant`` applies
+        to every record in the call; the rate quota (if any) admits a prefix
+        and counts the rejected remainder."""
+        self._check_tenant(tenant)
+        triplets = list(zip(ranks, steps, payloads))
+        granted = self._quota_take(tenant, len(triplets))
         by_group: dict[int, list[StreamRecord]] = {}
         now = self.clock.now() if t is None else float(t)
-        for rank, step, payload in zip(ranks, steps, payloads):
+        for rank, step, payload in triplets[:granted]:
             g = self.plan.group_of(rank)
             by_group.setdefault(g, []).append(
                 StreamRecord(field_name=field_name, group_id=g, rank=rank,
                              step=step, payload=np.asarray(payload),
-                             t_generated=now))
+                             t_generated=now, tenant=tenant))
         return sum(self._sender(g).submit_batch(recs)
                    for g, recs in by_group.items())
 

@@ -81,6 +81,7 @@ class StreamRecord:
     step: int                    # simulation / training step
     payload: np.ndarray
     t_generated: float = field(default_factory=time.time)
+    tenant: str = "default"      # QoS tenant class (repro.tenancy)
 
     def key(self) -> str:
         return f"{self.field_name}/g{self.group_id}/r{self.rank}"
@@ -251,6 +252,10 @@ def encode(rec: StreamRecord, *, compress: str = "zstd") -> bytes:
         "f": rec.field_name, "g": rec.group_id, "r": rec.rank,
         "s": rec.step, "t": rec.t_generated, "e": enc, "p": payload,
     }
+    if rec.tenant != "default":
+        # the tenant column only appears on tagged traffic, so default-tenant
+        # frames stay byte-identical with pre-tenancy peers
+        msg["u"] = rec.tenant
     blob = msgpack.packb(msg, use_bin_type=True)
     if compress.endswith("zstd") and zstd is not None:
         return b"Z" + _ZSTD_C.compress(blob)
@@ -268,7 +273,8 @@ def decode(data: bytes) -> StreamRecord:
         payload = np.frombuffer(msg["p"]["raw"], np.float32).reshape(
             msg["p"]["shape"])
     return StreamRecord(field_name=msg["f"], group_id=msg["g"], rank=msg["r"],
-                        step=msg["s"], payload=payload, t_generated=msg["t"])
+                        step=msg["s"], payload=payload, t_generated=msg["t"],
+                        tenant=msg.get("u", "default"))
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +364,10 @@ def encode_batch(recs: list[StreamRecord], *, compress: str = "zstd",
         "sh": [list(np.asarray(r.payload).shape) for r in recs],
         "p": payload,
     }
+    if any(r.tenant != "default" for r in recs):
+        # uniform-collapsed like the other identity columns; absent entirely
+        # for default-only batches (frame bytes unchanged vs. pre-tenancy)
+        msg["u"] = _pack_col([r.tenant for r in recs])
     blob = msgpack.packb(msg, use_bin_type=True)
     if compress.endswith("zstd") and zstd is not None:
         return b"C" + _ZSTD_C.compress(blob)
@@ -380,6 +390,7 @@ def decode_batch(data: bytes) -> list[StreamRecord]:
     fields = _unpack_col(msg["f"], n)
     groups = _unpack_col(msg["g"], n)
     ranks = _unpack_col(msg["r"], n)
+    tenants = _unpack_col(msg.get("u", "default"), n)
     flags = _unpack_col(msg["d"], n) if msg["d"] else [0] * n
     shapes = [tuple(s) for s in msg["sh"]]
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
@@ -407,7 +418,8 @@ def decode_batch(data: bytes) -> list[StreamRecord]:
         out.append(StreamRecord(field_name=fields[i], group_id=groups[i],
                                 rank=ranks[i], step=msg["s"][i],
                                 payload=flat.reshape(shape),
-                                t_generated=msg["t"][i]))
+                                t_generated=msg["t"][i],
+                                tenant=tenants[i]))
     return out
 
 

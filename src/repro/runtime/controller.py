@@ -81,6 +81,18 @@ class ElasticityConfig:
     # predictive horizon is floored at cold-start + this margin, so the
     # TrendScalePolicy asks for capacity early enough for it to boot
     cold_start_margin_s: float = 0.5
+    # heterogeneous fleet bin-packing: when non-empty, each scale-out
+    # decision packs a MIX of these node classes (big nodes cover the bulk
+    # of the deficit, the smallest covering class trims the remainder)
+    # instead of rounding the whole request up to ``node_class`` units
+    node_classes: tuple = ()
+    # -- multi-tenant QoS (repro.tenancy) ---------------------------------
+    # scale decisions weigh accumulated per-tenant SLO debt (weight ×
+    # breach-seconds over each tenant's declared p99 target) instead of the
+    # single global target_p99_s; requires WorkflowConfig.tenants
+    slo_debt: bool = False
+    debt_high_s: float = 0.5          # weighted breach-seconds forcing scale-up
+    debt_decay: float = 1.0           # debt paid down per under-target second
 
     def validate(self) -> "ElasticityConfig":
         if self.interval_s <= 0:
@@ -116,6 +128,12 @@ class ElasticityConfig:
             raise ValueError("cold_start_margin_s must be >= 0")
         if self.provision and not self.node_class:
             raise ValueError("provision=True needs a node_class")
+        if any(not isinstance(n, str) or not n for n in self.node_classes):
+            raise ValueError("node_classes entries must be non-empty names")
+        if self.debt_high_s <= 0:
+            raise ValueError("debt_high_s must be > 0")
+        if self.debt_decay < 0:
+            raise ValueError("debt_decay must be >= 0")
         return self
 
 
@@ -252,6 +270,67 @@ class TrendScalePolicy:
         return [Action("scale_up", value=step, reason=why)]
 
 
+class SloDebtScalePolicy:
+    """Debt-weighted multi-tenant scale-out (the tenancy plane's policy).
+
+    Each tenant with a declared p99 target accumulates *SLO debt* —
+    ``weight × (p99 − target)`` integrated over breach time — and pays it
+    down at ``cfg.debt_decay`` per under-target second.  Scale-out fires
+    when any SLO tenant is over target *right now* or when total
+    outstanding debt crosses ``cfg.debt_high_s``: a heavily-weighted
+    tenant that has been quietly over budget forces capacity even while a
+    fleet-global p99 (dragged down by happy best-effort traffic) still
+    reads fine.  Best-effort tenants (no target) carry no debt and never
+    trigger scale-out — their pain is the broker's parking/eviction
+    plane, not the fleet's.
+
+    Scale-in is deliberately not done here; the reactive
+    :class:`LatencyScalePolicy` owns it (same composition contract as
+    :class:`TrendScalePolicy`)."""
+
+    def __init__(self, cfg: ElasticityConfig, tenants=None):
+        self.cfg = cfg
+        self.tenants = tenants               # TenantRegistry (informational)
+        self.debt: dict[str, float] = {}     # tenant -> breach-seconds owed
+        self._last_t: float | None = None
+        self._last_scale = float("-inf")     # see LatencyScalePolicy note
+
+    def decide(self, snap: TelemetrySnapshot, history) -> list[Action]:
+        cfg = self.cfg
+        now = snap.t
+        dt = 0.0 if self._last_t is None else max(0.0, now - self._last_t)
+        self._last_t = now
+        over_now = False
+        for row in snap.tenants:
+            if row.p99_target_s is None:
+                continue                     # best-effort: no debt, ever
+            d = self.debt.get(row.name, 0.0)
+            if row.latency_n > 0 and row.latency_p99 > row.p99_target_s:
+                over_now = True
+                d += row.weight * (row.latency_p99 - row.p99_target_s) * dt
+            else:
+                d = max(0.0, d - cfg.debt_decay * dt)
+            self.debt[row.name] = d
+        total = sum(self.debt.values())
+        if not (over_now or total > cfg.debt_high_s):
+            return []
+        if (now - self._last_scale < cfg.cooldown_s
+                or snap.alive_executors >= cfg.max_executors):
+            return []
+        step = min(cfg.scale_up_step,
+                   cfg.max_executors - snap.alive_executors)
+        self._last_scale = now
+        worst = max((r for r in snap.tenants if r.p99_target_s is not None),
+                    key=lambda r: self.debt.get(r.name, 0.0), default=None)
+        if worst is not None:
+            why = (f"tenant {worst.name} "
+                   f"debt={self.debt.get(worst.name, 0.0):.2f}s "
+                   f"(total={total:.2f}s)")
+        else:
+            why = f"slo debt total={total:.2f}s"
+        return [Action("scale_up", value=step, reason=why)]
+
+
 class BatchCapPolicy:
     """Adapt each sender's wire batch cap to its queue depth with hysteresis:
     a queue ≥2× the cap doubles aggregation (amortize framing under load); a
@@ -292,7 +371,7 @@ class ElasticController(threading.Thread):
                  *, engine=None, broker=None,
                  detector: FailureDetector | None = None, policies=None,
                  clock: Clock | None = None, recovery=None,
-                 provisioner=None):
+                 provisioner=None, tenants=None):
         super().__init__(daemon=True, name="elastic-controller")
         self.bus = bus
         self.cfg = (cfg or ElasticityConfig(enabled=True)).validate()
@@ -303,6 +382,8 @@ class ElasticController(threading.Thread):
         # the provisioner (async provision / drain-before-poweroff) instead
         # of instant engine add/remove
         self.provisioner = provisioner
+        # multi-tenant QoS: the TenantRegistry backing SloDebtScalePolicy
+        self.tenants = tenants
         # one schedule for the whole loop: default to the bus's clock so a
         # virtual-time bus implies a virtual-time controller
         self.clock = ensure_clock(clock if clock is not None else bus.clock)
@@ -319,11 +400,18 @@ class ElasticController(threading.Thread):
             if self.cfg.predictive:
                 horizon = None
                 if self.provisioner is not None:
+                    # with a heterogeneous fleet the projection must clear
+                    # the SLOWEST cold start a pack decision might pick
+                    names = self.cfg.node_classes or (self.cfg.node_class,)
                     horizon = max(
-                        self.cfg.trend_horizon_s,
-                        self.provisioner.expected_ready_s(self.cfg.node_class)
-                        + self.cfg.cold_start_margin_s)
+                        [self.cfg.trend_horizon_s]
+                        + [self.provisioner.expected_ready_s(n)
+                           + self.cfg.cold_start_margin_s for n in names])
                 policies.append(TrendScalePolicy(self.cfg, horizon_s=horizon))
+            if self.cfg.slo_debt and self.tenants is not None:
+                # debt policy runs first: the one-scale_up-per-tick guard
+                # means the tenant-aware decision wins over the global one
+                policies.append(SloDebtScalePolicy(self.cfg, self.tenants))
             policies.append(LatencyScalePolicy(self.cfg))
             if self.cfg.adapt_batch:
                 policies.append(BatchCapPolicy(self.cfg, baseline=baseline))
@@ -415,7 +503,15 @@ class ElasticController(threading.Thread):
         Capacity already in flight (pending/booting nodes) counts against
         the request, so a breach that persists through a cold start does
         not trigger a second wave for the same deficit (flap suppression).
+
+        With ``cfg.node_classes`` set, the deficit is bin-packed across a
+        heterogeneous fleet (``repro.cloud.provisioner.pack_nodes``): big
+        classes absorb the spike, the smallest covering class trims the
+        remainder — instead of rounding the whole request up to
+        ``node_class`` units.
         """
+        from repro.cloud.provisioner import pack_nodes
+
         prov = self.provisioner
         alive = (self.engine.metrics()["alive_executors"]
                  if self.engine is not None else 0)
@@ -423,18 +519,31 @@ class ElasticController(threading.Thread):
         # recover it before asking for brand-new nodes
         recovered = prov.recover()
         inflight = prov.capacity_in_flight()
-        cls = prov.node_class(self.cfg.node_class)
         room = self.cfg.max_executors - alive - inflight
         want = max(action.value or 1, 1)
-        n_nodes = min((want + cls.executors - 1) // cls.executors,
-                      room // cls.executors)
-        if n_nodes <= 0:
+        names = self.cfg.node_classes or (self.cfg.node_class,)
+        classes = [prov.node_class(n) for n in names]
+        picked = pack_nodes(min(want, max(room, 0)), classes)
+        chosen = []
+        total = 0
+        for cls in picked:                   # front-to-back room clamp
+            if total + cls.executors <= room:
+                chosen.append(cls)
+                total += cls.executors
+        if not chosen:
             return (Action("provision", value=0, reason=action.reason)
                     if recovered else None)
-        for _ in range(n_nodes):
-            prov.request_node(self.cfg.node_class)
-        return Action("provision", value=n_nodes, group=action.group,
-                      reason=action.reason)
+        for cls in chosen:
+            prov.request_node(cls.name)
+        reason = action.reason
+        if len(names) > 1:                   # surface the mix when packing
+            counts: dict[str, int] = {}
+            for cls in chosen:
+                counts[cls.name] = counts.get(cls.name, 0) + 1
+            mix = "+".join(f"{n}x{name}" for name, n in counts.items())
+            reason = f"{reason} [{mix}]"
+        return Action("provision", value=len(chosen), group=action.group,
+                      reason=reason)
 
     def _provision_down(self, action: Action) -> Action | None:
         """Turn a scale_down decision into a drain-before-poweroff.

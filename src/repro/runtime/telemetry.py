@@ -84,6 +84,28 @@ class ExecutorTelemetry:
 
 
 @dataclass(frozen=True)
+class TenantTelemetry:
+    """One tenant's QoS rollup: the registry's declared contract plus the
+    broker's loss-ledger counters and the engine's per-tenant latency."""
+
+    name: str
+    priority: int = 0
+    p99_target_s: float | None = None
+    weight: float = 1.0
+    admitted: int = 0
+    sent: int = 0
+    dropped: int = 0
+    evicted: int = 0
+    quota_rejected: int = 0
+    backlog: int = 0              # queued + parked records in the broker
+    parked: int = 0               # currently parked (subset of backlog)
+    analyzed: int = 0
+    latency_p50: float = math.nan
+    latency_p99: float = math.nan
+    latency_n: int = 0            # samples in the rolling window
+
+
+@dataclass(frozen=True)
 class TelemetrySnapshot:
     """One consistent-enough control-plane sample across all layers."""
 
@@ -99,6 +121,7 @@ class TelemetrySnapshot:
     latency_p99: float = math.nan
     latency_n: int = 0            # samples in the rolling window
     executor_seconds: float = 0.0
+    tenants: tuple[TenantTelemetry, ...] = ()   # QoS plane rollups (by name)
 
     @property
     def backlog(self) -> int:
@@ -138,10 +161,12 @@ class TelemetryBus:
     """
 
     def __init__(self, *, broker=None, endpoints=(), engine=None,
-                 history: int = 256, clock: Clock | None = None):
+                 history: int = 256, clock: Clock | None = None,
+                 tenants=None):
         self.broker = broker
         self.endpoints = list(endpoints)
         self.engine = engine
+        self.tenants = tenants      # TenantRegistry (duck-typed), or None
         self.clock = ensure_clock(clock)
         self.history: deque[TelemetrySnapshot] = deque(maxlen=history)
         self._subs: list = []
@@ -221,6 +246,36 @@ class TelemetryBus:
                 ingest_rate_rps=t["ingest_rate_rps"]))
         return tuple(out)
 
+    def _sample_tenants(self, engine_metrics: dict | None) \
+            -> tuple[TenantTelemetry, ...]:
+        """Join the broker's per-tenant loss ledger with the engine's
+        per-tenant latency under the registry's declared contracts; ()
+        without a registry (single-tenant deployments pay nothing)."""
+        if self.tenants is None:
+            return ()
+        broker_rows = {}
+        tenant_fn = getattr(self.broker, "tenant_telemetry", None)
+        if tenant_fn is not None:
+            broker_rows = tenant_fn()
+        eng_rows = (engine_metrics or {}).get("tenants", {})
+        out = []
+        for name in self.tenants.names():
+            spec = self.tenants.spec(name)
+            b = broker_rows.get(name, {})
+            e = eng_rows.get(name, {})
+            out.append(TenantTelemetry(
+                name=name, priority=spec.priority,
+                p99_target_s=spec.p99_target_s, weight=spec.weight,
+                admitted=b.get("admitted", 0), sent=b.get("sent", 0),
+                dropped=b.get("dropped", 0), evicted=b.get("evicted", 0),
+                quota_rejected=b.get("quota_rejected", 0),
+                backlog=b.get("backlog", 0), parked=b.get("parked", 0),
+                analyzed=e.get("analyzed", 0),
+                latency_p50=e.get("latency_p50", math.nan),
+                latency_p99=e.get("latency_p99", math.nan),
+                latency_n=e.get("latency_window_n", 0)))
+        return tuple(out)
+
     def sample(self) -> TelemetrySnapshot:
         now = self.clock.now()
         with self._lock:
@@ -231,6 +286,7 @@ class TelemetryBus:
         held = queued = alive = lat_n = 0
         p50 = p99 = math.nan
         exec_secs = 0.0
+        m = None
         if self.engine is not None:
             m = self.engine.metrics()
             executors = tuple(ExecutorTelemetry(
@@ -249,7 +305,8 @@ class TelemetryBus:
             endpoints=endpoints, executors=executors,
             held_records=held, queued_partitions=queued,
             alive_executors=alive, latency_p50=p50, latency_p99=p99,
-            latency_n=lat_n, executor_seconds=exec_secs)
+            latency_n=lat_n, executor_seconds=exec_secs,
+            tenants=self._sample_tenants(m))
         with self._lock:
             self.history.append(snap)
         for cb in list(self._subs):

@@ -1,0 +1,315 @@
+"""Workload atlas — the named scenario library and its sweep runner.
+
+The scenario runner (:mod:`repro.sim.scenario`) can replay ONE experiment
+from a seed; the atlas turns that into a regression instrument: a curated
+library of workload shapes the ElasticBroker pipeline must survive —
+diurnal load, flash crowds, correlated endpoint failures, a full network
+partition, straggler storms, hot-key drift, and multi-tenant mixes with
+conflicting SLOs — swept over seeds × scenarios on virtual time, emitting
+one deterministic report artifact.
+
+Every scenario is a zero-config builder ``fn(seed) -> Scenario``; every
+run happens under a seeded ``VirtualClock``, so the whole sweep is
+byte-reproducible: CI runs the atlas twice and compares the serialized
+reports (:func:`report_json`) byte for byte.  Multi-tenant scenarios
+additionally gate on the per-tenant loss ledger closing — every admitted
+record accounted sent or evicted, per tenant, chaos included.
+
+    from repro.sim.atlas import run_atlas, report_json
+    report = run_atlas(seeds=(0, 1, 2))
+    print(report_json(report))
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.runtime.controller import ElasticityConfig
+from repro.sim.scenario import (Fault, LoadPhase, Scenario, TenantTraffic,
+                                run_scenario)
+from repro.streaming.operators import OperatorPipeline
+from repro.tenancy import TenantSpec
+from repro.workflow.config import WorkflowConfig
+
+# ---------------------------------------------------------------------------
+# shared wiring: small fleets, virtual time, fast-but-honest rates — each
+# scenario finishes in well under a second of wall time so the full sweep
+# stays CI-cheap
+
+_PAYLOAD = 32
+
+
+def _base(**over) -> WorkflowConfig:
+    kw = dict(n_producers=4, n_groups=2, compress="none",
+              queue_capacity=64, backpressure="drop_oldest",
+              max_batch_records=16, trigger_interval=0.05, min_batch=2,
+              n_executors=2, clock="virtual", flush_timeout_s=120.0)
+    kw.update(over)
+    return WorkflowConfig(**kw)
+
+
+def _elastic(**over) -> ElasticityConfig:
+    kw = dict(enabled=True, interval_s=0.1, target_p99_s=0.5,
+              min_executors=1, max_executors=8, cooldown_s=0.5,
+              backlog_high=64, idle_scale_down_s=1.5,
+              heartbeat_timeout_s=60.0, replace_stragglers=False)
+    kw.update(over)
+    return ElasticityConfig(**kw)
+
+
+_TENANTS = (TenantSpec("alerts", priority=2, p99_target_s=0.5, weight=4.0),
+            TenantSpec("batch", priority=0, weight=1.0))
+
+
+# ---------------------------------------------------------------------------
+# the scenario library
+
+def diurnal(seed: int) -> Scenario:
+    """A day in five phases: the load rises to a peak and falls back to
+    quiet.  Exercises scale-out on the ramp and scale-in on the decline —
+    no faults, pure elasticity."""
+    return Scenario(
+        workflow=_base(elasticity=_elastic(target_p99_s=0.3)),
+        phases=(LoadPhase("night", 1.0, 5.0),
+                LoadPhase("morning", 1.5, 20.0),
+                LoadPhase("peak", 1.5, 60.0),
+                LoadPhase("evening", 1.5, 20.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        analysis_cost_s=0.01, payload_elems=_PAYLOAD, seed=seed)
+
+
+def flash_crowd(seed: int) -> Scenario:
+    """Calm, then a 10x step spike, then calm: the classic elasticity
+    stress — can the fleet absorb a spike it had no warning of?"""
+    return Scenario(
+        workflow=_base(elasticity=_elastic(predictive=True,
+                                           target_p99_s=0.3)),
+        phases=(LoadPhase("calm", 1.5, 8.0),
+                LoadPhase("spike", 1.5, 80.0),
+                LoadPhase("calm2", 1.5, 8.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        analysis_cost_s=0.01, payload_elems=_PAYLOAD, seed=seed)
+
+
+def endpoint_blackout(seed: int) -> Scenario:
+    """Correlated endpoint failures: both endpoints of one group die
+    within 100ms, recover two virtual seconds later.  Senders reroute to
+    the survivors; the failure detector fires on the dead ones."""
+    return Scenario(
+        workflow=_base(n_groups=2, n_endpoints=3, elasticity=_elastic()),
+        phases=(LoadPhase("steady", 4.0, 25.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        faults=(Fault(t=1.0, kind="fail_endpoint", target=0),
+                Fault(t=1.1, kind="fail_endpoint", target=1),
+                Fault(t=3.0, kind="recover_endpoint", target=0),
+                Fault(t=3.1, kind="recover_endpoint", target=1)),
+        analysis_cost_s=0.002, payload_elems=_PAYLOAD, seed=seed)
+
+
+def partition(seed: int) -> Scenario:
+    """Network partition: every endpoint refuses pushes for a window, then
+    the partition heals.  The broker rides it out on queues + retries; the
+    drop policy sheds what the queues cannot hold."""
+    return Scenario(
+        workflow=_base(elasticity=_elastic()),
+        phases=(LoadPhase("steady", 4.0, 25.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        faults=(Fault(t=1.5, kind="fail_endpoint", target=0),
+                Fault(t=1.5, kind="fail_endpoint", target=1),
+                Fault(t=2.5, kind="recover_endpoint", target=0),
+                Fault(t=2.5, kind="recover_endpoint", target=1)),
+        analysis_cost_s=0.002, payload_elems=_PAYLOAD, seed=seed)
+
+
+def straggler_storm(seed: int) -> Scenario:
+    """Both executors degrade at once (a noisy neighbor hitting the whole
+    analysis tier), then clear.  Work-stealing and scale-out carry the
+    backlog through the storm."""
+    return Scenario(
+        workflow=_base(elasticity=_elastic()),
+        phases=(LoadPhase("steady", 4.0, 25.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        faults=(Fault(t=1.0, kind="inject_straggler", target=0, value=0.05),
+                Fault(t=1.0, kind="inject_straggler", target=1, value=0.05),
+                Fault(t=3.0, kind="clear_straggler", target=0),
+                Fault(t=3.0, kind="clear_straggler", target=1)),
+        analysis_cost_s=0.002, payload_elems=_PAYLOAD, seed=seed)
+
+
+def _drift_pipeline():
+    """Keyed windowing whose hot key DRIFTS: the heavy key changes every
+    20 steps, so keyed state ownership keeps migrating."""
+
+    def key_fn(stream_key: str, rec) -> str:
+        rank = int(stream_key.rsplit("/r", 1)[1])
+        if rank < 3:                      # 3 of 4 ranks pool on the hot key
+            return f"hot{(rec.step // 20) % 3}"
+        return f"cold{rec.step % 5}"
+
+    def factory() -> OperatorPipeline:
+        return (OperatorPipeline()
+                .key_by("drift", key_fn)
+                .tumbling_window("win", 0.5, allowed_lateness_s=5.0)
+                .aggregate("agg", lambda k, vals: sorted(
+                    (r.rank, r.step) for r in vals))
+                .sink("out"))
+
+    return factory
+
+
+def hot_key_drift(seed: int) -> Scenario:
+    """80% of records concentrate on one key — and that key drifts every
+    20 steps.  Exercises keyed-state migration under the operator plan."""
+    return Scenario(
+        workflow=_base(elasticity=_elastic()),
+        phases=(LoadPhase("steady", 3.0, 30.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        operators=_drift_pipeline(), payload_elems=_PAYLOAD, seed=seed)
+
+
+def tenant_squeeze(seed: int) -> Scenario:
+    """Two tenants with conflicting SLOs under a capacity squeeze:
+    ``alerts`` (priority 2, p99 target, weight 4) shares the pipe with
+    ``batch`` (priority 0, best-effort, 3x the traffic) while per-endpoint
+    inbound bandwidth caps the drain rate below the offered load.  The QoS
+    admission plane must park/evict batch first — never silently — and
+    debt-weighted scaling must keep alerts under its target."""
+    return Scenario(
+        workflow=_base(
+            queue_capacity=32, inbound_bw=4_000.0, max_batch_records=2,
+            qos_high_water=0.3, tenants=_TENANTS,
+            elasticity=_elastic(slo_debt=True, target_p99_s=1e9,
+                                backlog_high=10**9, adapt_batch=False)),
+        phases=(LoadPhase("calm", 1.0, 10.0),
+                LoadPhase("squeeze", 2.0, 40.0),
+                LoadPhase("recover", 1.0, 10.0),
+                LoadPhase("drain", 4.0, 0.0)),
+        tenant_traffic=(TenantTraffic("alerts", ranks=(0,), every=2),
+                        TenantTraffic("batch", ranks=(1, 2, 3))),
+        analysis_cost_s=0.001, payload_elems=_PAYLOAD, seed=seed)
+
+
+def tenant_quota(seed: int) -> Scenario:
+    """A quota'd tenant offering 3x its contracted rate: the token bucket
+    rejects the excess at the front door (counted, not dropped downstream)
+    while the unquota'd tenant is untouched."""
+    tenants = (TenantSpec("alerts", priority=2, p99_target_s=1.0),
+               TenantSpec("batch", priority=0, rate_quota_rps=30.0))
+    return Scenario(
+        workflow=_base(tenants=tenants, elasticity=_elastic()),
+        phases=(LoadPhase("steady", 3.0, 30.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        tenant_traffic=(TenantTraffic("alerts", ranks=(0,)),
+                        TenantTraffic("batch", ranks=(1, 2, 3))),
+        analysis_cost_s=0.001, payload_elems=_PAYLOAD, seed=seed)
+
+
+def tenant_blackout(seed: int) -> Scenario:
+    """Multi-tenant mix + endpoint blackout: the QoS plane and the fault
+    plane collide.  Whatever is lost, the per-tenant loss ledger still
+    closes — loss is attributed, never silent."""
+    return Scenario(
+        workflow=_base(queue_capacity=32, tenants=_TENANTS,
+                       elasticity=_elastic(slo_debt=True)),
+        phases=(LoadPhase("steady", 4.0, 30.0),
+                LoadPhase("drain", 2.0, 0.0)),
+        faults=(Fault(t=1.0, kind="fail_endpoint", target=0),
+                Fault(t=2.5, kind="recover_endpoint", target=0)),
+        tenant_traffic=(TenantTraffic("alerts", ranks=(0, 1)),
+                        TenantTraffic("batch", ranks=(2, 3))),
+        analysis_cost_s=0.001, payload_elems=_PAYLOAD, seed=seed)
+
+
+SCENARIOS = {
+    "diurnal": diurnal,
+    "flash_crowd": flash_crowd,
+    "endpoint_blackout": endpoint_blackout,
+    "partition": partition,
+    "straggler_storm": straggler_storm,
+    "hot_key_drift": hot_key_drift,
+    "tenant_squeeze": tenant_squeeze,
+    "tenant_quota": tenant_quota,
+    "tenant_blackout": tenant_blackout,
+}
+
+
+# ---------------------------------------------------------------------------
+# the sweep runner
+
+def build(name: str, seed: int) -> Scenario:
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown atlas scenario {name!r}; library has "
+                       f"{sorted(SCENARIOS)}") from None
+    return builder(seed)
+
+
+def _run_row(name: str, seed: int) -> dict:
+    trace = run_scenario(build(name, seed))
+    s = trace.summary
+    row = {
+        "scenario": name,
+        "seed": seed,
+        "digest": trace.digest(),
+        "written": s["written"],
+        "sent": s["sent"],
+        "dropped_by_policy": s["dropped_by_policy"],
+        "analyzed": s["analyzed"],
+        "latency_p99": s["latency_p99"],
+        "executors_peak": s["executors_peak"],
+        "virtual_duration_s": s["virtual_duration_s"],
+        "controller_actions": s.get("controller_actions", {}),
+    }
+    if "tenants" in s:
+        row["tenants"] = s["tenants"]
+        row["tenant_ledger"] = s["tenant_ledger"]
+    return row
+
+
+def run_atlas(names=None, seeds=(0, 1, 2)) -> dict:
+    """Sweep ``names`` (default: the full library) × ``seeds``; returns the
+    atlas report — per-run rows plus the sweep-level gates.  Deterministic:
+    same arguments, byte-identical :func:`report_json` output."""
+    names = sorted(SCENARIOS) if names is None else list(names)
+    runs = [_run_row(name, seed) for name in names for seed in seeds]
+    ledger_failures = [
+        f"{r['scenario']}/seed{r['seed']}: {e}"
+        for r in runs if "tenant_ledger" in r
+        for e in r["tenant_ledger"]["errors"]]
+    silent = [f"{r['scenario']}/seed{r['seed']}" for r in runs
+              if r["analyzed"] == 0]
+    return {
+        "atlas": {"scenarios": names, "seeds": list(seeds),
+                  "n_runs": len(runs)},
+        "runs": runs,
+        "gates": {
+            "ledgers_closed": not ledger_failures,
+            "ledger_failures": ledger_failures,
+            "all_runs_analyzed": not silent,
+            "silent_runs": silent,
+        },
+    }
+
+
+def report_json(report: dict) -> str:
+    """Canonical serialization of an atlas report: sorted keys, one
+    newline-terminated document — the byte-compare artifact CI gates on.
+    NaN percentiles (a tenant with zero analyzed records) canonicalize to
+    null so the artifact stays strict JSON."""
+    return json.dumps(_sanitize(report), sort_keys=True, indent=1,
+                      allow_nan=False) + "\n"
+
+
+def _sanitize(v):
+    if isinstance(v, dict):
+        return {k: _sanitize(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_sanitize(x) for x in v]
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        f = float(v)
+        return f if f == f else None
+    return v

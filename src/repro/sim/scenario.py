@@ -39,6 +39,7 @@ from repro.runtime.clock import VirtualClock
 from repro.runtime.wal import WalStore
 from repro.streaming.engine import percentile_sorted
 from repro.streaming.operators import WindowPane
+from repro.tenancy import TENANT_COUNTERS, closure_errors
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.session import Session
 
@@ -52,6 +53,19 @@ class LoadPhase:
     name: str
     duration_s: float
     rate_hz: float
+
+
+@dataclass(frozen=True)
+class TenantTraffic:
+    """One tenant's slice of the producer load: which ranks write under
+    this QoS identity, thinned to every ``every``-th load step.  A scenario
+    with ``tenant_traffic`` opens one FieldHandle per tenant, so records
+    carry tenant identity end to end (broker admission → telemetry rollups
+    → per-tenant trace events)."""
+
+    tenant: str
+    ranks: tuple = (0,)
+    every: int = 1                     # write on steps where step % every == 0
 
 
 @dataclass(frozen=True)
@@ -140,6 +154,9 @@ class Scenario:
     # make run #2 restore run #1's checkpoints.
     checkpoint_every_s: float = 0.0
     checkpoint_dir: str | None = None
+    # multi-tenant load: per-tenant rank slices (requires workflow.tenants);
+    # () keeps the single-handle load loop
+    tenant_traffic: tuple = ()
 
     def validate(self) -> "Scenario":
         self.workflow.validate()
@@ -174,6 +191,24 @@ class Scenario:
                 "kill_session and checkpoint_every_s require an operators "
                 "factory: Session.restore/checkpoint rebuild plan state "
                 "(window panes, sinks), which the callback path has none of")
+        if self.tenant_traffic:
+            reg = self.workflow.tenant_registry()
+            if reg is None:
+                raise ValueError("tenant_traffic requires workflow.tenants "
+                                 "(records need a registry to be admitted "
+                                 "under)")
+            for tr in self.tenant_traffic:
+                if tr.tenant not in reg:
+                    raise ValueError(f"tenant_traffic names undeclared "
+                                     f"tenant {tr.tenant!r}")
+                if tr.every < 1:
+                    raise ValueError("TenantTraffic.every must be >= 1")
+                if not tr.ranks or any(
+                        not (0 <= r < self.workflow.n_producers)
+                        for r in tr.ranks):
+                    raise ValueError(
+                        f"TenantTraffic.ranks must be non-empty and within "
+                        f"[0, n_producers={self.workflow.n_producers})")
         if self.operators is not None:
             if not callable(self.operators):
                 raise ValueError("operators must be a zero-arg factory "
@@ -220,12 +255,25 @@ class ScenarioTrace:
         scenario to have run with ``record_latency=True``)."""
         return sorted((t, d["latency"]) for t, d in self.events_of("latency"))
 
-    def phase_p99(self, name: str) -> float:
+    def phase_p99(self, name: str, tenant: str | None = None) -> float:
         """p99 generation→analysis latency over results whose records were
-        *generated* inside the named phase's window (paper §4.3 framing)."""
-        lats = sorted(d["latency"] for _, d in self.events_of("result")
-                      for (pn, a, b) in self.phase_windows
-                      if pn == name and a <= d["t_generated"] < b)
+        *generated* inside the named phase's window (paper §4.3 framing).
+
+        With ``tenant``, only that tenant's slice of each result counts —
+        its own oldest-record timestamp decides phase membership and its
+        own latency feeds the percentile (multi-tenant scenarios emit a
+        ``tenants`` map per result event)."""
+        if tenant is None:
+            lats = sorted(d["latency"] for _, d in self.events_of("result")
+                          for (pn, a, b) in self.phase_windows
+                          if pn == name and a <= d["t_generated"] < b)
+        else:
+            lats = sorted(d["tenants"][tenant][2]
+                          for _, d in self.events_of("result")
+                          if tenant in d.get("tenants", {})
+                          for (pn, a, b) in self.phase_windows
+                          if pn == name
+                          and a <= d["tenants"][tenant][1] < b)
         return percentile_sorted(lats, 0.99)
 
     def to_jsonl(self) -> str:
@@ -394,6 +442,15 @@ class ScenarioRunner:
             if old.provisioner is not None:
                 box["prov_events"].extend(old.provisioner.events)
 
+        def open_handles(s: Session) -> None:
+            box["handle"] = s.open_field(sc.field_name,
+                                         shape=(sc.payload_elems,))
+            box["handles"] = {
+                tr.tenant: s.open_field(sc.field_name,
+                                        shape=(sc.payload_elems,),
+                                        tenant=tr.tenant)
+                for tr in sc.tenant_traffic}
+
         def restore_session() -> None:
             old = box["sess"]
             absorb_dead(old)
@@ -403,13 +460,11 @@ class ScenarioRunner:
                                   clock=clock)
             new.exec_plan.on_event = op_emit
             box["sess"] = new
-            box["handle"] = new.open_field(sc.field_name,
-                                           shape=(sc.payload_elems,))
+            open_handles(new)
             box["restores"] += 1
 
         try:
-            box["handle"] = sess.open_field(sc.field_name,
-                                            shape=(sc.payload_elems,))
+            open_handles(sess)
             n_ranks = sc.workflow.n_producers
             rng = np.random.RandomState(sc.seed)
             payloads = [rng.randn(sc.payload_elems).astype(np.float32)
@@ -477,9 +532,21 @@ class ScenarioRunner:
                 else:
                     period = ph.duration_s / n_steps
                     for _ in range(n_steps):
-                        accepted = box["handle"].write_batch(
-                            step, payloads, ranks=list(range(n_ranks)),
-                            t=round(sched, 9))
+                        if sc.tenant_traffic:
+                            accepted = 0
+                            for tr in sc.tenant_traffic:
+                                if step % tr.every:
+                                    continue
+                                accepted += box["handles"][tr.tenant] \
+                                    .write_batch(
+                                        step,
+                                        [payloads[r] for r in tr.ranks],
+                                        ranks=list(tr.ranks),
+                                        t=round(sched, 9))
+                        else:
+                            accepted = box["handle"].write_batch(
+                                step, payloads, ranks=list(range(n_ranks)),
+                                t=round(sched, 9))
                         emit("write", step=step, accepted=accepted)
                         step += 1
                         sched += period
@@ -509,13 +576,21 @@ class ScenarioRunner:
             prov_events.extend(sess.provisioner.events)
         for t, d in prov_events:
             trace.events.append((round(t, 9), "provision", dict(d)))
+        tenancy = bool(sc.workflow.tenants)
         for r in sess.results():
-            trace.events.append((round(r.t_analyzed, 9), "result",
-                                 {"stream": r.stream_key,
-                                  "executor": r.executor,
-                                  "n_records": r.n_records,
-                                  "t_generated": round(r.t_generated_min, 9),
-                                  "latency": round(r.latency, 9)}))
+            detail = {"stream": r.stream_key,
+                      "executor": r.executor,
+                      "n_records": r.n_records,
+                      "t_generated": round(r.t_generated_min, 9),
+                      "latency": round(r.latency, 9)}
+            rt = getattr(r, "tenants", None)
+            if tenancy and rt:
+                # per-tenant slice of the micro-batch: count, oldest
+                # generation instant, and that slice's own latency
+                detail["tenants"] = {
+                    name: [n, round(tg, 9), round(r.t_analyzed - tg, 9)]
+                    for name, (n, tg) in sorted(rt.items())}
+            trace.events.append((round(r.t_analyzed, 9), "result", detail))
         trace.events.sort(key=lambda e: (e[0], e[1],
                                          json.dumps(e[2], sort_keys=True)))
 
@@ -544,6 +619,32 @@ class ScenarioRunner:
             "virtual_duration_s": round(clock.now(), 9),
             "clock_wakeups": clock.wakeups,
         }
+        if tenancy:
+            # per-tenant QoS rollup + the loss-ledger closure verdict: after
+            # an ordered close the broker backlog is empty, so every
+            # admitted record must be accounted sent or evicted — per
+            # tenant, in every scenario, chaos included
+            by_tenant_lat: dict[str, list] = {}
+            analyzed_by: dict[str, int] = {}
+            for _, d in trace.events_of("result"):
+                for name, (n, _tg, lat) in d.get("tenants", {}).items():
+                    analyzed_by[name] = analyzed_by.get(name, 0) + n
+                    by_tenant_lat.setdefault(name, []).append(lat)
+            errs = closure_errors(st.tenants)
+            rows = {}
+            for name in sorted(set(st.tenants) | set(analyzed_by)):
+                c = st.tenants.get(name, {})
+                rows[name] = {k: c.get(k, 0) for k in TENANT_COUNTERS}
+                rows[name]["analyzed"] = analyzed_by.get(name, 0)
+                rows[name]["latency_p99"] = round(percentile_sorted(
+                    sorted(by_tenant_lat.get(name, [])), 0.99), 9)
+            trace.summary["tenants"] = rows
+            trace.summary["tenant_ledger"] = {"closed": not errs,
+                                              "errors": errs}
+            if sess.provisioner is not None:
+                trace.summary["cost_by_tenant"] = \
+                    sess.provisioner.ledger.attribute(
+                        {n: float(analyzed_by.get(n, 0)) for n in rows})
         if sess.controller is not None or actions:
             act_counts: dict[str, int] = {}
             for _, a in actions:

@@ -36,7 +36,7 @@ from __future__ import annotations
 import queue
 import threading
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.core.records import StreamRecord
@@ -86,11 +86,18 @@ class Result:
     t_generated_min: float
     t_analyzed: float
     executor: int
+    # per-tenant share of this batch: tenant -> (n_records, min t_generated);
+    # the QoS plane's per-tenant latency is t_analyzed - that tenant's min
+    tenants: dict = field(default_factory=dict)
 
     @property
     def latency(self) -> float:
         """Paper §4.3 metric: data generated -> data analyzed."""
         return self.t_analyzed - self.t_generated_min
+
+    def tenant_latency(self, name: str) -> float | None:
+        ent = self.tenants.get(name)
+        return None if ent is None else self.t_analyzed - ent[1]
 
 
 class _Executor(threading.Thread):
@@ -135,10 +142,16 @@ class _Executor(threading.Thread):
             else:
                 value = self._run_plan(plan, mb, clock)
             tmin = min((r.t_generated for r in mb.records), default=mb.t_created)
+            by_tenant: dict[str, tuple[int, float]] = {}
+            for r in mb.records:
+                ent = by_tenant.get(r.tenant)
+                by_tenant[r.tenant] = (1, r.t_generated) if ent is None else \
+                    (ent[0] + 1, min(ent[1], r.t_generated))
             eng._collect(Result(stream_key=mb.stream_key, value=value,
                                 n_records=len(mb.records),
                                 t_generated_min=tmin,
-                                t_analyzed=clock.now(), executor=self.idx))
+                                t_analyzed=clock.now(), executor=self.idx,
+                                tenants=by_tenant))
             self.processed += 1
             self.current_key = None
             eng._release_turn(mb)
@@ -229,6 +242,9 @@ class StreamEngine:
         self.clock = ensure_clock(clock)
         self.results: list[Result] = []
         self._recent_lat: deque = deque(maxlen=512)  # rolling latency window
+        # per-tenant rolling latency + analyzed totals (QoS plane rollups)
+        self._tenant_lat: dict[str, deque] = {}
+        self._tenant_analyzed: dict[str, int] = {}
         self._rlock = threading.Lock()
         self._elock = threading.Lock()
         # trigger_once reentrancy + hold/assign/seq state (RLock: _reassign
@@ -626,6 +642,11 @@ class StreamEngine:
         with self._rlock:
             self.results.append(r)
             self._recent_lat.append((r.t_analyzed, r.latency))
+            for name, (n, tmin) in r.tenants.items():
+                self._tenant_analyzed[name] = \
+                    self._tenant_analyzed.get(name, 0) + n
+                self._tenant_lat.setdefault(name, deque(maxlen=512)).append(
+                    (r.t_analyzed, r.t_analyzed - tmin))
 
     # ---- public ----------------------------------------------------------
     def collect(self, clear: bool = False) -> list[Result]:
@@ -672,11 +693,21 @@ class StreamEngine:
         with self._rlock:
             lats = sorted(lat for t, lat in self._recent_lat if t >= cut)
             n_results = len(self.results)
+            tenants = {}
+            for name, analyzed in self._tenant_analyzed.items():
+                tl = sorted(lat for t, lat in self._tenant_lat.get(name, ())
+                            if t >= cut)
+                tenants[name] = {
+                    "analyzed": analyzed,
+                    "latency_window_n": len(tl),
+                    "latency_p50": percentile_sorted(tl, 0.50),
+                    "latency_p99": percentile_sorted(tl, 0.99)}
         batch_agg = self.plan.batch_stats() if self.plan is not None else {}
         shuffle_n = self.plan.shuffle_partitions \
             if self.plan is not None and getattr(self.plan, "shuffled", False) \
             else None
         return {"executors": execs,
+                "tenants": tenants,
                 "shuffle_partitions": shuffle_n,
                 "alive_executors": sum(1 for e in execs if e["alive"]),
                 "batch_agg": batch_agg,
@@ -771,3 +802,11 @@ class StreamEngine:
             self._done_cv.notify_all()
         with self._rlock:
             self.results = list(state["results"])
+            # rebuild per-tenant analyzed totals from the restored results so
+            # QoS rollups stay exact across a session restore (the rolling
+            # latency windows restart — they are time-local by design)
+            self._tenant_analyzed = {}
+            for r in self.results:
+                for name, (n, _) in getattr(r, "tenants", {}).items():
+                    self._tenant_analyzed[name] = \
+                        self._tenant_analyzed.get(name, 0) + n

@@ -1,0 +1,15 @@
+"""Multi-tenant QoS plane: tenant specs, quota admission, loss ledger."""
+from repro.tenancy.admission import TenantAdmission
+from repro.tenancy.ledger import TENANT_COUNTERS, closure_errors, merge_counts, zero_counts
+from repro.tenancy.spec import DEFAULT_TENANT, TenantRegistry, TenantSpec
+
+__all__ = [
+    "DEFAULT_TENANT",
+    "TENANT_COUNTERS",
+    "TenantAdmission",
+    "TenantRegistry",
+    "TenantSpec",
+    "closure_errors",
+    "merge_counts",
+    "zero_counts",
+]

@@ -1,0 +1,46 @@
+"""Per-tenant rate-quota admission: a clock-driven token bucket.
+
+Sits at the broker's front door (``Broker.write`` / ``write_batch``),
+*before* records enter the data plane, so quota rejections never consume
+queue capacity.  Buckets refill continuously from the injected clock —
+virtual or wall — which keeps quota decisions deterministic under the
+scenario runner's VirtualClock.
+
+Tenants without a declared ``rate_quota_rps`` are never throttled.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.tenancy.spec import TenantRegistry
+
+
+class TenantAdmission:
+    """Token buckets keyed by tenant, capacity = ``burst_s`` seconds of quota."""
+
+    def __init__(self, registry: TenantRegistry, clock, *, burst_s: float = 1.0):
+        self.registry = registry
+        self.clock = clock
+        self._lock = threading.Lock()
+        # name -> [tokens, last_refill_t, rate, capacity]
+        self._buckets: dict[str, list[float]] = {}
+        for spec in registry:
+            if spec.rate_quota_rps is not None:
+                cap = max(1.0, spec.rate_quota_rps * burst_s)
+                self._buckets[spec.name] = [cap, None, spec.rate_quota_rps, cap]
+
+    def take(self, tenant: str, n: int) -> int:
+        """Grant up to ``n`` admission tokens for ``tenant``; returns the
+        granted count (``n`` when the tenant has no quota)."""
+        bucket = self._buckets.get(tenant)
+        if bucket is None or n <= 0:
+            return max(n, 0)
+        now = self.clock.now()
+        with self._lock:
+            tokens, last, rate, cap = bucket
+            if last is not None and now > last:
+                tokens = min(cap, tokens + (now - last) * rate)
+            granted = min(n, int(tokens))
+            bucket[0] = tokens - granted
+            bucket[1] = now
+            return granted

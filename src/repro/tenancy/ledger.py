@@ -1,0 +1,60 @@
+"""Per-tenant loss-ledger arithmetic.
+
+Every record a tenant offers to the broker lands in exactly one bucket:
+
+  ``quota_rejected``  refused at the front door by the rate quota
+  ``dropped``         refused at admission (queue full, no evictable
+                      lower-priority victim / sample policy) — never
+                      entered the data plane
+  ``admitted``        entered the data plane (queue, park, or WAL)
+
+and every *admitted* record is conserved:
+
+  admitted == sent + evicted + backlog(queue + park)
+
+``evicted`` covers post-admission shedding: priority eviction under
+backpressure, park overflow, and abandoned send frames.  After a clean
+``finalize()`` the backlog term is zero, so the ledger closes as
+``admitted == sent + evicted`` — and with loss-free endpoints,
+``sent == analyzed``, which is the invariant the atlas checks in every
+scenario.
+"""
+from __future__ import annotations
+
+TENANT_COUNTERS = (
+    "admitted",
+    "sent",
+    "dropped",
+    "evicted",
+    "parked_total",
+    "unparked",
+    "quota_rejected",
+)
+
+
+def zero_counts() -> dict[str, int]:
+    return {k: 0 for k in TENANT_COUNTERS}
+
+
+def merge_counts(into: dict[str, dict[str, int]], frm: dict[str, dict[str, int]]) -> None:
+    """Fold one tenant->counters map into another, additively."""
+    for name, counts in frm.items():
+        dst = into.setdefault(name, zero_counts())
+        for k, v in counts.items():
+            dst[k] = dst.get(k, 0) + v
+
+
+def closure_errors(tenants: dict[str, dict[str, int]], *,
+                   backlog: dict[str, int] | None = None) -> list[str]:
+    """Check the per-tenant conservation law; returns human-readable
+    violations (empty list == ledger closed)."""
+    errs = []
+    for name in sorted(tenants):
+        c = tenants[name]
+        left = c.get("admitted", 0)
+        right = (c.get("sent", 0) + c.get("evicted", 0)
+                 + (backlog or {}).get(name, 0))
+        if left != right:
+            errs.append(
+                f"tenant {name!r}: admitted={left} != sent+evicted+backlog={right} ({c})")
+    return errs

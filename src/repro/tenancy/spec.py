@@ -1,0 +1,102 @@
+"""Tenant declarations for the multi-tenant QoS plane.
+
+A *tenant* is a class of traffic with its own service contract: the
+combustion run's alert stream is not the same workload as a best-effort
+archival tap, even when both ride the same broker.  Each tenant declares
+
+  * a **priority class** (higher = more important; admission/eviction in
+    the broker never sheds a tenant to benefit a lower-priority one),
+  * an optional **p99 latency target** — tenants with a target are the
+    *protected* set: when a shard's backlog crosses its high-water mark,
+    traffic from strictly lower-priority tenants is parked first,
+  * an optional **rate quota** (records/s token bucket at the broker
+    front door; rejections are counted per tenant, never silent),
+  * a **weight** used by the debt-weighted scale policy and by cost
+    attribution.
+
+The registry is immutable after construction and always contains the
+``default`` tenant so untagged traffic keeps working unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+DEFAULT_TENANT = "default"
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's declared service contract."""
+
+    name: str
+    priority: int = 0
+    p99_target_s: float | None = None
+    rate_quota_rps: float | None = None
+    weight: float = 1.0
+
+    def validate(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("tenant name must be a non-empty string")
+        if not isinstance(self.priority, int) or self.priority < 0:
+            raise ValueError(f"tenant {self.name!r}: priority must be an int >= 0")
+        if self.p99_target_s is not None and self.p99_target_s <= 0:
+            raise ValueError(f"tenant {self.name!r}: p99_target_s must be > 0")
+        if self.rate_quota_rps is not None and self.rate_quota_rps <= 0:
+            raise ValueError(f"tenant {self.name!r}: rate_quota_rps must be > 0")
+        if self.weight <= 0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+class TenantRegistry:
+    """Immutable name -> TenantSpec lookup with QoS-plane derived facts.
+
+    ``protected_priority`` is the highest priority class among tenants
+    that declared a p99 target; tenants strictly below it are *parkable*
+    (their records are held out of the shared queues under pressure).
+    ``None`` when no tenant declared a target — then the QoS plane never
+    parks anything.
+    """
+
+    def __init__(self, specs=()):
+        by_name: dict[str, TenantSpec] = {}
+        for spec in specs:
+            spec.validate()
+            if spec.name in by_name:
+                raise ValueError(f"duplicate tenant {spec.name!r}")
+            by_name[spec.name] = spec
+        if DEFAULT_TENANT not in by_name:
+            by_name[DEFAULT_TENANT] = TenantSpec(DEFAULT_TENANT)
+        self._specs = by_name
+        targeted = [s.priority for s in by_name.values() if s.p99_target_s is not None]
+        self.protected_priority: int | None = max(targeted) if targeted else None
+        self.has_quota = any(s.rate_quota_rps is not None for s in by_name.values())
+
+    def spec(self, name: str) -> TenantSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(f"unknown tenant {name!r}") from None
+
+    def priority(self, name: str) -> int:
+        return self.spec(name).priority
+
+    def parks(self, name: str) -> bool:
+        """True when this tenant's records park under backlog pressure."""
+        if self.protected_priority is None:
+            return False
+        return self.spec(name).priority < self.protected_priority
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._specs))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def __iter__(self):
+        return iter(sorted(self._specs.values(), key=lambda s: s.name))
+
+    def __len__(self) -> int:
+        return len(self._specs)

@@ -16,6 +16,7 @@ from dataclasses import asdict, dataclass, fields
 from repro.core.broker import BrokerConfig
 from repro.core.grouping import GroupPlan, plan_groups
 from repro.runtime.controller import ElasticityConfig
+from repro.tenancy import TenantRegistry, TenantSpec
 
 _BACKPRESSURE = ("block", "drop_oldest", "sample")
 _COMPRESS = ("none", "zstd", "int8", "int8+zstd")
@@ -86,6 +87,23 @@ class WorkflowConfig:
     # ``elasticity.enabled=True`` makes the Session own a TelemetryBus, a
     # FailureDetector, and an ElasticController for the engine's lifetime.
     elasticity: ElasticityConfig = ElasticityConfig()
+    # -- multi-tenant QoS (repro.tenancy) ---------------------------------
+    # Declaring tenants threads tenant identity through the whole pipeline:
+    # tenant-tagged records, priority admission with parking/eviction in
+    # the broker (at-most-once modes), per-tenant TelemetrySnapshot
+    # rollups, and — with ``elasticity.slo_debt`` — debt-weighted scaling.
+    # Entries are TenantSpec objects or plain dicts (JSON-friendly); a
+    # "default" spec is always present.  () keeps the single-tenant
+    # behavior byte-identical.
+    tenants: tuple = ()
+    # QoS admission tuning (active only with a tenant registry): parking of
+    # best-effort traffic starts when a shard's queued records cross
+    # qos_high_water × capacity, re-admission at qos_low_water × capacity;
+    # qos_park_capacity bounds each sender's park (None: queue_capacity),
+    # overflow evicts oldest-parked into the loss ledger
+    qos_high_water: float = 0.75
+    qos_low_water: float = 0.25
+    qos_park_capacity: int | None = None
     # -- time source -------------------------------------------------------
     # ``clock="virtual"`` runs the whole Session — broker senders, engine
     # driver/executors, telemetry, controller, failure detector — on
@@ -162,6 +180,17 @@ class WorkflowConfig:
         if self.shuffle_partitions is not None and self.shuffle_partitions < 1:
             raise ValueError(f"shuffle_partitions must be >= 1 (or None), "
                              f"got {self.shuffle_partitions}")
+        if not (0.0 < self.qos_high_water <= 1.0) \
+                or not (0.0 <= self.qos_low_water <= self.qos_high_water):
+            raise ValueError("need 0 < qos_high_water <= 1 and "
+                             "0 <= qos_low_water <= qos_high_water")
+        if self.qos_park_capacity is not None and self.qos_park_capacity < 1:
+            raise ValueError("qos_park_capacity must be >= 1 (or None)")
+        reg = self.tenant_registry()       # raises on bad/duplicate specs
+        if self.elasticity.slo_debt and reg is None:
+            raise ValueError("elasticity.slo_debt requires "
+                             "WorkflowConfig.tenants (the debt policy "
+                             "weighs per-tenant SLO targets)")
         self.elasticity.validate()
         return self
 
@@ -187,7 +216,19 @@ class WorkflowConfig:
                             delta_encode=self.delta_encode,
                             delivery=self.delivery,
                             wal_capacity_bytes=self.wal_capacity_bytes,
-                            n_shards=self.broker_shards)
+                            n_shards=self.broker_shards,
+                            high_water_frac=self.qos_high_water,
+                            low_water_frac=self.qos_low_water,
+                            park_capacity=self.qos_park_capacity)
+
+    def tenant_registry(self) -> TenantRegistry | None:
+        """The validated TenantRegistry, or None without declared tenants
+        (single-tenant deployments never pay the QoS plane)."""
+        if not self.tenants:
+            return None
+        specs = [t if isinstance(t, TenantSpec) else TenantSpec(**t)
+                 for t in self.tenants]
+        return TenantRegistry(specs)
 
     @property
     def endpoint_count(self) -> int:
@@ -210,6 +251,10 @@ class WorkflowConfig:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown WorkflowConfig keys: {sorted(unknown)}")
+        if d.get("tenants"):
+            d = dict(d, tenants=tuple(
+                t if isinstance(t, TenantSpec) else TenantSpec(**t)
+                for t in d["tenants"]))
         if isinstance(d.get("elasticity"), dict):
             el = dict(d["elasticity"])
             el_known = {f.name for f in fields(ElasticityConfig)}

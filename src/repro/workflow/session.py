@@ -39,6 +39,7 @@ from repro.streaming.endpoint import make_endpoint, make_endpoints
 from repro.streaming.engine import StreamEngine
 from repro.streaming.operators import (ExecutionPlan, OperatorPipeline,
                                        lower_dag)
+from repro.tenancy import merge_counts
 from repro.workflow.config import WorkflowConfig
 from repro.workflow.pipeline import Pipeline
 
@@ -95,13 +96,14 @@ class FieldHandle:
 
     def __init__(self, broker: Broker, name: str, shape=(),
                  dtype: str = "float32", rank: int = 0, *,
-                 coerce_dtype: bool = True):
+                 coerce_dtype: bool = True, tenant: str = "default"):
         self.broker = broker
         self.name = name
         self.shape = tuple(shape)
         self.dtype = dtype
         self.coerce_dtype = coerce_dtype
         self.rank = rank                    # default rank for write()
+        self.tenant = tenant                # QoS identity stamped on writes
         for g in range(broker.plan.n_groups):
             broker.register(FieldSchema(field_name=name, shape=self.shape,
                                         dtype=dtype, group_id=g))
@@ -120,7 +122,8 @@ class FieldHandle:
         """Enqueue one snapshot; returns False if backpressure dropped it.
         ``t``: explicit event timestamp (default: session clock's now)."""
         r = self.rank if rank is None else rank
-        return self.broker.write(self.name, r, step, self._coerce(arr), t=t)
+        return self.broker.write(self.name, r, step, self._coerce(arr), t=t,
+                                 tenant=self.tenant)
 
     def write_batch(self, steps, arrs, *, ranks=None,
                     t: float | None = None) -> int:
@@ -145,7 +148,7 @@ class FieldHandle:
                 f"write_batch needs aligned sequences: {len(steps)} steps, "
                 f"{len(ranks)} ranks, {n} payloads")
         return self.broker.write_batch(self.name, list(ranks), list(steps),
-                                       arrs, t=t)
+                                       arrs, t=t, tenant=self.tenant)
 
     def __repr__(self):
         return (f"FieldHandle({self.name!r}, shape={self.shape}, "
@@ -200,6 +203,11 @@ class Session:
         self._ledger = ledger
         self._wal = wal
         self._stats_base: dict[str, int] = {}
+        self._tenants_base: dict[str, dict[str, int]] = {}
+        # multi-tenant QoS: one registry for the whole wiring (broker
+        # admission, telemetry rollups, debt-weighted scaling); None keeps
+        # every layer on its single-tenant fast path
+        self.tenants = self.config.tenant_registry()
         self.recovery: RecoverySupervisor | None = None
         if endpoints is not None:
             self.endpoints = list(endpoints)
@@ -215,7 +223,8 @@ class Session:
             self._owns_endpoints = True
         self.broker = Broker(self.plan, self.endpoints,
                              self.config.broker_config(), clock=self.clock,
-                             wal=self._wal, paused=_paused)
+                             wal=self._wal, paused=_paused,
+                             tenants=self.tenants)
         self.engine: StreamEngine | None = None
         self.dag: AnalysisDAG | None = None
         self.exec_plan: ExecutionPlan | None = None   # compiled operator plan
@@ -334,7 +343,8 @@ class Session:
             return
         self.telemetry = TelemetryBus(broker=self.broker,
                                       endpoints=self._handles(),
-                                      engine=self.engine, clock=self.clock)
+                                      engine=self.engine, clock=self.clock,
+                                      tenants=self.tenants)
         self.detector = FailureDetector(
             timeout_s=el.heartbeat_timeout_s,
             straggler_factor=el.straggler_factor, clock=self.clock)
@@ -359,16 +369,22 @@ class Session:
         self.controller = ElasticController(
             self.telemetry, el, engine=self.engine, broker=self.broker,
             detector=self.detector, clock=self.clock,
-            recovery=self.recovery, provisioner=self.provisioner)
+            recovery=self.recovery, provisioner=self.provisioner,
+            tenants=self.tenants)
         self.controller.start()
 
     # ---- producer-side API ----------------------------------------------
-    def open_field(self, name: str, shape=(), dtype: str = "float32") -> FieldHandle:
-        """Register a field and return its (cached) typed handle."""
-        key = (name, tuple(shape), dtype)
+    def open_field(self, name: str, shape=(), dtype: str = "float32",
+                   tenant: str = "default") -> FieldHandle:
+        """Register a field and return its (cached) typed handle.
+
+        ``tenant`` stamps every write from the handle with that QoS
+        identity (must be declared in ``config.tenants`` when a registry
+        is active)."""
+        key = (name, tuple(shape), dtype, tenant)
         if key not in self._fields:
             self._fields[key] = FieldHandle(self.broker, name, shape=shape,
-                                            dtype=dtype)
+                                            dtype=dtype, tenant=tenant)
         return self._fields[key]
 
     # ---- observability ---------------------------------------------------
@@ -381,6 +397,8 @@ class Session:
     def _merge_base(self, st: BrokerStats) -> BrokerStats:
         for f, v in self._stats_base.items():
             setattr(st, f, getattr(st, f) + v)
+        if self._tenants_base:
+            merge_counts(st.tenants, self._tenants_base)
         return st
 
     def _absorb_stats(self, stats: BrokerStats) -> None:
@@ -388,12 +406,15 @@ class Session:
 
         In exactly-once mode ``written`` is excluded: it derives from the
         WAL segments the successor broker shares, so the live broker's
-        count already covers the dead incarnation's writes."""
+        count already covers the dead incarnation's writes.  Per-tenant
+        counters fold additively — ``admitted`` is counted once at WAL
+        append and never on replay, so the sum stays exact."""
         for f in _COUNTER_FIELDS:
             if f == "written" and self._wal is not None:
                 continue
             self._stats_base[f] = self._stats_base.get(f, 0) \
                 + getattr(stats, f)
+        merge_counts(self._tenants_base, stats.tenants)
 
     def results(self, stage: str | None = None) -> list:
         """Engine results; with ``stage``, a legacy DAG stage's sink or an
@@ -461,6 +482,7 @@ class Session:
             "frontier": self.exec_plan.frontier_snapshot(),
             "engine": self.engine.state_snapshot(),
             "stats": {f: getattr(st, f) for f in _COUNTER_FIELDS},
+            "tenant_stats": {k: dict(v) for k, v in st.tenants.items()},
             "wal": self.broker.wal_points(),
             "ledger": self._ledger.snapshot(),
             "endpoints": [h.audit_snapshot() for h in self._handles()],
@@ -559,6 +581,9 @@ class Session:
                 for h, snap in zip(sess._handles(), state["endpoints"]):
                     h.restore_audit(snap)
                 sess._stats_base = dict(state["stats"])
+                sess._tenants_base = {
+                    k: dict(v)
+                    for k, v in state.get("tenant_stats", {}).items()}
             # ``written`` derives from the shared WAL segments (total ever
             # appended, across every incarnation), so the new broker already
             # reports the pre-crash writes — carrying the checkpoint's count
